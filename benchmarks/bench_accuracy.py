@@ -1,0 +1,139 @@
+"""Paper §1/§2.1.3/§2.1.5 — accuracy co-design study (the paper's central
+claims, run end-to-end on the synthetic shape-classification task):
+
+  A. patch-based linear projection backend ≈ CNN baseline;
+  B. 25 % salient-patch partial observation ≈ full-frame observation;
+  C. 6-bit in-pixel quantization ≈ float frontend (bit sweep);
+  D. §2.1.5 anti-aliasing: 0.5/0.25-Nyquist optics do not hurt accuracy.
+
+Each arm trains the same small backbone for a fixed budget on CPU; numbers
+are accuracy on held-out procedurally-generated batches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.optim as O
+from repro.core.frontend import FrontendConfig
+from repro.core.projection import PatchSpec
+from repro.core.pwm import QuantSpec
+from repro.data.pipeline import SceneStream
+from repro.models.cnn import cnn_loss, init_cnn
+from repro.models.vit import ViTConfig, init_vit, vit_loss
+
+STEPS = 220
+BATCH = 32
+EVAL_BATCHES = 6
+
+
+def _train_vit(cfg: ViTConfig, seed=0, steps=STEPS) -> float:
+    params = init_vit(jax.random.PRNGKey(seed), cfg)
+    opt = O.AdamWConfig(lr=2e-3, weight_decay=0.01)
+    opt_state = O.init_opt_state(params, opt)
+    stream = SceneStream(image=cfg.frontend.image_h)
+
+    @jax.jit
+    def step(params, opt_state, rgb, labels):
+        (loss, acc), g = jax.value_and_grad(vit_loss, has_aux=True)(
+            params, rgb, labels, cfg
+        )
+        params, opt_state, _ = O.adamw_update(
+            g, opt_state, params, opt, jnp.float32(opt.lr)
+        )
+        return params, opt_state, loss
+
+    for i in range(steps):
+        rgb, labels = stream.batch(i, BATCH)
+        params, opt_state, _ = step(params, opt_state, jnp.asarray(rgb), jnp.asarray(labels))
+
+    accs = []
+    for j in range(EVAL_BATCHES):
+        rgb, labels = stream.batch(100_000 + j, BATCH)
+        _, acc = vit_loss(params, jnp.asarray(rgb), jnp.asarray(labels), cfg)
+        accs.append(float(acc))
+    return sum(accs) / len(accs)
+
+
+def _train_cnn(seed=0, steps=STEPS) -> float:
+    params = init_cnn(jax.random.PRNGKey(seed))
+    opt = O.AdamWConfig(lr=2e-3, weight_decay=0.01)
+    opt_state = O.init_opt_state(params, opt)
+    stream = SceneStream(image=64)
+
+    @jax.jit
+    def step(params, opt_state, rgb, labels):
+        (loss, acc), g = jax.value_and_grad(cnn_loss, has_aux=True)(params, rgb, labels)
+        params, opt_state, _ = O.adamw_update(
+            g, opt_state, params, opt, jnp.float32(opt.lr)
+        )
+        return params, opt_state, loss
+
+    for i in range(steps):
+        rgb, labels = stream.batch(i, BATCH)
+        params, opt_state, _ = step(params, opt_state, jnp.asarray(rgb), jnp.asarray(labels))
+    accs = []
+    for j in range(EVAL_BATCHES):
+        rgb, labels = stream.batch(100_000 + j, BATCH)
+        _, acc = cnn_loss(params, jnp.asarray(rgb), jnp.asarray(labels))
+        accs.append(float(acc))
+    return sum(accs) / len(accs)
+
+
+def _fcfg(**kw) -> FrontendConfig:
+    base = dict(
+        image_h=64, image_w=64,
+        patch=PatchSpec(patch_h=16, patch_w=16, n_vectors=32),
+        active_fraction=0.25, aa_cutoff=0.5,
+    )
+    base.update(kw)
+    return FrontendConfig(**base)
+
+
+def run() -> list[dict]:
+    rows = []
+
+    def add(name, t0, acc, note=""):
+        rows.append({
+            "name": name, "us_per_call": (time.perf_counter_ns() - t0) / 1e3,
+            "derived": f"acc={acc:.3f}{note}",
+        })
+        return acc
+
+    t0 = time.perf_counter_ns()
+    acc_ip2 = add("acc_ip2_25pct_6bit", t0, _train_vit(ViTConfig(frontend=_fcfg())))
+    t0 = time.perf_counter_ns()
+    acc_cnn = add("acc_cnn_baseline_fullframe", t0, _train_cnn(), " (paper: patch≈CNN)")
+    t0 = time.perf_counter_ns()
+    acc_full = add(
+        "acc_ip2_full_observation", t0,
+        _train_vit(ViTConfig(frontend=_fcfg(active_fraction=1.0))),
+        " (paper: 25%≈full)",
+    )
+    t0 = time.perf_counter_ns()
+    acc_float = add(
+        "acc_float_frontend_sim", t0,
+        _train_vit(ViTConfig(frontend=_fcfg(analog=False, bayer=False))),
+    )
+    # bit sweep (C)
+    for bits in (4, 6, 8):
+        t0 = time.perf_counter_ns()
+        q = QuantSpec(pwm_bits=bits, weight_bits=bits)
+        add(f"acc_ip2_{bits}bit", t0, _train_vit(ViTConfig(
+            frontend=_fcfg(patch=PatchSpec(
+                patch_h=16, patch_w=16, n_vectors=32, quant=q))
+        )))
+    # anti-aliasing (D) — §2.1.5
+    for cutoff, name in ((None, "none"), (0.5, "0p5nyq"), (0.25, "0p25nyq")):
+        t0 = time.perf_counter_ns()
+        add(f"acc_ip2_aa_{name}", t0,
+            _train_vit(ViTConfig(frontend=_fcfg(aa_cutoff=cutoff))))
+    # Fig. 4 QTH pow-2 attention backend
+    t0 = time.perf_counter_ns()
+    add("acc_ip2_qth_pow2_attention", t0,
+        _train_vit(ViTConfig(frontend=_fcfg(), qth=True)))
+    return rows

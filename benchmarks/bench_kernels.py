@@ -1,0 +1,50 @@
+"""Kernel micro-bench: ip2_project Pallas kernel (interpret mode on CPU —
+wall time is NOT TPU-representative; the derived column reports the
+arithmetic the kernel performs per call, which feeds the §Roofline VMEM
+working-set check) + the jnp reference for the same op."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import projection as proj
+from repro.kernels import ops
+
+
+def _time(f, *args, n=3):
+    f(*args).block_until_ready()
+    t0 = time.perf_counter_ns()
+    for _ in range(n):
+        out = f(*args)
+    out.block_until_ready()
+    return (time.perf_counter_ns() - t0) / 1e3 / n
+
+
+def run() -> list[dict]:
+    rows = []
+    for patch, n_vec, n_patches in [(32, 400, 64), (8, 192, 256)]:
+        n2 = patch * patch
+        spec = proj.PatchSpec(patch_h=patch, patch_w=patch, n_vectors=n_vec)
+        patches = jax.random.uniform(jax.random.PRNGKey(0), (n_patches, n2))
+        w = jax.random.normal(jax.random.PRNGKey(1), (n_vec, n2))
+        flops = 2 * n_patches * n2 * n_vec
+        vmem_kib = (128 * 256 + 256 * 128 + 128 * 128 * 2) * 4 / 1024
+
+        us_k = _time(
+            lambda p, ww: ops.ip2_project(p, ww, spec, interpret=True), patches, w
+        )
+        us_r = _time(
+            jax.jit(lambda p, ww: proj.analog_project_patches(p, ww, spec)), patches, w
+        )
+        rows.append({
+            "name": f"ip2_project_pallas_{patch}x{patch}_{n_vec}v_{n_patches}p",
+            "us_per_call": us_k,
+            "derived": f"{flops / 1e6:.0f}MFLOP vmem~{vmem_kib:.0f}KiB/tile (interpret)",
+        })
+        rows.append({
+            "name": f"ip2_project_jnpref_{patch}x{patch}_{n_vec}v_{n_patches}p",
+            "us_per_call": us_r,
+            "derived": f"{flops / 1e6:.0f}MFLOP",
+        })
+    return rows

@@ -1,0 +1,40 @@
+"""Paper Fig. 3 — processing rate vs weight lines C ∈ {1,2,4,8} for
+720p/1080p sensors at 400/768 vectors per 32×32 patch, + the 8×8/192-vector
+operating point. Reproduces the ~90 Hz 1080p C=2 claim and >30 Hz for 8×8,
+and the 10x/30x data-dimensionality reduction (§1, §2.1.4)."""
+
+import time
+
+from repro.core.power import SensorConfig, data_reduction
+from repro.core.throughput import figure3_sweep, frame_rate, rate_point
+
+
+def run() -> list[dict]:
+    t0 = time.perf_counter_ns()
+    sweep = figure3_sweep()
+    us = (time.perf_counter_ns() - t0) / 1e3
+    rows = []
+    for p in sweep:
+        rows.append({
+            "name": f"fig3_{p.fmt}_{p.n_vectors}vec_C{p.c_lines}",
+            "us_per_call": us / len(sweep),
+            "derived": f"{p.frame_hz:.1f}Hz {p.mpix_per_s:.0f}Mpix/s",
+        })
+    op = rate_point("1080p", 2, 32, 400)
+    rows.append({
+        "name": "fig3_operating_point_1080p_C2_400vec",
+        "us_per_call": us, "derived": f"{op.frame_hz:.1f}Hz (paper ~90Hz)",
+    })
+    hz8 = frame_rate(8, 192, 2)
+    rows.append({
+        "name": "fig3_8x8_192vec", "us_per_call": us,
+        "derived": f"{hz8:.0f}Hz (paper >30Hz)",
+    })
+    red = data_reduction(SensorConfig())
+    red_rgb = data_reduction(SensorConfig(), vs_rgb=True)
+    rows.append({"name": "data_reduction_vs_bayer", "us_per_call": us,
+                 "derived": f"{red:.1f}x (paper 10x)"})
+    rows.append({"name": "data_reduction_vs_rgb", "us_per_call": us,
+                 "derived": f"{red_rgb:.1f}x (paper 30x)"})
+    assert 85 <= op.frame_hz <= 95 and hz8 > 30 and red >= 10 and red_rgb >= 30
+    return rows

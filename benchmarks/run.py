@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §6).
+
+Prints ``name,us_per_call,derived`` CSV. ``--quick`` skips the training
+benches (bench_accuracy trains 10 small models and dominates wall time).
+"""
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import bench_kernels, bench_leakage, bench_power, bench_throughput
+
+    modules = [
+        ("leakage(§2.1.2)", bench_leakage),
+        ("power+area(Table1,§2.1.3)", bench_power),
+        ("throughput(Fig.3,§2.1.4)", bench_throughput),
+        ("kernels", bench_kernels),
+    ]
+    if not args.quick:
+        from benchmarks import bench_accuracy
+
+        modules.append(("accuracy(§1,§2.1.3,§2.1.5,Fig.4)", bench_accuracy))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, mod in modules:
+        try:
+            for row in mod.run():
+                print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+        except Exception as e:
+            failures += 1
+            print(f"{label},FAIL,{type(e).__name__}: {e}", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""IP2 core — the paper's contribution: in-pixel analog compute simulation.
+
+Layers: pwm (PWM/DAC quantizers) -> switched_cap (charge sharing, leakage,
+OpAmp) -> projection (patch MVM) -> adc (edge readout) composed by
+frontend.IP2Frontend; saliency gates patches; bayer models the mosaic +
+anti-alias optics; power/throughput reproduce Table 1 and Fig. 3;
+qth_attention is the Fig. 4 extension.
+"""
+
+from repro.core.adc import ADCSpec, adc_quantize, digital_readout
+from repro.core.analog_nl import AnalogNLSpec, analog_nonlinearity
+from repro.core.bayer import antialias, bayer_channel_map, mosaic, strike_columns
+from repro.core.frontend import (
+    FrontendConfig,
+    apply_frontend,
+    compact_features,
+    init_frontend_params,
+)
+from repro.core.power import AreaBudget, EnergyConstants, SensorConfig, data_reduction, power_report
+from repro.core.projection import (
+    PatchSpec,
+    analog_project_frame,
+    analog_project_patches,
+    extract_patches,
+)
+from repro.core.pwm import QuantSpec, pwm_quantize, quantize_weights, weight_codes
+from repro.core.qth_attention import QTHSpec, pow2_quantize, qth_attention
+from repro.core.saliency import apply_patch_mask, patch_energy, topk_patch_mask
+from repro.core.switched_cap import (
+    SummerSpec,
+    TAU_LEAK_65NM_S,
+    capacitor_divider,
+    charge_share_sum,
+    passive_droop_trace,
+)
+from repro.core.throughput import figure3_sweep, frame_rate, rate_point
+
+__all__ = [
+    "ADCSpec", "adc_quantize", "digital_readout",
+    "AnalogNLSpec", "analog_nonlinearity",
+    "antialias", "bayer_channel_map", "mosaic", "strike_columns",
+    "FrontendConfig", "apply_frontend", "compact_features", "init_frontend_params",
+    "AreaBudget", "EnergyConstants", "SensorConfig", "data_reduction", "power_report",
+    "PatchSpec", "analog_project_frame", "analog_project_patches", "extract_patches",
+    "QuantSpec", "pwm_quantize", "quantize_weights", "weight_codes",
+    "QTHSpec", "pow2_quantize", "qth_attention",
+    "apply_patch_mask", "patch_energy", "topk_patch_mask",
+    "SummerSpec", "TAU_LEAK_65NM_S", "capacitor_divider", "charge_share_sum",
+    "passive_droop_trace",
+    "figure3_sweep", "frame_rate", "rate_point",
+]

@@ -1,0 +1,49 @@
+"""Edge ADC model (paper §2.1).
+
+Only the outputs of the selected salient patches (<25 %) are converted; the
+ADC is at the array edge, one (or a few) per column group. The digital side
+subtracts ``V_R - b`` to recover the signed projection plus the learned
+bias b:
+
+    digital_v = ADC(Out_v) - (V_R - b) = Σ(W·P)/N² + b   (up to quantization)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ADCSpec:
+    bits: int = 8
+    v_min: float = -1.0
+    v_max: float = 1.0
+    ste: bool = True
+
+    @property
+    def levels(self) -> int:
+        return 2 ** self.bits
+
+
+def adc_quantize(v: jnp.ndarray, spec: ADCSpec = ADCSpec()) -> jnp.ndarray:
+    """Uniform mid-rise ADC over [v_min, v_max] with STE gradients."""
+    span = spec.v_max - spec.v_min
+    lsb = span / (spec.levels - 1)
+    clipped = jnp.clip(v, spec.v_min, spec.v_max)
+    q = jnp.round((clipped - spec.v_min) / lsb) * lsb + spec.v_min
+    if spec.ste:
+        return clipped + jax.lax.stop_gradient(q - clipped)
+    return q
+
+
+def digital_readout(
+    out_v: jnp.ndarray,
+    v_ref: float,
+    bias: jnp.ndarray | float = 0.0,
+    spec: ADCSpec = ADCSpec(),
+) -> jnp.ndarray:
+    """ADC conversion followed by the digital ``V_R - b`` subtraction."""
+    return adc_quantize(out_v, spec) - (v_ref - bias)

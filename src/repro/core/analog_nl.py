@@ -1,0 +1,33 @@
+"""2-transistor current-mode nonlinearity (paper §2.1 'ReLU activation').
+
+The circuit: a voltage-controlled current source (2T) drives the
+drain-source voltage of a FET biased in its linear region. Depending on the
+bias point the transfer curve is a rectifier (ReLU) or an S-curve (sigmoid).
+
+We model the transfer as an ideal nonlinearity with a supply-rail
+saturation: the output cannot exceed the rail swing ``v_sat``. The
+saturation is the physically-honest part — an analog ReLU clips.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogNLSpec:
+    kind: str = "relu"     # "relu" | "sigmoid" | "none"
+    v_sat: float = 1.0     # output rail (normalized full scale)
+    sigmoid_gain: float = 4.0  # transconductance slope at the bias point
+
+
+def analog_nonlinearity(v: jnp.ndarray, spec: AnalogNLSpec = AnalogNLSpec()) -> jnp.ndarray:
+    if spec.kind == "none":
+        return jnp.clip(v, -spec.v_sat, spec.v_sat)
+    if spec.kind == "relu":
+        return jnp.clip(v, 0.0, spec.v_sat)
+    if spec.kind == "sigmoid":
+        return spec.v_sat / (1.0 + jnp.exp(-spec.sigmoid_gain * v))
+    raise ValueError(f"unknown analog nonlinearity {spec.kind!r}")

@@ -1,0 +1,92 @@
+"""Bayer mosaic + anti-aliasing model (paper §2.1.5).
+
+The HW sensor produces a raw mosaiced Bayer image (RGGB); no demosaicing is
+performed in hardware. The trained RGB projection matrix A is transformed
+to A' by *striking out the columns* of A that have no corresponding element
+in the Bayer vector — i.e. each pixel site keeps only its own color's
+weight column.
+
+Anti-aliasing: micro-lenses give near-unity fill factor; the combined
+optics are modelled as Gaussian low-pass filters with -3 dB cutoff at 0.5
+or 0.25 of Nyquist. The paper reports training accuracy is virtually
+unaffected even at 0.25 Nyquist (slight defocus is a good AA filter).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+import jax.numpy as jnp
+
+# RGGB unit cell: channel index at (row%2, col%2)
+_BAYER_RGGB = ((0, 1), (1, 2))  # R G / G B
+
+
+def bayer_channel_map(h: int, w: int) -> jnp.ndarray:
+    """(H, W) int32 array of the color-channel index of each pixel site."""
+    rows = jnp.arange(h)[:, None] % 2
+    cols = jnp.arange(w)[None, :] % 2
+    cell = jnp.asarray(_BAYER_RGGB, dtype=jnp.int32)
+    return cell[rows, cols]
+
+
+def mosaic(rgb: jnp.ndarray) -> jnp.ndarray:
+    """(..., H, W, 3) RGB -> (..., H, W) raw Bayer frame."""
+    h, w = rgb.shape[-3], rgb.shape[-2]
+    onehot = jax.nn.one_hot(bayer_channel_map(h, w), 3, dtype=rgb.dtype)
+    return jnp.einsum("...hwc,hwc->...hw", rgb, onehot)
+
+
+def strike_columns(a_rgb: jnp.ndarray, patch_h: int, patch_w: int) -> jnp.ndarray:
+    """Trained matrix A (M, N²·3) -> A' (M, N²) for the Bayer sensor.
+
+    For pixel site i with Bayer color c(i), keep only column (i, c(i)) of
+    the vectorized-RGB matrix; all other color columns have no corresponding
+    hardware element and are struck out (paper §2.1.5).
+    """
+    m, n2x3 = a_rgb.shape
+    n2 = patch_h * patch_w
+    if n2x3 != n2 * 3:
+        raise ValueError(f"A has {n2x3} cols, expected {n2 * 3}")
+    ch = bayer_channel_map(patch_h, patch_w).reshape(-1)  # (N²,)
+    a = a_rgb.reshape(m, n2, 3)
+    return jnp.take_along_axis(a, ch[None, :, None], axis=-1)[..., 0]
+
+
+def gaussian_kernel_1d(cutoff_nyquist: float, radius: int | None = None) -> jnp.ndarray:
+    """1-D Gaussian whose magnitude response is -3 dB at cutoff·Nyquist.
+
+    |H(f)| = exp(-2 (pi sigma f)^2); solving |H(fc)|² = 1/2 at
+    fc = cutoff·0.5 cycles/px gives sigma = sqrt(ln 2)/(2 pi fc) / sqrt(2).
+    """
+    fc = cutoff_nyquist * 0.5  # cycles / pixel
+    sigma = math.sqrt(math.log(2.0) / 2.0) / (2.0 * math.pi * fc)
+    if radius is None:
+        radius = max(1, int(math.ceil(3.0 * sigma)))
+    x = jnp.arange(-radius, radius + 1, dtype=jnp.float32)
+    k = jnp.exp(-0.5 * (x / sigma) ** 2)
+    return k / jnp.sum(k)
+
+
+def antialias(frame: jnp.ndarray, cutoff_nyquist: float = 0.5) -> jnp.ndarray:
+    """Separable Gaussian AA filter on (..., H, W) (reflect padding)."""
+    k = gaussian_kernel_1d(cutoff_nyquist)
+    r = (k.shape[0] - 1) // 2
+
+    def conv_last(x):
+        xp = jnp.concatenate(
+            [x[..., 1 : r + 1][..., ::-1], x, x[..., -r - 1 : -1][..., ::-1]], axis=-1
+        )
+        windows = jnp.stack([xp[..., i : i + x.shape[-1]] for i in range(2 * r + 1)], axis=-1)
+        return jnp.einsum("...k,k->...", windows, k)
+
+    out = conv_last(frame)                     # along W
+    out = conv_last(out.swapaxes(-1, -2)).swapaxes(-1, -2)  # along H
+    return out
+
+
+def downsample2(frame: jnp.ndarray) -> jnp.ndarray:
+    """½-resolution sensor option (paper: 1920x1080 RGB -> 960x540 Bayer)."""
+    return frame[..., ::2, ::2]

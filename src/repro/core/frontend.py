@@ -1,0 +1,128 @@
+"""IP2Frontend — the full sensor-to-features path (paper Fig. 1/2).
+
+scene RGB -> lenslet/optics AA filter -> Bayer mosaic -> CDS sample
+          -> salient patch selection (<=25 %) -> analog patch projection
+          (PWM x switched-cap, M vectors/patch) -> edge ADC -> digital
+          features + V_R - b subtraction.
+
+Two selectable paths compute the projection:
+
+* ``analog=True``  — the paper's circuit: Bayer single-channel patches,
+  A' = strike_columns(A), PWM/DAC quantization, charge-share /N², droop,
+  optional 2T nonlinearity, edge ADC. This is the hardware digital twin.
+* ``analog=False`` — the float "algorithm simulation" the paper trains
+  against: full-RGB patches through the unquantized matrix A.
+
+Both paths are differentiable (STE through the quantizers), enabling the
+accuracy/bits/active-fraction co-design studies of §1 and §2.1.3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adc as adc_mod
+from repro.core import bayer as bayer_mod
+from repro.core import projection as proj_mod
+from repro.core import saliency as sal_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    image_h: int = 256
+    image_w: int = 256
+    patch: proj_mod.PatchSpec = proj_mod.PatchSpec(patch_h=32, patch_w=32, n_vectors=400)
+    analog: bool = True
+    bayer: bool = True                 # raw mosaic input (HW); False = RGB (sim)
+    aa_cutoff: float | None = 0.5      # Gaussian AA at 0.5/0.25 Nyquist; None = off
+    active_fraction: float = 0.25
+    adc: adc_mod.ADCSpec = adc_mod.ADCSpec()
+
+    @property
+    def grid(self) -> tuple[int, int]:
+        return (self.image_h // self.patch.patch_h, self.image_w // self.patch.patch_w)
+
+    @property
+    def n_patches(self) -> int:
+        gh, gw = self.grid
+        return gh * gw
+
+    @property
+    def n_active(self) -> int:
+        return max(1, int(round(self.n_patches * self.active_fraction)))
+
+
+def init_frontend_params(key: jax.Array, cfg: FrontendConfig) -> dict:
+    """A is always trained in vectorized-RGB space (M, N²·3); the analog path
+    strikes columns to A' at apply time (paper §2.1.5).
+
+    Full-scale matching (co-design): the charge-share sum divides by N², so
+    the weight DAC full-scale current must be ~√N² larger than a classic
+    1/√fan_in init or the OpAmp output sits below one ADC LSB and the edge
+    ADC quantizes every feature to zero. σ_W = 0.4·√N² puts Out_v's std at
+    ≈0.25 of the ±1 V rail (pixels ~U[0,1], A' keeps N² of the 3N² cols).
+    """
+    n2 = cfg.patch.pixels_per_patch
+    m = cfg.patch.n_vectors
+    scale = 0.4 * jnp.sqrt(jnp.asarray(n2, jnp.float32))
+    a = jax.random.normal(key, (m, n2 * 3), jnp.float32) * scale
+    return {"a_rgb": a, "bias": jnp.zeros((m,), jnp.float32)}
+
+
+ProjectFn = Callable[[jnp.ndarray, jnp.ndarray, proj_mod.PatchSpec], jnp.ndarray]
+
+
+def apply_frontend(
+    params: dict,
+    rgb: jnp.ndarray,
+    cfg: FrontendConfig,
+    mask: jnp.ndarray | None = None,
+    project_fn: ProjectFn | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """rgb (..., H, W, 3) in [0,1] -> (features (..., P, M), mask (..., P)).
+
+    ``mask`` is the backend's saccadic patch selection for this frame; if
+    None, a patch-energy top-k stand-in is used. ``project_fn`` lets the
+    Pallas kernel replace the reference einsum (same signature/semantics).
+    """
+    p = cfg.patch
+    if cfg.aa_cutoff is not None:
+        rgb = jnp.stack(
+            [bayer_mod.antialias(rgb[..., c], cfg.aa_cutoff) for c in range(3)], axis=-1
+        )
+
+    if cfg.analog or cfg.bayer:
+        frame = bayer_mod.mosaic(rgb)                                # (..., H, W)
+        patches = proj_mod.extract_patches(frame, p.patch_h, p.patch_w)
+        weights = bayer_mod.strike_columns(params["a_rgb"], p.patch_h, p.patch_w)
+    else:
+        # float simulation path: vectorized RGB patches
+        per_c = [
+            proj_mod.extract_patches(rgb[..., c], p.patch_h, p.patch_w) for c in range(3)
+        ]
+        patches = jnp.concatenate(per_c, axis=-1)                    # (..., P, N²·3)
+        weights = params["a_rgb"]
+
+    if mask is None:
+        mask = sal_mod.topk_patch_mask(sal_mod.patch_energy(patches), cfg.active_fraction)
+
+    if cfg.analog:
+        fn = project_fn or proj_mod.analog_project_patches
+        out_v = fn(patches, weights, p)                              # (..., P, M)
+        feats = adc_mod.digital_readout(out_v, p.summer.v_ref, params["bias"], cfg.adc)
+    else:
+        n_in = patches.shape[-1]
+        feats = jnp.einsum("...pi,vi->...pv", patches, weights) / n_in + params["bias"]
+
+    return sal_mod.apply_patch_mask(feats, mask), mask
+
+
+def compact_features(
+    feats: jnp.ndarray, mask: jnp.ndarray, cfg: FrontendConfig
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Bandwidth-true output: only the ADC-converted (active) patches."""
+    return sal_mod.compact_active(feats, mask, cfg.n_active)

@@ -1,0 +1,136 @@
+"""Area (Table 1) and power (§2.1.3) models of the IP2 front-end.
+
+Area — Table 1 is reproduced exactly (65 nm, 8 µm pixel, 30 fF caps, one
+OpAmp per patch, wiring estimate): 485 µm² -> 22.0 µm pitch.
+
+Power — component energy model with 65 nm-plausible constants, calibrated
+to the paper's claims:
+
+  * < 30 mW per Mpix at the imager front-end, ADC+DAC included;
+  * < 60 mW for a 2 Mpix sensor @ 30 Hz capture+processing;
+  * "the majority of the power is for the ADC conversion";
+  * assumes 25 % of the patches generate an output every frame.
+
+Event counts per second (sensor of X pixels, patch N², M vectors/patch,
+active fraction f, frame rate R):
+
+  ADC conversions  = (X/N²)·f·M·R              (only active patches convert)
+  DAC weight loads = M·N²·R                    (weights broadcast to all
+                                                patches over shared lines)
+  cap charge events= X·f·M·R                   (each active pixel, each vector)
+  PWM comparators  = X·f static during compute (inverter-threshold ramps)
+  CDS samples      = 2·X·R                     (global shutter, clamp+sample)
+  OpAmp static     = (X/N²)·f during compute window
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+# --------------------------------------------------------------------------
+# Table 1 — in-pixel circuit size per pixel, 65 nm
+# --------------------------------------------------------------------------
+
+TABLE1_ROWS = (
+    # name, count, unit size (µm²)
+    ("Photo Sensor", 1, 64.0),
+    ("Cap 30 fF", 3, 64.0),
+    ("Transistors", 41, 5.0),
+    ("Wiring", 1, 16.0),
+    ("Margin", 1, 8.0),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AreaBudget:
+    rows: tuple = TABLE1_ROWS
+
+    def totals(self) -> dict:
+        total = sum(n * s for _, n, s in self.rows)
+        out = {
+            name: {
+                "count": n,
+                "unit_um2": s,
+                "total_um2": n * s,
+                "occupancy": n * s / total,
+            }
+            for name, n, s in self.rows
+        }
+        out["Total"] = {"total_um2": total, "pitch_um": math.sqrt(total)}
+        return out
+
+
+# --------------------------------------------------------------------------
+# Power model
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EnergyConstants:
+    """Per-event energies / static currents, 65 nm-plausible defaults."""
+
+    e_adc_j: float = 4.0e-9        # per conversion: 10b column SAR + refs + readout
+    e_dac_j: float = 0.5e-9        # per weight-line DAC settle (global broadcast)
+    cap_f: float = 30e-15          # Table 1 caps
+    v_dd: float = 1.0
+    mean_signal_v: float = 0.1     # E[|w·p|] over natural images & trained weights
+    i_pwm_comparator_a: float = 20e-9   # per-pixel ramp comparator (inverter-based)
+    i_opamp_a: float = 2e-6        # per-patch OTA quiescent
+    compute_duty: float = 0.5      # fraction of frame the analog compute is live
+    e_pixel_dump_j: float = 1e-15  # deselected-patch photodiode clear
+
+
+@dataclasses.dataclass(frozen=True)
+class SensorConfig:
+    n_pixels: float = 2.0e6
+    frame_hz: float = 30.0
+    patch_h: int = 32
+    patch_w: int = 32
+    n_vectors: int = 400
+    active_fraction: float = 0.25
+
+
+def power_report(cfg: SensorConfig, k: EnergyConstants = EnergyConstants()) -> dict:
+    """Per-component power (W) + totals. Excludes the digital interface
+    (the paper's figure excludes it too)."""
+    n2 = cfg.patch_h * cfg.patch_w
+    n_patches = cfg.n_pixels / n2
+    f, m, r = cfg.active_fraction, cfg.n_vectors, cfg.frame_hz
+
+    adc_rate = n_patches * f * m * r
+    dac_rate = m * n2 * r
+    cap_rate = cfg.n_pixels * f * m * r
+    cds_rate = 2.0 * cfg.n_pixels * r
+    dump_rate = cfg.n_pixels * (1.0 - f) * r
+
+    # charging a cap to mean_signal_v from the rail via a current source
+    e_cap = k.cap_f * k.mean_signal_v * k.v_dd
+    e_cds = 0.5 * k.cap_f * k.v_dd ** 2
+
+    p = {
+        "adc": adc_rate * k.e_adc_j,
+        "weight_dac": dac_rate * k.e_dac_j,
+        "cap_charging": cap_rate * e_cap,
+        "pwm_comparators": cfg.n_pixels * f * k.i_pwm_comparator_a * k.v_dd * k.compute_duty,
+        "opamps": n_patches * f * k.i_opamp_a * k.v_dd * k.compute_duty,
+        "cds_sampling": cds_rate * e_cds,
+        "pixel_dump": dump_rate * k.e_pixel_dump_j,
+    }
+    total = sum(p.values())
+    p["total"] = total
+    p["mw_per_mpix"] = total * 1e3 / (cfg.n_pixels / 1e6)
+    p["adc_dominated"] = p["adc"] == max(
+        v for kk, v in p.items() if kk not in ("total", "mw_per_mpix", "adc_dominated")
+    )
+    return p
+
+
+def data_reduction(cfg: SensorConfig, vs_rgb: bool = False) -> float:
+    """Input samples per frame / output feature count per frame (paper: 10x,
+    30x when credited against the Bayer->RGB interpolation)."""
+    n2 = cfg.patch_h * cfg.patch_w
+    n_patches = cfg.n_pixels / n2
+    out = n_patches * cfg.active_fraction * cfg.n_vectors
+    inp = cfg.n_pixels * (3.0 if vs_rgb else 1.0)
+    return inp / out

@@ -1,0 +1,110 @@
+"""Patch-based analog linear projection (paper §2.1, §2.1.1).
+
+The array computes, for every (non-overlapping) N×N patch and every output
+vector element v = 1..M:
+
+    Out_v = V_R + Σ_{i=1..N²} (W_{i,v} · P_i) / N²
+
+M passes of the PWM/charge-share sequence produce an M-dim analog vector
+per patch ("This analog vector computation is performed M times").
+
+Programmable patch size (§2.1.1): the silicon has one OpAmp per 8×8 tile;
+larger patches (16/24/32 per axis) gang multiple 8×8 tiles onto one summing
+amplifier. We implement patches as compositions of BASE=8 tiles, so any
+(8a)×(8b) patch with a,b ∈ {1,2,3,4} is expressible — e.g. 8×32, 24×16.
+
+This module is the *reference* (pure-jnp) implementation; the Pallas TPU
+kernel in :mod:`repro.kernels.ip2_project` computes the same function with
+MXU-aligned tiling and is validated against this path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import pwm as pwm_mod
+from repro.core import switched_cap as sc
+from repro.core.analog_nl import AnalogNLSpec, analog_nonlinearity
+
+BASE_TILE = 8  # minimum patch size / OpAmp granularity (paper §2.1.1)
+
+
+@dataclasses.dataclass(frozen=True)
+class PatchSpec:
+    """Geometry of the analog projection array."""
+
+    patch_h: int = 32
+    patch_w: int = 32
+    n_vectors: int = 400          # M output vector elements per patch
+    quant: pwm_mod.QuantSpec = pwm_mod.QuantSpec()
+    summer: sc.SummerSpec = sc.SummerSpec()
+    nl: AnalogNLSpec = AnalogNLSpec(kind="none")
+
+    def __post_init__(self):
+        for d, name in ((self.patch_h, "patch_h"), (self.patch_w, "patch_w")):
+            if d % BASE_TILE != 0 or not (BASE_TILE <= d <= 4 * BASE_TILE):
+                raise ValueError(
+                    f"{name}={d}: patches are ganged 8x8 tiles, sizes 8/16/24/32"
+                )
+
+    @property
+    def pixels_per_patch(self) -> int:
+        return self.patch_h * self.patch_w
+
+
+def extract_patches(frame: jnp.ndarray, patch_h: int, patch_w: int) -> jnp.ndarray:
+    """(H, W) or (B, H, W) frame -> (..., n_patches, patch_h*patch_w).
+
+    Non-overlapping tiling (the circuit supports a 4-pixel offset per
+    vector; offsets are applied by the caller shifting the frame).
+    """
+    batched = frame.ndim == 3
+    if not batched:
+        frame = frame[None]
+    b, h, w = frame.shape
+    if h % patch_h or w % patch_w:
+        raise ValueError(f"frame {h}x{w} not divisible by patch {patch_h}x{patch_w}")
+    gh, gw = h // patch_h, w // patch_w
+    x = frame.reshape(b, gh, patch_h, gw, patch_w)
+    x = x.transpose(0, 1, 3, 2, 4).reshape(b, gh * gw, patch_h * patch_w)
+    return x if batched else x[0]
+
+
+def analog_project_patches(
+    patches: jnp.ndarray,
+    weights: jnp.ndarray,
+    spec: PatchSpec,
+) -> jnp.ndarray:
+    """The analog MVM over already-extracted patches.
+
+    Args:
+      patches: (..., n_patches, N²) CDS pixel voltages in [0, 1].
+      weights: (M, N²) float weights (the programmed DAC currents).
+
+    Returns:
+      (..., n_patches, M) analog patch features =
+      V_R + droop * (W_q @ P_q) / N², through the optional 2T nonlinearity.
+    """
+    n2 = patches.shape[-1]
+    if weights.shape != (spec.n_vectors, n2):
+        raise ValueError(f"weights {weights.shape} != ({spec.n_vectors}, {n2})")
+    p_q = pwm_mod.pwm_quantize(patches, spec.quant)
+    w_q, _ = pwm_mod.quantize_weights(weights, spec.quant)
+    # charge on each cap is w*p; charge sharing divides by N² (exact physics)
+    acc = jnp.einsum("...pi,vi->...pv", p_q, w_q) / n2
+    out = spec.summer.v_ref + spec.summer.droop_factor() * acc
+    return analog_nonlinearity(out, spec.nl)
+
+
+def analog_project_frame(
+    frame: jnp.ndarray, weights: jnp.ndarray, spec: PatchSpec
+) -> jnp.ndarray:
+    """Frame -> per-patch analog feature vectors (reference path)."""
+    patches = extract_patches(frame, spec.patch_h, spec.patch_w)
+    return analog_project_patches(patches, weights, spec)
+
+
+def grid_shape(h: int, w: int, spec: PatchSpec) -> tuple[int, int]:
+    return h // spec.patch_h, w // spec.patch_w

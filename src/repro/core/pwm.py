@@ -1,0 +1,136 @@
+"""PWM / weight-DAC quantization models (paper §2.1).
+
+The in-pixel multiply is realized by charging a capacitor with a
+weight-programmed current for a pixel-programmed duration:
+
+    Q = I(w) * t(P)   =>   Q ∝ w * P
+
+Both factors are quantized by the circuit:
+
+* ``t(P)`` — the pixel value is converted to a pulse width by a ramp
+  comparator clocked at the PWM clock; the pulse width therefore takes one
+  of ``2**pwm_bits`` discrete values ("time quantization").
+* ``I(w)`` — the weight current is produced by a ``w_bits`` signed DAC
+  (negative weights reverse the current polarity, §2.1 "Weighted sum").
+
+The paper's simulations indicate ~6-bit effective in-pixel accuracy
+(§2.1.3); both quantizers default to 6 bits.
+
+All quantizers are exact (deterministic mid-rise uniform quantization) and
+carry straight-through-estimator (STE) gradients so the frontend can be
+trained end-to-end with the backend model — the co-design loop the paper
+describes ("studying the reduction of output features as a function of
+accuracy").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_PWM_BITS = 6
+DEFAULT_WEIGHT_BITS = 6
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of the analog quantization in the pixel array."""
+
+    pwm_bits: int = DEFAULT_PWM_BITS        # pixel -> pulse-width converter
+    weight_bits: int = DEFAULT_WEIGHT_BITS  # weight current DAC (signed)
+    ste: bool = True                        # straight-through gradients
+
+    @property
+    def pwm_levels(self) -> int:
+        return 2 ** self.pwm_bits
+
+    @property
+    def weight_levels(self) -> int:
+        # signed DAC: symmetric around zero, e.g. 6 bits -> [-31, 31]
+        return 2 ** (self.weight_bits - 1) - 1
+
+
+def _ste(exact: jnp.ndarray, quantized: jnp.ndarray, enable: bool) -> jnp.ndarray:
+    """Straight-through estimator: forward=quantized, backward=identity."""
+    if not enable:
+        return quantized
+    return exact + jax.lax.stop_gradient(quantized - exact)
+
+
+def pwm_quantize(pixels: jnp.ndarray, spec: QuantSpec = QuantSpec()) -> jnp.ndarray:
+    """Pixel intensity -> pulse width, quantized to the PWM clock grid.
+
+    Pixels are normalized intensities in [0, 1] (the CDS output swing).
+    Returns values on the grid k / (2**pwm_bits - 1), k integer.
+    """
+    n = spec.pwm_levels - 1
+    clipped = jnp.clip(pixels, 0.0, 1.0)
+    q = jnp.round(clipped * n) / n
+    return _ste(clipped, q, spec.ste)
+
+
+def pwm_codes(pixels: jnp.ndarray, spec: QuantSpec = QuantSpec()) -> jnp.ndarray:
+    """Integer PWM codes (the counter values driving the pulse generator)."""
+    n = spec.pwm_levels - 1
+    return jnp.round(jnp.clip(pixels, 0.0, 1.0) * n).astype(jnp.int32)
+
+
+def quantize_weights(
+    weights: jnp.ndarray,
+    spec: QuantSpec = QuantSpec(),
+    per_output_scale: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Weight matrix -> signed DAC codes * analog scale.
+
+    Mirrors the weight-current DAC: each output vector ("weight line" in
+    Fig. 3a) has a programmable full-scale current, so the quantization
+    scale is per output row by default.
+
+    Args:
+      weights: (..., n_out, n_in) float weights.
+      per_output_scale: one DAC full-scale per output row (True) or one
+        global full-scale (False).
+
+    Returns:
+      (w_q, scale): w_q = dequantized weights (float, on the DAC grid),
+      scale with shape (..., n_out, 1) (or scalar) s.t.
+      ``codes = round(weights / scale)`` are integers in [-L, L].
+    """
+    levels = spec.weight_levels
+    if per_output_scale:
+        amax = jnp.max(jnp.abs(weights), axis=-1, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(weights))
+    scale = jnp.maximum(amax, 1e-12) / levels
+    codes = jnp.clip(jnp.round(weights / scale), -levels, levels)
+    w_q = codes * scale
+    return _ste(weights, w_q, spec.ste), scale
+
+
+def weight_codes(
+    weights: jnp.ndarray, spec: QuantSpec = QuantSpec(), per_output_scale: bool = True
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Integer DAC codes + float scale (for the integer-domain kernel path)."""
+    levels = spec.weight_levels
+    if per_output_scale:
+        amax = jnp.max(jnp.abs(weights), axis=-1, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(weights))
+    scale = jnp.maximum(amax, 1e-12) / levels
+    codes = jnp.clip(jnp.round(weights / scale), -levels, levels).astype(jnp.int8)
+    return codes, scale
+
+
+def analog_multiply(
+    pixels: jnp.ndarray, weights: jnp.ndarray, spec: QuantSpec = QuantSpec()
+) -> jnp.ndarray:
+    """The per-pixel charge Q_i = I(w_i) * t(P_i), both factors quantized.
+
+    This is the element-wise product *before* charge sharing; the summation
+    happens in :mod:`repro.core.switched_cap`.
+    """
+    p_q = pwm_quantize(pixels, spec)
+    w_q, _ = quantize_weights(weights, spec)
+    return w_q * p_q

@@ -1,0 +1,60 @@
+"""Fig. 4 — analog self-attention with power-of-2 quantized coefficients.
+
+The paper's extension circuit maps each neighbourhood's attention
+coefficient through a quantizer-thresholder (QTH) onto a power-of-2 weight,
+so the value multiply becomes a capacitor-ratio shift (binary-weighted cap
+bank) instead of a full PWM multiply. Values live in a second layer of
+patch-processing modules without photodiodes.
+
+Digital twin: quantize post-softmax attention probabilities to
+``2^round(log2 p)`` with an underflow threshold (QTH); optionally
+renormalize so rows still sum to 1. STE gradients keep it trainable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QTHSpec:
+    min_exp: int = -8        # coefficients below 2^min_exp are dropped (threshold)
+    renormalize: bool = True
+    ste: bool = True
+
+
+def pow2_quantize(p: jnp.ndarray, spec: QTHSpec = QTHSpec()) -> jnp.ndarray:
+    """Probabilities (...,) in [0,1] -> nearest power of two, thresholded."""
+    eps = 2.0 ** spec.min_exp
+    safe = jnp.maximum(p, eps * 0.5)
+    expo = jnp.round(jnp.log2(safe))
+    q = jnp.where(p < eps, 0.0, jnp.exp2(expo))
+    q = jnp.minimum(q, 1.0)
+    if spec.ste:
+        q = p + jax.lax.stop_gradient(q - p)
+    return q
+
+
+def qth_attention_weights(scores: jnp.ndarray, spec: QTHSpec = QTHSpec()) -> jnp.ndarray:
+    """Softmax -> QTH pow-2 quantization -> optional renormalize.
+
+    scores: (..., q, k) pre-softmax logits.
+    """
+    p = jax.nn.softmax(scores, axis=-1)
+    q = pow2_quantize(p, spec)
+    if spec.renormalize:
+        denom = jnp.sum(q, axis=-1, keepdims=True)
+        q = q / jnp.maximum(denom, 2.0 ** spec.min_exp)
+    return q
+
+
+def qth_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  spec: QTHSpec = QTHSpec()) -> jnp.ndarray:
+    """Full QTH attention: (..., s, d) tensors, scaled dot product."""
+    d = q.shape[-1]
+    scores = jnp.einsum("...qd,...kd->...qk", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    w = qth_attention_weights(scores, spec).astype(v.dtype)
+    return jnp.einsum("...qk,...kd->...qd", w, v)

@@ -1,0 +1,65 @@
+"""Salient patch selection / partial observation (paper §1, §2.1).
+
+Only the outputs of a selected set of salient patches (e.g. <25 %) are
+converted to the digital domain. The selection mask comes from the backend
+model's saccadic prediction of the previous frame ("shifted attention");
+deselected patches drain their photodiodes and power down, so they cost
+neither ADC conversions nor bandwidth.
+
+The framework treats the mask as an input (produced by the backend); this
+module provides:
+
+* ``topk_patch_mask`` — an energy/attention-score top-k selector used by the
+  examples and benches as a stand-in for the backend's saccade prediction;
+* ``apply_patch_mask`` — zeroes deselected patch features (what the digital
+  side receives) and reports the active fraction (drives the power model);
+* ``compact_active`` — gather of only the active patch features, the
+  bandwidth-true representation streamed off-sensor.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_patch_mask(scores: jnp.ndarray, active_fraction: float) -> jnp.ndarray:
+    """Boolean mask over patches keeping the top ``active_fraction``.
+
+    Args:
+      scores: (..., n_patches) saliency scores (e.g. patch energy or the
+        backend's attention rollout).
+    """
+    n = scores.shape[-1]
+    k = max(1, int(round(n * active_fraction)))
+    thresh = jax.lax.top_k(scores, k)[0][..., -1:]
+    return scores >= thresh
+
+
+def patch_energy(patches: jnp.ndarray) -> jnp.ndarray:
+    """Simple saliency proxy: AC energy of each patch (..., P, N²) -> (..., P)."""
+    centered = patches - jnp.mean(patches, axis=-1, keepdims=True)
+    return jnp.mean(centered * centered, axis=-1)
+
+
+def apply_patch_mask(features: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Zero out deselected patches: (..., P, M) * (..., P, 1)."""
+    return features * mask[..., None].astype(features.dtype)
+
+
+def compact_active(
+    features: jnp.ndarray, mask: jnp.ndarray, k: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather exactly-k active patch features (static shape for jit).
+
+    Returns (compact_features (..., k, M), indices (..., k)). If fewer than
+    k patches are active the tail repeats the last active patch (masked
+    downstream); if more, the highest-score k win (mask should be top-k).
+    """
+    idx = jnp.argsort(~mask, axis=-1, stable=True)[..., :k]
+    taken = jnp.take_along_axis(features, idx[..., None], axis=-2)
+    return taken, idx
+
+
+def active_fraction(mask: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(mask.astype(jnp.float32), axis=-1)

@@ -1,0 +1,110 @@
+"""Switched-capacitor charge-sharing summation + leakage model (paper §2.1.2).
+
+Physics being modelled
+----------------------
+
+*Charge sharing.* Each of the N² pixels in a patch holds a charge
+``Q_i = C * V_i`` on an identical capacitor ``C``. Closing the summing
+switches connects all caps to a common node; charge is conserved, total
+capacitance is ``N²·C``, so the node settles at
+
+    V_out = Σ Q_i / (N² C) = Σ V_i / N²
+
+— the weighted sum *divided by the patch size* (the paper's
+``Out_v = V_R + Σ (W·P)/N²``). The 1/N² factor is physical, not a design
+choice, and is kept exact in every code path.
+
+*Leakage.* Thin-oxide MOSFET switches leak; the paper's 65 nm simulation of
+768 caps at 1 V summed with 768 caps at 0 V (expected 0.5 V) shows the
+*passive* summer drooping by ~10 % in under 10 µs. We model droop as a
+first-order RC discharge per capacitor,
+
+    V(t) = V0 * exp(-t / tau_leak)
+
+and calibrate ``tau_leak`` for 65 nm so that a 10 µs hold loses exactly 10 %
+(tau = -10e-6 / ln(0.9) ≈ 94.9 µs). A 22 nm FDSOI corner with ~100x lower
+leakage is provided as well (paper: "amplifiers can be removed when using a
+lower leakage technology").
+
+*OpAmp compensation.* Summing into the feedback cap of an amplifier pins
+the summing node at virtual ground, so switch leakage is sourced by the
+amplifier output instead of the signal charge: droop is suppressed to the
+amplifier's residual error (finite gain A0 -> gain error 1/(1+A0·β)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+# --- leakage corners ------------------------------------------------------
+
+# Calibrated so the passive summer loses 10% in 10 microseconds (paper datum).
+TAU_LEAK_65NM_S = -10e-6 / math.log(0.9)  # ≈ 94.91 µs
+# 22 nm FDSOI thick-ox switches: ~two decades lower leakage.
+TAU_LEAK_22NM_FDX_S = TAU_LEAK_65NM_S * 100.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SummerSpec:
+    """Static config of the per-patch summing circuit."""
+
+    mode: str = "opamp"            # "opamp" | "passive"
+    tau_leak_s: float = TAU_LEAK_65NM_S
+    hold_time_s: float = 10e-6     # time from switch close to ADC sample
+    opamp_dc_gain: float = 10_000.0  # A0, 80 dB typical for a small OTA
+    v_ref: float = 0.0             # V_R bias added at the amplifier
+
+    def droop_factor(self) -> float:
+        """Multiplicative signal retention after hold_time."""
+        if self.mode == "passive":
+            return math.exp(-self.hold_time_s / self.tau_leak_s)
+        # OpAmp virtual ground: leakage is replenished; only the closed-loop
+        # gain error remains (beta = 1 for the unity-feedback charge summer).
+        return self.opamp_dc_gain / (1.0 + self.opamp_dc_gain)
+
+
+def charge_share_sum(
+    charges: jnp.ndarray,
+    spec: SummerSpec = SummerSpec(),
+    axis: int = -1,
+) -> jnp.ndarray:
+    """Charge-conserving summation onto the patch node.
+
+    Args:
+      charges: per-capacitor voltages ``W_i * P_i`` (any leading batch dims).
+      axis: axis enumerating the N² capacitors of one patch.
+
+    Returns:
+      ``V_R + droop * mean(charges, axis)`` — the OpAmp output the ADC sees.
+    """
+    mean = jnp.mean(charges, axis=axis)
+    return spec.v_ref + spec.droop_factor() * mean
+
+
+def passive_droop_trace(
+    v0: jnp.ndarray, times_s: jnp.ndarray, tau_leak_s: float = TAU_LEAK_65NM_S
+) -> jnp.ndarray:
+    """V(t) of a passive summing node (for the §2.1.2 reproduction bench)."""
+    return v0 * jnp.exp(-times_s[..., :] / tau_leak_s)
+
+
+def capacitor_divider(v: jnp.ndarray, n_extra_caps: int) -> jnp.ndarray:
+    """Quantized division (paper §2.1 'Quantized division').
+
+    Charging one cap to V then switching ``n_extra_caps`` discharged caps in
+    parallel divides the voltage by (1 + n_extra_caps) — charge conservation
+    over the enlarged capacitance. Divisors are therefore integers.
+    """
+    return v / (1.0 + float(n_extra_caps))
+
+
+def series_add(v_a: jnp.ndarray, v_b: jnp.ndarray, subtract: bool = False) -> jnp.ndarray:
+    """Weighted-sum add/subtract of two cap voltages (series connection).
+
+    Subtraction reverses the polarity of the second capacitor before the
+    series connection (paper §2.1 'Weighted sum').
+    """
+    return v_a - v_b if subtract else v_a + v_b

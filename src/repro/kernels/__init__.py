@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the IP2 compute hot-spots.
+
+ip2_project — the analog patch-projection array's digital twin (fused PWM
+quantize + MXU GEMM + charge-share/ADC epilogue); quant_matmul — w8a8
+backend projections. ops.py = jit'd wrappers (padding, CPU interpret
+fallback); ref.py = pure-jnp oracles every kernel is tested against.
+"""
+
+from repro.kernels.ops import (
+    ip2_project,
+    ip2_project_fn,
+    quant_matmul,
+    quantize_weights_int8,
+)
+
+__all__ = ["ip2_project", "ip2_project_fn", "quant_matmul", "quantize_weights_int8"]

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel — the IP2 analog patch-projection array's digital twin.
+
+TPU adaptation of the paper's in-pixel compute fabric (DESIGN.md §2): the
+analog array performs, for a bank of patches in parallel,
+
+    Out[p, v] = VR + droop * (sum_i PWM(P[p,i]) * Wq[i,v]) / N2
+    feat[p, v] = ADC(NL(Out[p, v])) - (VR - bias[v])
+
+One pallas grid step computes one (patch-bank x vector-bank) macro-op —
+the moral equivalent of one charge-share/readout cycle — with:
+
+  * activations PWM-quantized at tile load (the pixel->pulse-width
+    converter lives next to the data, not in a separate pass);
+  * the MXU doing the W x P multiply-accumulate (K-tiled, fp32 scratch
+    accumulator in VMEM);
+  * the full analog epilogue (charge-share /N2, OpAmp droop, 2T clip,
+    edge-ADC quantization, VR-b digital subtraction) fused into the final
+    K step, so features never round-trip to HBM in analog form.
+
+Block sizes default to MXU-aligned (128) tiles; the wrapper in ops.py pads
+inputs so every dimension divides its block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+@dataclasses.dataclass(frozen=True)
+class IP2KernelParams:
+    """Static analog-model constants baked into the kernel."""
+
+    n2: int                      # true pixels/patch (charge-share divisor)
+    pwm_levels: int = 64         # 6-bit PWM
+    droop: float = 1.0           # summer retention factor (OpAmp: ~A0/(1+A0))
+    v_ref: float = 0.0
+    nl_kind: str = "none"        # "none" | "relu" (2T stage), clip at v_sat
+    v_sat: float = 1.0
+    adc_bits: int = 8
+    adc_vmin: float = -1.0
+    adc_vmax: float = 1.0
+    adc_enable: bool = True
+
+
+def _ip2_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, p: IP2KernelParams, k_steps: int):
+    """Grid = (patch banks, vector banks, K banks); K innermost/arbitrary."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # pixel -> pulse width on the PWM clock grid (time quantization)
+    n = p.pwm_levels - 1
+    x = x_ref[...]
+    xq = jnp.round(jnp.clip(x, 0.0, 1.0) * n) * (1.0 / n)
+    acc_ref[...] += jnp.dot(xq, w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        # charge sharing divides by the physical N2, then summer droop + VR
+        out = acc_ref[...] * (p.droop / p.n2) + p.v_ref
+        if p.nl_kind == "relu":
+            out = jnp.clip(out, 0.0, p.v_sat)
+        if p.adc_enable:
+            levels = 2 ** p.adc_bits
+            lsb = (p.adc_vmax - p.adc_vmin) / (levels - 1)
+            clipped = jnp.clip(out, p.adc_vmin, p.adc_vmax)
+            out = jnp.round((clipped - p.adc_vmin) / lsb) * lsb + p.adc_vmin
+        o_ref[...] = (out - (p.v_ref - b_ref[...])).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "block_p", "block_m", "block_k", "interpret"),
+)
+def ip2_project_pallas(
+    patches: jnp.ndarray,      # (P, K) pixel voltages in [0,1]; K = padded N2
+    w_q: jnp.ndarray,          # (K, M) DAC-quantized weights (pre-quantized)
+    bias: jnp.ndarray,         # (M,)
+    params: IP2KernelParams,
+    block_p: int = 128,
+    block_m: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Padded-shape kernel entry; use repro.kernels.ops.ip2_project."""
+    P, K = patches.shape
+    K2, M = w_q.shape
+    assert K == K2 and bias.shape == (M,)
+    assert P % block_p == 0 and M % block_m == 0 and K % block_k == 0, (
+        f"pad shapes to blocks: {(P, K, M)} vs {(block_p, block_k, block_m)}"
+    )
+    k_steps = K // block_k
+    grid = (P // block_p, M // block_m, k_steps)
+
+    return pl.pallas_call(
+        functools.partial(_ip2_kernel, p=params, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_p, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_m), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_m,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_p, block_m), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((P, M), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_p, block_m), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(patches, w_q, bias)

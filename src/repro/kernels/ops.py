@@ -1,0 +1,137 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handle padding to MXU-aligned blocks, batch flattening, weight
+pre-quantization (the DAC programming step), and CPU fallback:
+on non-TPU backends the wrappers run the kernels in interpret mode when
+``interpret=None`` (auto), so the whole framework is runnable here while
+the lowered TPU path keeps the real kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import projection as proj_mod
+from repro.core import pwm as pwm_mod
+from repro.kernels import ref
+from repro.kernels.ip2_project import IP2KernelParams, ip2_project_pallas
+from repro.kernels.quant_matmul import quant_matmul_pallas
+
+
+def _auto_interpret(interpret: bool | None) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def kernel_params_from_spec(spec: proj_mod.PatchSpec, adc=None) -> IP2KernelParams:
+    return IP2KernelParams(
+        n2=spec.pixels_per_patch,
+        pwm_levels=spec.quant.pwm_levels,
+        droop=spec.summer.droop_factor(),
+        v_ref=spec.summer.v_ref,
+        nl_kind=spec.nl.kind if spec.nl.kind in ("relu",) else "none",
+        v_sat=spec.nl.v_sat,
+        adc_bits=adc.bits if adc is not None else 8,
+        adc_vmin=adc.v_min if adc is not None else -1.0,
+        adc_vmax=adc.v_max if adc is not None else 1.0,
+        adc_enable=adc is not None,
+    )
+
+
+def ip2_project(
+    patches: jnp.ndarray,          # (..., P, N2) in [0,1]
+    weights: jnp.ndarray,          # (M, N2) float (pre-DAC)
+    spec: proj_mod.PatchSpec,
+    adc=None,
+    bias: jnp.ndarray | None = None,
+    block_p: int = 128,
+    block_m: int = 128,
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Kernel-backed equivalent of core.projection.analog_project_patches
+    (+ fused ADC readout when ``adc`` is given). Returns (..., P, M)."""
+    m, n2 = weights.shape
+    lead = patches.shape[:-1]
+    flat = patches.reshape(-1, n2)
+
+    w_q, _ = pwm_mod.quantize_weights(weights, spec.quant)  # DAC programming
+    w_t = w_q.T                                             # (N2, M)
+    b = jnp.zeros((m,), jnp.float32) if bias is None else bias.astype(jnp.float32)
+
+    p_pad = _pad_to(flat.astype(jnp.float32), 0, block_p)
+    k_in = _pad_to(p_pad, 1, block_k)
+    w_pad = _pad_to(_pad_to(w_t.astype(jnp.float32), 0, block_k), 1, block_m)
+    b_pad = _pad_to(b, 0, block_m)
+
+    params = kernel_params_from_spec(spec, adc)
+    out = ip2_project_pallas(
+        k_in, w_pad, b_pad, params,
+        block_p=block_p, block_m=block_m, block_k=block_k,
+        interpret=_auto_interpret(interpret),
+    )
+    out = out[: flat.shape[0], :m]
+    return out.reshape(*lead, m)
+
+
+def ip2_project_fn(spec: proj_mod.PatchSpec, **kw):
+    """Adapter matching core.frontend.ProjectFn (no fused ADC: the frontend
+    applies its own readout; used to drop the kernel into apply_frontend)."""
+
+    def fn(patches, weights, _spec):
+        return ip2_project(patches, weights, _spec, adc=None, **kw)
+
+    return fn
+
+
+def quant_matmul(
+    a: jnp.ndarray,                # (..., K) float activations
+    w8: jnp.ndarray,               # (K, M) int8 codes
+    s_w: jnp.ndarray,              # (M,) scales
+    out_dtype=None,
+    block_p: int = 128,
+    block_m: int = 128,
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """y = a @ dequant(w8) with in-kernel per-row int8 activation quant."""
+    out_dtype = out_dtype or a.dtype
+    k, m = w8.shape
+    lead = a.shape[:-1]
+    flat = a.reshape(-1, k)
+    a8, s_a = ref.quantize_activations_ref(flat)
+
+    a_pad = _pad_to(_pad_to(a8, 0, block_p), 1, block_k)
+    sa_pad = _pad_to(s_a, 0, block_p)
+    w_pad = _pad_to(_pad_to(w8, 0, block_k), 1, block_m)
+    sw_pad = _pad_to(s_w.astype(jnp.float32), 0, block_m)
+
+    out = quant_matmul_pallas(
+        a_pad, sa_pad, w_pad, sw_pad,
+        block_p=block_p, block_m=block_m, block_k=block_k,
+        out_dtype=jnp.float32, interpret=_auto_interpret(interpret),
+    )
+    out = out[: flat.shape[0], :m].astype(out_dtype)
+    return out.reshape(*lead, m)
+
+
+def quantize_weights_int8(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(K, M) float -> int8 codes + per-col scale (offline weight prep)."""
+    amax = jnp.max(jnp.abs(w), axis=0)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    w8 = jnp.clip(jnp.round(w / scale[None, :]), -127, 127).astype(jnp.int8)
+    return w8, scale.astype(jnp.float32)

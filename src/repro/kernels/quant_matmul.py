@@ -1,0 +1,79 @@
+"""Pallas TPU kernel — w8a8 quantized matmul (beyond-paper optimization).
+
+The paper's derived digital optimization (DESIGN.md §5): the same
+"quantize-the-multiply" insight applied to backend projections and KV-cache
+dequant-matmuls. Weights arrive as int8 codes with a per-output-channel
+scale (exactly the weight-DAC abstraction); activations are quantized
+per-row to int8 inside the kernel (dynamic, like the PWM converter).
+
+    y[p, m] = (sum_k a8[p,k] * w8[k,m]) * s_a[p] * s_w[m]
+
+int32 accumulation on the MXU, fused dequant epilogue.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _qmm_kernel(a_ref, sa_ref, w_ref, sw_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a8 = a_ref[...].astype(jnp.int32)
+    w8 = w_ref[...].astype(jnp.int32)
+    acc_ref[...] += jax.lax.dot_general(
+        a8, w8, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        sa = sa_ref[...][:, None]
+        sw = sw_ref[...][None, :]
+        o_ref[...] = (acc_ref[...].astype(jnp.float32) * sa * sw).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_p", "block_m", "block_k", "out_dtype", "interpret")
+)
+def quant_matmul_pallas(
+    a8: jnp.ndarray,        # (P, K) int8 activations
+    s_a: jnp.ndarray,       # (P,) float32 per-row scales
+    w8: jnp.ndarray,        # (K, M) int8 weights
+    s_w: jnp.ndarray,       # (M,) float32 per-col scales
+    block_p: int = 128,
+    block_m: int = 128,
+    block_k: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    P, K = a8.shape
+    K2, M = w8.shape
+    assert K == K2 and s_a.shape == (P,) and s_w.shape == (M,)
+    assert P % block_p == 0 and M % block_m == 0 and K % block_k == 0
+    k_steps = K // block_k
+    grid = (P // block_p, M // block_m, k_steps)
+
+    return pl.pallas_call(
+        functools.partial(_qmm_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_p, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_p,), lambda i, j, k: (i,)),
+            pl.BlockSpec((block_k, block_m), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_m,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_p, block_m), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((P, M), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_p, block_m), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(a8, s_a, w8, s_w)

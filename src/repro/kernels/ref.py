@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (shape/dtype-exact)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ip2_project import IP2KernelParams
+
+
+def ip2_project_ref(
+    patches: jnp.ndarray, w_q: jnp.ndarray, bias: jnp.ndarray, params: IP2KernelParams
+) -> jnp.ndarray:
+    """Oracle for ip2_project_pallas (same padded shapes)."""
+    n = params.pwm_levels - 1
+    xq = jnp.round(jnp.clip(patches, 0.0, 1.0) * n) * (1.0 / n)
+    acc = xq.astype(jnp.float32) @ w_q.astype(jnp.float32)
+    out = acc * (params.droop / params.n2) + params.v_ref
+    if params.nl_kind == "relu":
+        out = jnp.clip(out, 0.0, params.v_sat)
+    if params.adc_enable:
+        levels = 2 ** params.adc_bits
+        lsb = (params.adc_vmax - params.adc_vmin) / (levels - 1)
+        clipped = jnp.clip(out, params.adc_vmin, params.adc_vmax)
+        out = jnp.round((clipped - params.adc_vmin) / lsb) * lsb + params.adc_vmin
+    return out - (params.v_ref - bias[None, :])
+
+
+def quant_matmul_ref(
+    a8: jnp.ndarray, s_a: jnp.ndarray, w8: jnp.ndarray, s_w: jnp.ndarray, out_dtype=jnp.float32
+) -> jnp.ndarray:
+    acc = a8.astype(jnp.int32) @ w8.astype(jnp.int32)
+    return (acc.astype(jnp.float32) * s_a[:, None] * s_w[None, :]).astype(out_dtype)
+
+
+def quantize_activations_ref(a: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row symmetric int8 activation quantization (the 'PWM' side)."""
+    amax = jnp.max(jnp.abs(a), axis=-1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    a8 = jnp.clip(jnp.round(a / scale[..., None]), -127, 127).astype(jnp.int8)
+    return a8, scale.astype(jnp.float32)

@@ -1,0 +1,29 @@
+"""Production meshes (functions — importing this module never touches jax
+device state).
+
+Single pod: 256 TPU v5e chips, mesh (16, 16) = ("data", "model").
+Multi-pod: 2 pods = 512 chips, mesh (2, 16, 16) = ("pod", "data", "model")
+— "pod" is the slow (DCN) axis; only DP gradient all-reduce (or pipeline
+stages) crosses it.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) — used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link (≈ per-chip usable)
+HBM_BYTES = 16 * 1024**3          # capacity
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 2):
+    """Small mesh over CPU host devices (tests w/ XLA_FLAGS device_count)."""
+    return jax.make_mesh((data, model), ("data", "model"))

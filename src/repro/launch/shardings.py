@@ -1,0 +1,162 @@
+"""Sharding utilities: plan construction, spec fitting, constrainer.
+
+``fit_spec`` is the universal safety net: any PartitionSpec whose axis
+product does not divide the corresponding array dimension drops that axis
+(replicates instead). Small archs (9-head smollm, 6-head whisper) thus
+compile on the 16-way tensor axis with partial replication rather than
+failing; padding in attention.head_geometry already handles the hot dims.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.layers import ParallelPlan
+from repro.models.sharding_ctx import set_constrainer
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainPlan:
+    """Numeric policy per arch (DESIGN.md §4 + EXPERIMENTS.md memory notes)."""
+
+    param_dtype: str = "float32"   # master weights
+    compute_dtype: str = "bfloat16"
+    moment_dtype: str = "float32"
+    cache_dtype: str = "bfloat16"
+
+
+def plan_for(cfg: ModelConfig, mesh: Mesh) -> ParallelPlan:
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = axes.get("model", 1)
+    dp_axes = tuple(a for a in ("pod", "data") if a in axes)
+    # §Perf C1: 10B+ models FSDP their params/opt over the data axis —
+    # at 12B the replicated fp32 master+Adam state alone is ~16.6 GiB/chip
+    # (TP16), a fixed floor no microbatching can remove.
+    # §Perf M2: on the multi-pod mesh, FSDP over BOTH ("pod","data") —
+    # sharding state over "data" alone replicates it across pods (kimi:
+    # 85.9 GiB/chip at 512 chips, same as 256).
+    big = cfg.param_count() >= 10e9
+    fsdp_axis = ("pod", "data") if "pod" in axes else "data"
+    return ParallelPlan(tp=tp, fsdp=big, dp_axes=dp_axes, fsdp_axis=fsdp_axis)
+
+
+def train_plan_for(cfg: ModelConfig) -> TrainPlan:
+    # §Perf A1: 100B+ MoE trains in bf16 params + bf16 moments — halves the
+    # FSDP all-gather bytes (the dominant collective) and the state memory.
+    if cfg.param_count() >= 100e9:
+        return TrainPlan(param_dtype="bfloat16", moment_dtype="bfloat16")
+    return TrainPlan()
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return math.prod(_axis_size(mesh, a) for a in axis)
+    return mesh.devices.shape[mesh.axis_names.index(axis)]
+
+
+def fit_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop spec axes that don't divide their dimension (replicate there)."""
+    if spec is None:
+        return P()
+    parts = list(spec)
+    while len(parts) < len(shape):
+        parts.append(None)
+    out = []
+    for dim, axis in zip(shape, parts[: len(shape)]):
+        if axis is None:
+            out.append(None)
+            continue
+        if dim % _axis_size(mesh, axis) == 0:
+            out.append(axis)
+        elif isinstance(axis, (tuple, list)):
+            # try a prefix of the compound axes
+            kept = []
+            for a in axis:
+                if dim % _axis_size(mesh, tuple(kept + [a])) == 0:
+                    kept.append(a)
+            out.append(tuple(kept) if kept else None)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def shardings_for(spec_tree, shape_tree, mesh: Mesh):
+    """Pytree of NamedShardings with fit_spec applied leaf-wise."""
+    def mk(spec, shp):
+        return NamedSharding(mesh, fit_spec(spec, shp.shape, mesh))
+
+    return jax.tree.map(
+        mk, spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation constrainer (installed around jit traces by the launcher)
+# ---------------------------------------------------------------------------
+
+def make_constrainer(mesh: Mesh, plan: ParallelPlan, seq_shard: bool = True):
+    """Logical-name -> with_sharding_constraint on this mesh.
+
+    act:    (B, S, D)  B over dp, S over tp (sequence parallelism — the
+            residual stream is the dominant live tensor under remat)
+    logits: (B, S, V)  V over tp
+    moe_buf:(E, C, D)  E over tp, C over dp
+    """
+    dp = plan.dp_axes
+    tp = plan.tp_axis
+
+    table = {
+        "act": P(dp, tp if seq_shard else None, None),
+        "logits": P(dp, None, tp),
+        "tokens": P(dp, None),
+        "moe_buf": P(tp, dp, None),
+        "moe_tokens": P((*dp, tp) if seq_shard else dp, None),
+        "kv": P(dp, None, tp, None),
+    }
+
+    def constrain(x, name):
+        spec = table.get(name)
+        if spec is None:
+            return x
+        spec = fit_spec(spec, x.shape, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+class constrainer_ctx:
+    """Context manager installing the activation constrainer (and optionally
+    the §Perf A2 all_to_all MoE dispatch) during trace."""
+
+    def __init__(self, mesh: Mesh | None, plan: ParallelPlan, seq_shard=True,
+                 moe_a2a: bool = False):
+        self.fn = (
+            make_constrainer(mesh, plan, seq_shard) if mesh is not None else None
+        )
+        self.moe = (
+            {"mesh": mesh, "dp": plan.dp_axes, "tp": plan.tp_axis}
+            if (moe_a2a and mesh is not None) else None
+        )
+
+    def __enter__(self):
+        set_constrainer(self.fn)
+        if self.moe is not None:
+            from repro.models.sharding_ctx import set_moe_ctx
+
+            set_moe_ctx(self.moe)
+        return self
+
+    def __exit__(self, *a):
+        set_constrainer(None)
+        from repro.models.sharding_ctx import set_moe_ctx
+
+        set_moe_ctx(None)
+        return False

@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run lowers
+against these (weak-type-correct, shardable, no device allocation).
+
+For VLM/audio archs the modality frontend is a stub per the assignment:
+``input_specs`` provides precomputed patch/frame embeddings. Sequence
+accounting: VLM train/prefill shapes split seq_len into n_image_tokens of
+image prefix + text remainder; enc-dec shapes use seq_len decoder tokens
+against n_encoder_frames stub frames.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+VISION_STUB_DIM = 1024
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Training / prefill batch (full sequences)."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    out: dict = {}
+    if cfg.is_vlm:
+        n_img = min(cfg.n_image_tokens, s // 2)
+        out["tokens"] = sds((b, s - n_img), jnp.int32)
+        out["image_embeds"] = sds((b, n_img, VISION_STUB_DIM), jnp.bfloat16)
+        if cfg.vision_frontend == "ip2":
+            del out["image_embeds"]
+            edge = cfg.ip2_patch * int(n_img ** 0.5)
+            out["images_rgb"] = sds((b, edge, edge, 3), jnp.float32)
+    elif cfg.is_encoder_decoder:
+        out["tokens"] = sds((b, s), jnp.int32)
+        out["frames"] = sds((b, cfg.n_encoder_frames, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = sds((b, s), jnp.int32)
+    return out
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Decode step inputs: one new token, absolute position scalar."""
+    b = shape.global_batch
+    return {
+        "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of one cell —
+    the dry-run's lowering inputs (weak-type-correct, no allocation)."""
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        return decode_input_specs(cfg, shape)
+    return batch_specs(cfg, shape)
+
+
+def batch_spec_shardings(cfg: ModelConfig, shape: ShapeConfig, plan) -> dict:
+    """PartitionSpec tree matching batch_specs (batch over dp axes)."""
+    from jax.sharding import PartitionSpec as P
+
+    dp = plan.dp_axes
+    out = {"tokens": P(dp, None)}
+    if cfg.is_vlm:
+        if cfg.vision_frontend == "ip2":
+            out["images_rgb"] = P(dp, None, None, None)
+        else:
+            out["image_embeds"] = P(dp, None, None)
+    elif cfg.is_encoder_decoder:
+        out["frames"] = P(dp, None, None)
+    return out

@@ -1,0 +1,17 @@
+from repro.models.layers import DEFAULT_PLAN, ParallelPlan
+from repro.models.lm import (
+    decode_state_specs,
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    param_specs,
+    prefill,
+)
+
+__all__ = [
+    "DEFAULT_PLAN", "ParallelPlan",
+    "decode_state_specs", "decode_step", "forward", "init_decode_state",
+    "init_params", "loss_fn", "param_specs", "prefill",
+]

@@ -1,0 +1,296 @@
+"""GQA attention: flash-style chunked prefill, KV-cached decode, local
+windows, RoPE, TP head padding + KV group replication (DESIGN.md §4).
+
+Memory discipline: prefill never materializes the (S, S) score matrix —
+keys/values are scanned in chunks with an online-softmax accumulator
+(flash attention in pure JAX; on TPU the chunk loop pipelines HBM->VMEM).
+Decode attends one query against the cache with a plain einsum.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParallelPlan, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def head_geometry(cfg: ModelConfig, plan: ParallelPlan) -> tuple[int, int]:
+    """(padded q heads, stored kv heads) for this arch under this plan."""
+    hq = plan.pad_heads(cfg.n_heads)
+    hkv = plan.stored_kv_heads(cfg.n_kv_heads, cfg.n_heads)
+    return hq, hkv
+
+
+def init_attention(key, cfg: ModelConfig, plan: ParallelPlan, dtype=jnp.float32) -> dict:
+    hq, hkv = head_geometry(cfg, plan)
+    d, dh = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, hq * dh, dtype).reshape(d, hq, dh),
+        "wk": dense_init(ks[1], d, hkv * dh, dtype).reshape(d, hkv, dh),
+        "wv": dense_init(ks[2], d, hkv * dh, dtype).reshape(d, hkv, dh),
+        "wo": dense_init(ks[3], hq * dh, d, dtype).reshape(hq, dh, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq, dh), dtype)
+        p["bk"] = jnp.zeros((hkv, dh), dtype)
+        p["bv"] = jnp.zeros((hkv, dh), dtype)
+    return p
+
+
+def spec_attention(cfg: ModelConfig, plan: ParallelPlan) -> dict:
+    from jax.sharding import PartitionSpec as P
+
+    w_in = plan.fsdp_axis if plan.fsdp else None
+    s = {
+        "wq": P(w_in, plan.tp_axis, None),
+        "wk": P(w_in, plan.tp_axis, None),
+        "wv": P(w_in, plan.tp_axis, None),
+        "wo": P(plan.tp_axis, None, w_in),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = P(plan.tp_axis, None)
+        s["bk"] = P(plan.tp_axis, None)
+        s["bv"] = P(plan.tp_axis, None)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (prefill / training)
+# ---------------------------------------------------------------------------
+
+def _flash_attend(
+    q: jnp.ndarray,          # (B, S, H, dh) — post-RoPE
+    k: jnp.ndarray,          # (B, T, H, dh) — kv already expanded to H
+    v: jnp.ndarray,          # (B, T, H, dh)
+    causal: bool,
+    window: int | None,
+    q_offset: int = 0,
+    chunk: int = 1024,
+) -> jnp.ndarray:
+    b, s, h, dh = q.shape
+    t = k.shape[1]
+    chunk = min(chunk, t)
+    n_chunks = -(-t // chunk)
+    tpad = n_chunks * chunk
+    if tpad != t:
+        pad = [(0, 0), (0, tpad - t), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    kc = k.reshape(b, n_chunks, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    q32 = q.astype(jnp.float32) * scale
+    qpos = q_offset + jnp.arange(s)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        idx, kb, vb = inp                      # kb/vb: (B, C, H, dh)
+        kpos = idx * chunk + jnp.arange(chunk)
+        sc = jnp.einsum("bshd,bchd->bhsc", q32, kb.astype(jnp.float32))
+        mask = kpos[None, :] <= (t - 1)        # strip T padding
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window is not None:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        sc = jnp.where(mask[None, None, :, :], sc, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhsc,bchd->bshd", p, vb.astype(jnp.float32)
+        ).transpose(0, 2, 1, 3)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, h, s, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)   # (B, S, H, dh)
+
+
+def _expand_kv(kv: jnp.ndarray, n_q_heads: int) -> jnp.ndarray:
+    """(B, T, Hkv, dh) -> (B, T, Hq, dh): q head i uses kv head i // g.
+
+    Broadcast+reshape, NOT a gather: a gather over the TP-sharded head dim
+    makes GSPMD all-gather the cache and replicate attention compute; the
+    broadcast keeps the stored-head sharding and fuses into the matmul.
+    """
+    b, t, hkv, dh = kv.shape
+    if hkv == n_q_heads:
+        return kv
+    assert n_q_heads % hkv == 0, (n_q_heads, hkv)
+    g = n_q_heads // hkv
+    return jnp.broadcast_to(
+        kv[:, :, :, None, :], (b, t, hkv, g, dh)
+    ).reshape(b, t, n_q_heads, dh)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def attention_forward(
+    p: dict,
+    x: jnp.ndarray,                 # (B, S, D)
+    cfg: ModelConfig,
+    positions: jnp.ndarray,         # (S,) or (B, S)
+    causal: bool = True,
+    window: int | None = None,
+    kv_override: jnp.ndarray | None = None,   # (B, T, D) for cross-attn
+    use_rope: bool = True,
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full-sequence attention. Returns (out (B,S,D), (k, v) for caching)."""
+    # roofline instrumentation: one KV chunk => the scan body IS the whole
+    # attention, so XLA cost_analysis counts its FLOPs exactly once
+    chunk = 10**9 if cfg.unroll_layers else 1024
+    src = x if kv_override is None else kv_override
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        if kv_override is None:
+            k = apply_rope(k, positions, cfg.rope_theta)
+    hq = q.shape[2]
+    out = _flash_attend(
+        q, _expand_kv(k, hq), _expand_kv(v, hq), causal=causal, window=window,
+        chunk=chunk,
+    )
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache (§Perf B2): per-(position, head) symmetric quantization
+# ---------------------------------------------------------------------------
+
+def quantize_kv(kv: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(B, T, H, dh) -> (int8 codes, (B, T, H) fp32 scales)."""
+    amax = jnp.max(jnp.abs(kv.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    codes = jnp.clip(
+        jnp.round(kv.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return codes, scale
+
+
+def _dequant_operand(cache: jnp.ndarray, scales: dict | None, which: str):
+    """Matrix to contract against + per-(B,T,H) scale to fold in (or None)."""
+    if cache.dtype == jnp.int8:
+        return cache.astype(jnp.bfloat16), scales[which]
+    return cache, None
+
+
+def attention_decode(
+    p: dict,
+    x: jnp.ndarray,                 # (B, 1, D)
+    cache_k: jnp.ndarray,           # (B, T, Hkv, dh) rolling or full buffer
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,               # scalar int32 — absolute position
+    cfg: ModelConfig,
+    window: int | None = None,
+    use_rope: bool = True,
+    cache_scales: dict | None = None,   # {"k","v"}: (B,T,Hkv) for int8 cache
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, dict | None]:
+    """One decode step. Writes (k,v) at ``pos`` (mod T for local windows),
+    attends over valid cache, returns (out (B,1,D), new_k, new_v, scales)."""
+    b = x.shape[0]
+    t = cache_k.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    pos_b = jnp.broadcast_to(pos[None], (b,)) if pos.ndim == 0 else pos
+    if use_rope:
+        q = apply_rope(q, pos_b[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos_b[:, None], cfg.rope_theta)
+
+    slot = pos % t if window is not None else pos
+    if cache_k.dtype == jnp.int8:
+        k8, ks = quantize_kv(k)
+        v8, vs = quantize_kv(v)
+        cache_scales = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache_scales["k"], ks, slot, 1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache_scales["v"], vs, slot, 1),
+        }
+        k, v = k8, v8
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, 1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, 1)
+
+    # grouped-query attention without expanding the cache: q heads reshaped
+    # to (stored_kv, group) so the einsums contract against the cache
+    # directly — the stored-head dim stays TP-sharded, zero comm.
+    # Perf (§Perf B1): contract the cache in its STORAGE dtype with fp32
+    # accumulation (preferred_element_type) — an explicit .astype(f32) on
+    # the cache materializes a cache-sized fp32 copy per layer, doubling
+    # the decode step's HBM traffic.
+    hq = q.shape[2]
+    hkv = new_k.shape[2]
+    g = hq // hkv
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    qg = (q[:, 0] * scale.astype(q.dtype)).reshape(b, hkv, g, dh)
+    k_mat, k_scale = _dequant_operand(new_k, cache_scales, "k")
+    sc = jnp.einsum(
+        "bngd,btnd->bngt", qg.astype(k_mat.dtype), k_mat,
+        preferred_element_type=jnp.float32,
+    )
+    if k_scale is not None:                      # int8 cache: fold scale in
+        sc = sc * k_scale.transpose(0, 2, 1)[:, :, None, :]
+
+    tpos = jnp.arange(t)
+    if window is not None:
+        # rolling buffer: validity = "within the last `window` writes"
+        age = (slot - tpos) % t
+        valid = age < jnp.minimum(window, pos + 1)
+    else:
+        valid = tpos <= pos
+    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    v_mat, v_scale = _dequant_operand(new_v, cache_scales, "v")
+    if v_scale is not None:                      # fold v scale into weights
+        w = w * v_scale.transpose(0, 2, 1)[:, :, None, :]
+    out = jnp.einsum(
+        "bngt,btnd->bngd", w.astype(v_mat.dtype), v_mat,
+        preferred_element_type=jnp.float32,
+    )
+    out = out.reshape(b, 1, hq, dh).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, new_k, new_v, cache_scales
+
+
+def make_cache(
+    cfg: ModelConfig, plan: ParallelPlan, batch: int, max_len: int,
+    window: int | None = None, dtype=jnp.bfloat16,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    _, hkv = head_geometry(cfg, plan)
+    t = min(window, max_len) if window is not None else max_len
+    shape = (batch, t, hkv, cfg.head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def make_cache_scales(
+    cfg: ModelConfig, plan: ParallelPlan, batch: int, max_len: int,
+    window: int | None = None,
+) -> dict:
+    _, hkv = head_geometry(cfg, plan)
+    t = min(window, max_len) if window is not None else max_len
+    z = jnp.ones((batch, t, hkv), jnp.float32)
+    return {"k": z, "v": z}

@@ -1,0 +1,240 @@
+"""Per-kind block init/spec/apply dispatch + pattern-scan stacking.
+
+A model is ``block_pattern`` tiled over n_layers. Consecutive full repeats
+of the pattern are stacked and executed with one ``lax.scan`` (compact HLO
+even for 94-layer models); remainder layers run unrolled. Each pattern
+position has its own param stack, so heterogeneous patterns (RG-LRU /
+local-attn, mLSTM / sLSTM) scan cleanly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ATTN,
+    LOCAL_ATTN,
+    MLSTM,
+    MOE,
+    RECURRENT,
+    SLSTM,
+    ModelConfig,
+)
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import ParallelPlan, init_mlp, rms_norm, spec_mlp
+from repro.models.sharding_ctx import constrain
+
+
+# ---------------------------------------------------------------------------
+# init / spec per kind
+# ---------------------------------------------------------------------------
+
+def init_block(key, kind: str, cfg: ModelConfig, plan: ParallelPlan, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    p: dict = {"norm1": jnp.ones((d,), dtype)}
+    if kind in (ATTN, LOCAL_ATTN, MOE):
+        p["attn"] = attn_mod.init_attention(k1, cfg, plan, dtype)
+        p["norm2"] = jnp.ones((d,), dtype)
+        if kind == MOE:
+            p["moe"] = moe_mod.init_moe(k2, cfg, dtype)
+        else:
+            p["mlp"] = init_mlp(k2, d, cfg.d_ff, cfg.mlp_kind, dtype)
+    elif kind == RECURRENT:
+        p["rec"] = rglru_mod.init_rglru_block(k1, cfg, dtype)
+        p["norm2"] = jnp.ones((d,), dtype)
+        p["mlp"] = init_mlp(k2, d, cfg.d_ff, cfg.mlp_kind, dtype)
+    elif kind == MLSTM:
+        p["mlstm"] = xlstm_mod.init_mlstm_block(k1, cfg, dtype)
+    elif kind == SLSTM:
+        p["slstm"] = xlstm_mod.init_slstm_block(k1, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def spec_block(kind: str, cfg: ModelConfig, plan: ParallelPlan) -> dict:
+    from jax.sharding import PartitionSpec as P
+
+    s: dict = {"norm1": P(None)}
+    if kind in (ATTN, LOCAL_ATTN, MOE):
+        s["attn"] = attn_mod.spec_attention(cfg, plan)
+        s["norm2"] = P(None)
+        if kind == MOE:
+            s["moe"] = moe_mod.spec_moe(cfg, plan)
+        else:
+            s["mlp"] = spec_mlp(cfg.mlp_kind, plan)
+    elif kind == RECURRENT:
+        s["rec"] = rglru_mod.spec_rglru_block(cfg, plan)
+        s["norm2"] = P(None)
+        s["mlp"] = spec_mlp(cfg.mlp_kind, plan)
+    elif kind == MLSTM:
+        s["mlstm"] = xlstm_mod.spec_mlstm_block(cfg, plan)
+    elif kind == SLSTM:
+        s["slstm"] = xlstm_mod.spec_slstm_block(cfg, plan)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# apply (full sequence) — returns (x, new_state, aux)
+# ---------------------------------------------------------------------------
+
+def _cache_from_prefill(k: jnp.ndarray, t: int, cache_dtype) -> jnp.ndarray:
+    """Lay prefill keys/values into the (possibly rolling) cache buffer so
+    decode's slot arithmetic (slot = pos % t) lines up."""
+    s = k.shape[1]
+    if s < t:
+        pad = [(0, 0), (0, t - s), (0, 0), (0, 0)]
+        return jnp.pad(k.astype(cache_dtype), pad)
+    kk = k[:, -t:].astype(cache_dtype)
+    return jnp.roll(kk, s % t, axis=1)
+
+
+def _scale_from_prefill(sc: jnp.ndarray, t: int) -> jnp.ndarray:
+    """Same layout for the (B, S, H) int8-cache scales."""
+    s = sc.shape[1]
+    if s < t:
+        return jnp.pad(sc, [(0, 0), (0, t - s), (0, 0)], constant_values=1.0)
+    return jnp.roll(sc[:, -t:], s % t, axis=1)
+
+
+def apply_block(
+    p: dict,
+    kind: str,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    state: dict | None,
+    causal: bool = True,
+    decode_pos: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, dict | None, jnp.ndarray]:
+    aux = jnp.zeros((), jnp.float32)
+    new_state = state
+    if kind in (ATTN, LOCAL_ATTN, MOE):
+        window = cfg.local_window if kind == LOCAL_ATTN else None
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        if state is not None and x.shape[1] == 1:
+            scales = (
+                {"k": state["k_scale"], "v": state["v_scale"]}
+                if "k_scale" in state else None
+            )
+            out, nk, nv, nsc = attn_mod.attention_decode(
+                p["attn"], h, state["k"], state["v"], decode_pos, cfg,
+                window=window, cache_scales=scales,
+            )
+            new_state = {"k": nk, "v": nv}
+            if nsc is not None:
+                new_state["k_scale"], new_state["v_scale"] = nsc["k"], nsc["v"]
+        else:
+            out, (k, v) = attn_mod.attention_forward(
+                p["attn"], h, cfg, positions, causal=causal, window=window
+            )
+            if state is not None:
+                t = state["k"].shape[1]
+                if state["k"].dtype == jnp.int8:
+                    k8, ks = attn_mod.quantize_kv(k)
+                    v8, vs = attn_mod.quantize_kv(v)
+                    new_state = {
+                        "k": _cache_from_prefill(k8, t, jnp.int8),
+                        "v": _cache_from_prefill(v8, t, jnp.int8),
+                        "k_scale": _scale_from_prefill(ks, t),
+                        "v_scale": _scale_from_prefill(vs, t),
+                    }
+                else:
+                    new_state = {
+                        "k": _cache_from_prefill(k, t, state["k"].dtype),
+                        "v": _cache_from_prefill(v, t, state["v"].dtype),
+                    }
+        x = constrain(x + out, "act")
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if kind == MOE:
+            from repro.models.sharding_ctx import get_moe_ctx
+
+            moe_ctx = get_moe_ctx()
+            if moe_ctx is not None:
+                from repro.models.moe_a2a import apply_moe_a2a
+
+                out, aux = apply_moe_a2a(
+                    p["moe"], h, cfg, moe_ctx["mesh"], moe_ctx["dp"], moe_ctx["tp"]
+                )
+            else:
+                out, aux = moe_mod.apply_moe(p["moe"], h, cfg)
+        else:
+            from repro.models.layers import apply_mlp
+
+            out = apply_mlp(p["mlp"], h, cfg.mlp_kind)
+        x = constrain(x + out, "act")
+    elif kind == RECURRENT:
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        out, new_state = rglru_mod.recurrent_block_forward(p["rec"], h, state)
+        x = constrain(x + out, "act")
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        from repro.models.layers import apply_mlp
+
+        x = constrain(x + apply_mlp(p["mlp"], h, cfg.mlp_kind), "act")
+    elif kind == MLSTM:
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        out, new_state = xlstm_mod.mlstm_block_forward(
+            p["mlstm"], h, state, chunk_size=cfg.xlstm_chunk)
+        x = constrain(x + out, "act")
+    elif kind == SLSTM:
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        out, new_state = xlstm_mod.slstm_forward(p["slstm"], h, state)
+        x = constrain(x + out, "act")
+    return x, new_state, aux
+
+
+# ---------------------------------------------------------------------------
+# decode-state init per kind
+# ---------------------------------------------------------------------------
+
+def init_block_state(
+    kind: str, cfg: ModelConfig, plan: ParallelPlan, batch: int, max_len: int,
+    cache_dtype=jnp.bfloat16,
+) -> dict:
+    if kind in (ATTN, MOE, LOCAL_ATTN):
+        window = cfg.local_window if kind == LOCAL_ATTN else None
+        k, v = attn_mod.make_cache(
+            cfg, plan, batch, max_len, window=window, dtype=cache_dtype
+        )
+        st = {"k": k, "v": v}
+        if cache_dtype == jnp.int8:
+            sc = attn_mod.make_cache_scales(cfg, plan, batch, max_len, window=window)
+            st["k_scale"], st["v_scale"] = sc["k"], sc["v"]
+        return st
+    if kind == RECURRENT:
+        return rglru_mod.init_rglru_state(cfg, batch)
+    if kind == MLSTM:
+        return xlstm_mod.init_mlstm_state(cfg, batch)
+    if kind == SLSTM:
+        return xlstm_mod.init_slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def state_specs(kind: str, cfg: ModelConfig, plan: ParallelPlan,
+                cache_dtype=jnp.bfloat16) -> dict:
+    """PartitionSpecs for one block's decode state (batch over dp, heads/
+    features over tp where the shape allows)."""
+    from jax.sharding import PartitionSpec as P
+
+    dp = plan.dp_axes
+    tp = plan.tp_axis
+    if kind in (ATTN, MOE, LOCAL_ATTN):
+        s = {"k": P(dp, None, tp, None), "v": P(dp, None, tp, None)}
+        if cache_dtype == jnp.int8:
+            s["k_scale"] = P(dp, None, tp)
+            s["v_scale"] = P(dp, None, tp)
+        return s
+    if kind == RECURRENT:
+        return {"h": P(dp, tp), "conv": P(dp, None, tp)}
+    if kind == MLSTM:
+        return {"conv": P(dp, None, tp), "C": P(dp, None, None, tp),
+                "n": P(dp, None, tp), "m": P(dp, None)}
+    if kind == SLSTM:
+        return {"c": P(dp, None, tp), "n": P(dp, None, tp),
+                "m": P(dp, None, tp), "h": P(dp, tp)}
+    raise ValueError(kind)

@@ -1,0 +1,44 @@
+"""Small CNN baseline (the paper's comparison point: patch-based linear
+projection "can perform as well as the CNN"). 3 conv blocks + GAP head,
+implemented with lax.conv_general_dilated — no frontend, full-frame RGB."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_cnn(key, n_classes: int = 4, width: int = 32) -> dict:
+    ks = jax.random.split(key, 4)
+    def conv(k, cin, cout):
+        return (jax.random.normal(k, (3, 3, cin, cout)) / jnp.sqrt(9 * cin))
+    return {
+        "c1": conv(ks[0], 3, width),
+        "c2": conv(ks[1], width, width * 2),
+        "c3": conv(ks[2], width * 2, width * 4),
+        "head": (jax.random.normal(ks[3], (width * 4, n_classes)) * 0.02),
+    }
+
+
+def _conv(x, w, stride=2):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def cnn_forward(params: dict, rgb: jnp.ndarray) -> jnp.ndarray:
+    x = jax.nn.relu(_conv(rgb, params["c1"]))
+    x = jax.nn.relu(_conv(x, params["c2"]))
+    x = jax.nn.relu(_conv(x, params["c3"]))
+    pooled = jnp.mean(x, axis=(1, 2))
+    return pooled @ params["head"]
+
+
+def cnn_loss(params, rgb, labels):
+    logits = cnn_forward(params, rgb)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, acc

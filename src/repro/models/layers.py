@@ -1,0 +1,181 @@
+"""Shared layers: norms, dense init, rotary embeddings, parallel plan.
+
+Everything is pure-functional: ``init_*`` builds param pytrees, ``spec_*``
+builds the matching PartitionSpec pytrees, apply functions are plain jnp.
+Sharding is expressed once, at the jit boundary (launch/), from the spec
+pytrees — model code stays mesh-agnostic so the same functions run on one
+CPU device in tests and on the 512-chip mesh in the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Parallelism plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    """How one arch maps onto the mesh. tp = size of the tensor axis."""
+
+    tp: int = 1
+    fsdp: bool = False                   # ZeRO-3 param shard over the data axis
+    tp_axis: str = "model"
+    fsdp_axis: str | tuple = "data"
+    dp_axes: tuple[str, ...] = ("data",)
+
+    # -- head bookkeeping (DESIGN.md §4) ------------------------------------
+
+    def pad_heads(self, n_heads: int) -> int:
+        """Q heads padded up to a multiple of the tensor axis."""
+        return int(math.ceil(n_heads / self.tp) * self.tp)
+
+    def stored_kv_heads(self, n_kv: int, n_heads: int) -> int:
+        """KV heads physically stored (vLLM-style group replication):
+        lcm(n_kv, tp) when it divides the padded Q heads, else full
+        MHA-ization (each padded Q head gets its own copy)."""
+        padded_q = self.pad_heads(n_heads)
+        stored = math.lcm(n_kv, self.tp)
+        if padded_q % stored != 0:
+            stored = padded_q
+        return stored
+
+    # -- common specs --------------------------------------------------------
+
+    @property
+    def _w_in(self) -> str | None:
+        return self.fsdp_axis if self.fsdp else None
+
+    def spec_embed(self) -> P:          # (V, D)
+        return P(self.tp_axis, self._w_in)
+
+    def spec_proj_out_tp(self) -> P:    # (D, inner): inner sharded on tp
+        return P(self._w_in, self.tp_axis)
+
+    def spec_proj_in_tp(self) -> P:     # (inner, D): inner sharded on tp
+        return P(self.tp_axis, self._w_in)
+
+    def spec_bias_tp(self) -> P:
+        return P(self.tp_axis)
+
+    def spec_replicated(self) -> P:
+        return P()
+
+    def spec_activations(self) -> P:    # (B, S, D)
+        return P(self.dp_axes, None, None)
+
+    def spec_tokens(self) -> P:         # (B, S)
+        return P(self.dp_axes, None)
+
+
+DEFAULT_PLAN = ParallelPlan()
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, dh), positions: (B, S) or (S,) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, kind: str, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], d, d_ff, dtype),
+            "w_up": dense_init(ks[1], d, d_ff, dtype),
+            "w_down": dense_init(ks[2], d_ff, d, dtype),
+        }
+    if kind == "gelu":
+        return {
+            "w_up": dense_init(ks[0], d, d_ff, dtype),
+            "b_up": jnp.zeros((d_ff,), dtype),
+            "w_down": dense_init(ks[1], d_ff, d, dtype),
+            "b_down": jnp.zeros((d,), dtype),
+        }
+    raise ValueError(kind)
+
+
+def spec_mlp(kind: str, plan: ParallelPlan) -> dict:
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": plan.spec_proj_out_tp(),
+            "w_up": plan.spec_proj_out_tp(),
+            "w_down": plan.spec_proj_in_tp(),
+        }
+    return {
+        "w_up": plan.spec_proj_out_tp(),
+        "b_up": plan.spec_bias_tp(),
+        "w_down": plan.spec_proj_in_tp(),
+        "b_down": plan.spec_replicated(),
+    }
+
+
+def apply_mlp(p: dict, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if kind == "geglu":
+        return (jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if kind == "gelu":
+        return (jax.nn.gelu(x @ p["w_up"] + p["b_up"])) @ p["w_down"] + p["b_down"]
+    raise ValueError(kind)

@@ -1,0 +1,443 @@
+"""Top-level models: causal LM, whisper-style enc-dec, VLM (+ IP2 frontend).
+
+Public API (all pure functions of (cfg, plan)):
+
+  init_params(key, cfg, plan, dtype)        -> params pytree
+  param_specs(cfg, plan)                    -> PartitionSpec pytree
+  forward(params, batch, cfg, plan)         -> (logits, aux)       # train
+  loss_fn(params, batch, cfg, plan)         -> (loss, metrics)
+  init_decode_state(cfg, plan, B, max_len)  -> state pytree
+  decode_state_specs(cfg, plan)             -> PartitionSpec pytree
+  prefill(params, batch, cfg, plan, state)  -> (logits_last, state)
+  decode_step(params, state, tokens, pos, cfg, plan) -> (logits, state)
+
+Layer stacking: full repeats of ``block_pattern`` run under one lax.scan
+(one stack per pattern position), remainder layers unrolled (blocks.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as blk
+from repro.models.layers import ParallelPlan, DEFAULT_PLAN, dense_init, embed_init, rms_norm
+from repro.models.sharding_ctx import constrain
+
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# structure helpers
+# ---------------------------------------------------------------------------
+
+def _pattern_layout(cfg: ModelConfig) -> tuple[int, tuple[str, ...], tuple[str, ...]]:
+    """(n_repeats, pattern, tail_kinds)."""
+    pat = tuple(cfg.block_pattern)
+    n_rep = cfg.n_layers // len(pat)
+    tail = cfg.layer_kinds[n_rep * len(pat):]
+    return n_rep, pat, tuple(tail)
+
+
+def _stack(trees: list) -> dict:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees) if trees else None
+
+
+# ---------------------------------------------------------------------------
+# init / specs
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig, plan: ParallelPlan = DEFAULT_PLAN,
+                dtype=jnp.float32) -> dict:
+    n_rep, pat, tail = _pattern_layout(cfg)
+    keys = jax.random.split(key, 8)
+    p: dict = {}
+    if cfg.vocab:
+        p["embed"] = embed_init(keys[0], cfg.vocab, cfg.d_model, dtype)
+        if not cfg.tie_embeddings:
+            p["lm_head"] = embed_init(keys[1], cfg.vocab, cfg.d_model, dtype)
+    p["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+
+    kb = jax.random.split(keys[2], n_rep * len(pat) + len(tail))
+    stacks = []
+    for pi, kind in enumerate(pat):
+        layers = [
+            blk.init_block(kb[r * len(pat) + pi], kind, cfg, plan, dtype)
+            for r in range(n_rep)
+        ]
+        stacks.append(_stack(layers))
+    p["stacks"] = stacks
+    p["tail"] = [
+        blk.init_block(kb[n_rep * len(pat) + i], kind, cfg, plan, dtype)
+        for i, kind in enumerate(tail)
+    ]
+
+    if cfg.is_encoder_decoder:
+        ke = jax.random.split(keys[3], cfg.n_encoder_layers + 2)
+        p["encoder"] = [
+            blk.init_block(ke[i], "attn", cfg, plan, dtype)
+            for i in range(cfg.n_encoder_layers)
+        ]
+        p["enc_norm"] = jnp.ones((cfg.d_model,), dtype)
+        # decoder cross-attention, one per decoder layer
+        from repro.models.attention import init_attention
+
+        kc = jax.random.split(keys[4], cfg.n_layers)
+        p["cross"] = _stack(
+            [
+                {
+                    "norm": jnp.ones((cfg.d_model,), dtype),
+                    "attn": init_attention(kc[i], cfg, plan, dtype),
+                }
+                for i in range(cfg.n_layers)
+            ]
+        )
+    if cfg.is_vlm:
+        vis_in = cfg.ip2_vectors if cfg.vision_frontend == "ip2" else 1024
+        p["vision_adapter"] = dense_init(keys[5], vis_in, cfg.d_model, dtype)
+        if cfg.vision_frontend == "ip2":
+            from repro.core.frontend import init_frontend_params
+
+            p["ip2"] = init_frontend_params(keys[6], _ip2_cfg(cfg))
+    return p
+
+
+def _ip2_cfg(cfg: ModelConfig):
+    from repro.core.frontend import FrontendConfig
+    from repro.core.projection import PatchSpec
+
+    return FrontendConfig(
+        patch=PatchSpec(
+            patch_h=cfg.ip2_patch, patch_w=cfg.ip2_patch, n_vectors=cfg.ip2_vectors
+        )
+    )
+
+
+def param_specs(cfg: ModelConfig, plan: ParallelPlan = DEFAULT_PLAN) -> dict:
+    n_rep, pat, tail = _pattern_layout(cfg)
+    w_in = plan.fsdp_axis if plan.fsdp else None
+    s: dict = {}
+    if cfg.vocab:
+        s["embed"] = plan.spec_embed()
+        if not cfg.tie_embeddings:
+            s["lm_head"] = plan.spec_embed()
+    s["final_norm"] = P(None)
+
+    def with_layer_dim(spec_tree):
+        return jax.tree.map(
+            lambda sp: P(None, *sp), spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    s["stacks"] = [with_layer_dim(blk.spec_block(k, cfg, plan)) for k in pat]
+    s["tail"] = [blk.spec_block(k, cfg, plan) for k in tail]
+
+    if cfg.is_encoder_decoder:
+        s["encoder"] = [blk.spec_block("attn", cfg, plan) for _ in range(cfg.n_encoder_layers)]
+        s["enc_norm"] = P(None)
+        from repro.models.attention import spec_attention
+
+        s["cross"] = with_layer_dim(
+            {"norm": P(None), "attn": spec_attention(cfg, plan)}
+        )
+    if cfg.is_vlm:
+        s["vision_adapter"] = P(None, plan.tp_axis)
+        if cfg.vision_frontend == "ip2":
+            s["ip2"] = {"a_rgb": P(plan.tp_axis, None), "bias": P(plan.tp_axis)}
+    return s
+
+
+# ---------------------------------------------------------------------------
+# embedding of mixed inputs
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: dict, batch: dict, cfg: ModelConfig) -> jnp.ndarray:
+    """Returns x (B, S, D). For VLM, image tokens are prepended; for
+    enc-dec, this embeds the *decoder* tokens only."""
+    x = params["embed"][batch["tokens"]] if cfg.vocab else None
+    if cfg.is_vlm:
+        if cfg.vision_frontend == "ip2":
+            from repro.core.frontend import apply_frontend
+
+            feats, _ = apply_frontend(params["ip2"], batch["images_rgb"], _ip2_cfg(cfg))
+            vis = feats
+        else:
+            vis = batch["image_embeds"]                    # (B, n_img, 1024)
+        vis = vis.astype(params["vision_adapter"].dtype) @ params["vision_adapter"]
+        x = vis if x is None else jnp.concatenate([vis, x.astype(vis.dtype)], axis=1)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _run_stacks(params, x, cfg, plan, states=None, causal=True, decode_pos=None):
+    """Scan over pattern repeats + unrolled tail. states mirrors params
+    layout: {"stacks": [stacked state per position], "tail": [state]}."""
+    n_rep, pat, tail = _pattern_layout(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    s = x.shape[1]
+    positions = jnp.arange(s) if decode_pos is None else None
+
+    def body(carry, xs):
+        xx, aux = carry
+        layer_params, layer_states = xs
+        new_states = []
+        for pi, kind in enumerate(pat):
+            st = None if layer_states is None else layer_states[pi]
+            xx, st_new, a = blk.apply_block(
+                layer_params[pi], kind, xx, cfg, positions, st,
+                causal=causal, decode_pos=decode_pos,
+            )
+            new_states.append(st_new)
+            aux = aux + a
+        return (xx, aux), (tuple(new_states) if layer_states is not None else 0)
+
+    if cfg.remat:
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat_policy == "dots"
+            else jax.checkpoint_policies.nothing_saveable
+        )
+        body = jax.checkpoint(body, policy=policy)
+
+    stack_states = None
+    if n_rep > 0:
+        xs_states = (
+            tuple(states["stacks"]) if states is not None else None
+        )
+        if cfg.unroll_layers:
+            carry = (x, aux_total)
+            ys_list = []
+            for r in range(n_rep):
+                xs_r = jax.tree.map(lambda a: a[r], (tuple(params["stacks"]), xs_states))
+                carry, y = body(carry, xs_r)
+                ys_list.append(y)
+            (x, aux_total) = carry
+            ys = _stack(ys_list) if states is not None else None
+        else:
+            (x, aux_total), ys = jax.lax.scan(
+                body,
+                (x, aux_total),
+                (tuple(params["stacks"]), xs_states),
+            )
+        if states is not None:
+            stack_states = list(ys)
+
+    tail_states = []
+    for i, kind in enumerate(tail):
+        st = None if states is None else states["tail"][i]
+        x, st_new, a = blk.apply_block(
+            params["tail"][i], kind, x, cfg, positions, st,
+            causal=causal, decode_pos=decode_pos,
+        )
+        tail_states.append(st_new)
+        aux_total = aux_total + a
+
+    new_states = None
+    if states is not None:
+        new_states = {"stacks": stack_states, "tail": tail_states}
+    return x, new_states, aux_total
+
+
+def _encode(params, frames, cfg, plan):
+    """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+    x = frames
+    pos = jnp.arange(x.shape[1])
+    for p in params["encoder"]:
+        x, _, _ = blk.apply_block(p, "attn", x, cfg, pos, None, causal=False)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attend(params_cross_i, x, enc_kv, cfg):
+    from repro.models.attention import attention_forward
+
+    h = rms_norm(x, params_cross_i["norm"], cfg.norm_eps)
+    out, _ = attention_forward(
+        params_cross_i["attn"], h, cfg, jnp.arange(x.shape[1]),
+        causal=False, kv_override=enc_kv, use_rope=False,
+    )
+    return constrain(x + out, "act")
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig,
+            plan: ParallelPlan = DEFAULT_PLAN) -> tuple[jnp.ndarray, dict]:
+    """Full-sequence forward -> (logits (B,S,V), aux dict)."""
+    x = embed_inputs(params, batch, cfg)
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.is_encoder_decoder:
+        enc = _encode(params, batch["frames"], cfg, plan)
+        # interleave cross-attention after each decoder block (unstacked scan
+        # is fine at whisper depth; cross params are stacked for uniformity)
+        n_rep, pat, tail = _pattern_layout(cfg)
+        pos = jnp.arange(x.shape[1])
+        for i in range(cfg.n_layers):
+            lp = (
+                jax.tree.map(lambda a: a[i], params["stacks"][0])
+                if i < n_rep else params["tail"][i - n_rep]
+            )
+            x, _, _ = blk.apply_block(lp, "attn", x, cfg, pos, None, causal=True)
+            cp = jax.tree.map(lambda a: a[i], params["cross"])
+            x = _cross_attend(cp, x, enc, cfg)
+    else:
+        x, _, a = _run_stacks(params, x, cfg, plan)
+        aux = aux + a
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = constrain(jnp.einsum("bsd,vd->bsv", x, head), "logits")
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits, {"moe_aux": aux}
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
+            plan: ParallelPlan = DEFAULT_PLAN) -> tuple[jnp.ndarray, dict]:
+    """Next-token CE over text tokens (image/frame positions excluded)."""
+    logits, aux = forward(params, batch, cfg, plan)
+    tokens = batch["tokens"]
+    n_prefix = logits.shape[1] - tokens.shape[1]   # image tokens prepended
+    logits_text = logits[:, n_prefix:, :]
+    tgt = tokens[:, 1:]
+    lg = logits_text[:, :-1, :].astype(jnp.float32)
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(tgt, jnp.float32) if mask is None else mask[:, 1:]
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    # one-hot contraction instead of take_along_axis: stays vocab-sharded
+    # (a gather over the TP-sharded vocab dim would all-gather the logits)
+    onehot = jax.nn.one_hot(tgt, lg.shape[-1], dtype=lg.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", lg, onehot)
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = ce + aux["moe_aux"]
+    return loss, {"ce": ce, "moe_aux": aux["moe_aux"]}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, plan: ParallelPlan, batch: int,
+                      max_len: int, cache_dtype=jnp.bfloat16) -> dict:
+    n_rep, pat, tail = _pattern_layout(cfg)
+
+    def stacked_state(kind):
+        one = blk.init_block_state(kind, cfg, plan, batch, max_len, cache_dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_rep, *a.shape)), one
+        )
+
+    state = {
+        "stacks": [stacked_state(k) for k in pat],
+        "tail": [blk.init_block_state(k, cfg, plan, batch, max_len, cache_dtype)
+                 for k in tail],
+    }
+    if cfg.is_encoder_decoder:
+        state["enc"] = jnp.zeros(
+            (batch, cfg.n_encoder_frames, cfg.d_model), jnp.float32
+        )
+    return state
+
+
+def decode_state_specs(cfg: ModelConfig, plan: ParallelPlan,
+                       cache_dtype=jnp.bfloat16) -> dict:
+    n_rep, pat, tail = _pattern_layout(cfg)
+
+    def with_layer_dim(tree):
+        return jax.tree.map(
+            lambda sp: P(None, *sp), tree, is_leaf=lambda x: isinstance(x, P)
+        )
+
+    s = {
+        "stacks": [with_layer_dim(blk.state_specs(k, cfg, plan, cache_dtype))
+                   for k in pat],
+        "tail": [blk.state_specs(k, cfg, plan, cache_dtype) for k in tail],
+    }
+    if cfg.is_encoder_decoder:
+        s["enc"] = P(plan.dp_axes, None, None)
+    return s
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig, plan: ParallelPlan,
+            state: dict) -> tuple[jnp.ndarray, dict]:
+    """Run the prompt through the model, filling caches/states.
+    Returns (last-position logits (B, V), state)."""
+    x = embed_inputs(params, batch, cfg)
+    if cfg.is_encoder_decoder:
+        enc = _encode(params, batch["frames"], cfg, plan)
+        state = dict(state, enc=enc)
+        n_rep, pat, tail = _pattern_layout(cfg)
+        pos = jnp.arange(x.shape[1])
+        new_stack = []
+        for i in range(cfg.n_layers):
+            lp = (
+                jax.tree.map(lambda a: a[i], params["stacks"][0])
+                if i < n_rep else params["tail"][i - n_rep]
+            )
+            st = jax.tree.map(lambda a: a[i], state["stacks"][0]) if i < n_rep \
+                else state["tail"][i - n_rep]
+            x, st_new, _ = blk.apply_block(lp, "attn", x, cfg, pos, st, causal=True)
+            if i < n_rep:
+                new_stack.append(st_new)
+            else:
+                state["tail"][i - n_rep] = st_new
+            cp = jax.tree.map(lambda a: a[i], params["cross"])
+            x = _cross_attend(cp, x, enc, cfg)
+        state["stacks"] = [_stack(new_stack)]
+    else:
+        x, state, _ = _run_stacks(params, x, cfg, plan, states=state)
+
+    x = rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head)[:, 0]
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, state
+
+
+def decode_step(params: dict, state: dict, tokens: jnp.ndarray,
+                pos: jnp.ndarray, cfg: ModelConfig,
+                plan: ParallelPlan = DEFAULT_PLAN) -> tuple[jnp.ndarray, dict]:
+    """One token step. tokens (B,) int32, pos scalar int32 (absolute).
+    Returns (logits (B, V), new state)."""
+    x = params["embed"][tokens][:, None, :]                    # (B, 1, D)
+
+    if cfg.is_encoder_decoder:
+        enc = state["enc"]
+        n_rep, pat, tail = _pattern_layout(cfg)
+        new_stack = []
+        for i in range(cfg.n_layers):
+            lp = (
+                jax.tree.map(lambda a: a[i], params["stacks"][0])
+                if i < n_rep else params["tail"][i - n_rep]
+            )
+            st = jax.tree.map(lambda a: a[i], state["stacks"][0]) if i < n_rep \
+                else state["tail"][i - n_rep]
+            x, st_new, _ = blk.apply_block(
+                lp, "attn", x, cfg, None, st, decode_pos=pos
+            )
+            if i < n_rep:
+                new_stack.append(st_new)
+            else:
+                state["tail"][i - n_rep] = st_new
+            cp = jax.tree.map(lambda a: a[i], params["cross"])
+            x = _cross_attend(cp, x, enc, cfg)
+        state = dict(state)
+        state["stacks"] = [_stack(new_stack)]
+        new_states = state
+    else:
+        x, new_states, _ = _run_stacks(
+            params, x, cfg, plan, states=state, decode_pos=pos
+        )
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head)[:, 0]
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, new_states

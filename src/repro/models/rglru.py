@@ -1,0 +1,127 @@
+"""RecurrentGemma recurrent block: conv1d + RG-LRU (arXiv:2402.19427).
+
+Block: x -> { branch A: linear -> causal conv1d(4) -> RG-LRU,
+              branch B: linear -> gelu } -> A*B -> out linear.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)            # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            # input gate
+    a_t = exp(c * softplus(Λ) * (-r_t))     # a = σ(Λ)^(c·r); c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses a parallel associative scan over the linear recurrence
+(sub-quadratic, O(S log S) depth); decode carries h as O(1) state — this is
+why recurrentgemma runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParallelPlan, dense_init
+
+_C = 8.0
+CONV_K = 4
+
+
+def init_rglru_block(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": dense_init(ks[0], d, d, dtype),
+        "w_gate": dense_init(ks[1], d, d, dtype),
+        "w_out": dense_init(ks[2], d, d, dtype),
+        "conv_w": (jax.random.normal(ks[3], (CONV_K, d)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d,), dtype),
+        "wa": dense_init(ks[4], d, d, dtype),
+        "ba": jnp.zeros((d,), dtype),
+        "wxg": dense_init(ks[5], d, d, dtype),
+        "bxg": jnp.zeros((d,), dtype),
+        # Λ init so a ∈ (0.9, 0.999) at r=1 (paper's init range)
+        "lam": (jax.random.uniform(ks[6], (d,), minval=2.0, maxval=6.0)).astype(dtype),
+    }
+
+
+def spec_rglru_block(cfg: ModelConfig, plan: ParallelPlan) -> dict:
+    from jax.sharding import PartitionSpec as P
+
+    w_in = plan.fsdp_axis if plan.fsdp else None
+    tp = plan.tp_axis
+    return {
+        "w_x": P(w_in, tp), "w_gate": P(w_in, tp), "w_out": P(tp, w_in),
+        "conv_w": P(None, tp), "conv_b": P(tp),
+        "wa": P(w_in, tp), "ba": P(tp),
+        "wxg": P(w_in, tp), "bxg": P(tp),
+        "lam": P(tp),
+    }
+
+
+def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                   state: jnp.ndarray | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv, kernel CONV_K. x (B,S,D); state (B,K-1,D)."""
+    if state is None:
+        state = jnp.zeros((x.shape[0], CONV_K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(CONV_K)) + b
+    return out, xp[:, -(CONV_K - 1) :, :]
+
+
+def _gates(p: dict, xc: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """log(a_t) and the input branch i_t ⊙ x_t, both fp32."""
+    x32 = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ p["wa"].astype(jnp.float32) + p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(x32 @ p["wxg"].astype(jnp.float32) + p["bxg"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a2 = jnp.exp(2.0 * log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-9)) * (i * x32)
+    return log_a, gated_in
+
+
+def rglru_scan(p: dict, xc: jnp.ndarray, h0: jnp.ndarray | None = None
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Parallel linear-recurrence scan. xc (B,S,D) -> (h (B,S,D), h_last)."""
+    log_a, gi = _gates(p, xc)                      # (B,S,D) fp32
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, b1 * jnp.exp(a2) + b2
+
+    if h0 is not None:
+        gi = gi.at[:, 0, :].add(h0.astype(jnp.float32) * jnp.exp(log_a[:, 0, :]))
+    la, h = jax.lax.associative_scan(combine, (log_a, gi), axis=1)
+    return h.astype(xc.dtype), h[:, -1, :]
+
+
+def rglru_step(p: dict, xc: jnp.ndarray, h: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step. xc (B,1,D), h (B,D) -> (out (B,1,D), h_new)."""
+    log_a, gi = _gates(p, xc)
+    h_new = jnp.exp(log_a[:, 0, :]) * h.astype(jnp.float32) + gi[:, 0, :]
+    return h_new[:, None, :].astype(xc.dtype), h_new
+
+
+def recurrent_block_forward(
+    p: dict, x: jnp.ndarray, state: dict | None = None
+) -> tuple[jnp.ndarray, dict]:
+    """Full block. state = {"h": (B,D) fp32, "conv": (B,K-1,D)} or None."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    xb = x @ p["w_x"]
+    conv_state = None if state is None else state["conv"]
+    xc, conv_new = _causal_conv1d(xb, p["conv_w"], p["conv_b"], conv_state)
+    if x.shape[1] == 1 and state is not None:
+        h_seq, h_last = rglru_step(p, xc, state["h"])
+    else:
+        h0 = None if state is None else state["h"]
+        h_seq, h_last = rglru_scan(p, xc, h0)
+    out = (h_seq * gate) @ p["w_out"]
+    return out, {"h": h_last, "conv": conv_new}
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, d), jnp.bfloat16),
+    }

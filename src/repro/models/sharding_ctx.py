@@ -1,0 +1,38 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; the launcher installs a constrainer that maps
+logical names to ``jax.lax.with_sharding_constraint`` on the live mesh.
+On a single CPU device (tests) nothing is installed and ``constrain`` is a
+no-op. Names: act (B,S,D), tokens (B,S), logits (B,S,V), moe_buf (E,C,D),
+kv (B,T,H,dh), heads (B,S,H,dh).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+_CONSTRAINER: Callable[[jnp.ndarray, str], jnp.ndarray] | None = None
+_MOE_CTX: dict | None = None   # {"mesh", "dp", "tp"} -> shard_map a2a dispatch
+
+
+def set_constrainer(fn: Callable[[jnp.ndarray, str], jnp.ndarray] | None) -> None:
+    global _CONSTRAINER
+    _CONSTRAINER = fn
+
+
+def constrain(x: jnp.ndarray, name: str) -> jnp.ndarray:
+    if _CONSTRAINER is None:
+        return x
+    return _CONSTRAINER(x, name)
+
+
+def set_moe_ctx(info: dict | None) -> None:
+    """Enable the explicit all_to_all MoE dispatch (§Perf A2) under a mesh."""
+    global _MOE_CTX
+    _MOE_CTX = info
+
+
+def get_moe_ctx() -> dict | None:
+    return _MOE_CTX

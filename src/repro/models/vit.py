@@ -1,0 +1,112 @@
+"""IP2-ViT: the paper's backend — patch-token transformer classifier fed by
+the IP2 analog frontend (paper §1: "transformer-based backend model for
+object classification and detection").
+
+Pipeline per frame:
+  RGB scene -> IP2Frontend (AA optics, Bayer, salient-patch analog
+  projection, edge ADC) -> per-patch M-dim features == tokens
+  -> linear embed -> transformer encoder (optionally with Fig. 4 QTH
+  power-of-2 attention) -> masked mean-pool over ACTIVE patches -> classes.
+
+The frontend is differentiable (STE quantizers), so the co-design loop
+trains A (the in-pixel weights) jointly with the backend — the study the
+paper describes in §1/§2.1.3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.frontend import FrontendConfig, apply_frontend, init_frontend_params
+from repro.models.layers import DEFAULT_PLAN, apply_mlp, dense_init, init_mlp, rms_norm
+from repro.models.attention import init_attention, attention_forward
+from repro.configs.base import ModelConfig
+from repro.core.qth_attention import QTHSpec, qth_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    frontend: FrontendConfig = FrontendConfig()
+    n_classes: int = 4
+    n_layers: int = 4
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 256
+    qth: bool = False          # Fig. 4 power-of-2 attention in the backend
+    norm_eps: float = 1e-5
+
+    def backbone_cfg(self) -> ModelConfig:
+        return ModelConfig(
+            name="ip2-vit-backbone", family="vision",
+            n_layers=self.n_layers, d_model=self.d_model,
+            n_heads=self.n_heads, n_kv_heads=self.n_heads,
+            d_ff=self.d_ff, vocab=0, head_dim=self.d_model // self.n_heads,
+            mlp_kind="gelu", qkv_bias=True, remat=False,
+        )
+
+
+def init_vit(key, cfg: ViTConfig) -> dict:
+    bb = cfg.backbone_cfg()
+    ks = jax.random.split(key, cfg.n_layers * 2 + 4)
+    p = {
+        "ip2": init_frontend_params(ks[0], cfg.frontend),
+        "embed": dense_init(ks[1], cfg.frontend.patch.n_vectors, cfg.d_model),
+        "pos": jax.random.normal(ks[2], (cfg.frontend.n_patches, cfg.d_model)) * 0.02,
+        "layers": [],
+        "final_norm": jnp.ones((cfg.d_model,)),
+        "head": dense_init(ks[3], cfg.d_model, cfg.n_classes),
+    }
+    for i in range(cfg.n_layers):
+        p["layers"].append({
+            "norm1": jnp.ones((cfg.d_model,)),
+            "attn": init_attention(ks[4 + 2 * i], bb, DEFAULT_PLAN),
+            "norm2": jnp.ones((cfg.d_model,)),
+            "mlp": init_mlp(ks[5 + 2 * i], cfg.d_model, cfg.d_ff, "gelu"),
+        })
+    return p
+
+
+def vit_forward(params: dict, rgb: jnp.ndarray, cfg: ViTConfig,
+                mask=None) -> jnp.ndarray:
+    """rgb (B, H, W, 3) -> class logits (B, n_classes)."""
+    bb = cfg.backbone_cfg()
+    feats, mask = apply_frontend(params["ip2"], rgb, cfg.frontend, mask=mask)
+    x = feats @ params["embed"] + params["pos"][None]
+    positions = jnp.arange(x.shape[1])
+    for lp in params["layers"]:
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        if cfg.qth:
+            # Fig. 4: power-of-2 quantized attention coefficients
+            d, hd = cfg.d_model, cfg.d_model // cfg.n_heads
+            q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"]) + lp["attn"]["bq"]
+            k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"]) + lp["attn"]["bk"]
+            v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"]) + lp["attn"]["bv"]
+            o = qth_attention(
+                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3), QTHSpec()
+            ).transpose(0, 2, 1, 3)
+            out = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        else:
+            out, _ = attention_forward(
+                lp["attn"], h, bb, positions, causal=False, use_rope=False
+            )
+        x = x + out
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + apply_mlp(lp["mlp"], h, "gelu")
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    # masked mean pool over the ACTIVE (ADC-converted) patches only
+    w = mask.astype(x.dtype)[..., None]
+    pooled = jnp.sum(x * w, axis=1) / jnp.maximum(jnp.sum(w, axis=1), 1.0)
+    return pooled @ params["head"]
+
+
+def vit_loss(params, rgb, labels, cfg: ViTConfig):
+    logits = vit_forward(params, rgb, cfg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, acc

@@ -1,0 +1,345 @@
+"""xLSTM blocks — mLSTM (matrix memory) + sLSTM (scalar memory), arXiv:2405.04517.
+
+mLSTM: attention-like parallel form for training/prefill (stabilized
+exponential gating), O(1)-state recurrent form for decode — xlstm-1.3b
+therefore runs the long_500k cell with constant memory.
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T      (matrix memory, per head)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t · q_t|, exp(-m_t))
+
+sLSTM: strictly sequential scalar-memory cell with block-diagonal
+recurrent weights (one block per head); lax.scan over time.
+
+Block layout (d_ff = 0 in the assigned config — the blocks carry their own
+up/down projections, proj_factor 2):
+  mLSTM block: LN -> up(2·di) -> [conv4 -> silu -> q,k | v] -> mLSTM
+               -> GN -> ⊙ silu(z) -> down
+  sLSTM block: LN -> sLSTM cell (4 gates, recurrent h) -> GN -> down
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParallelPlan, dense_init
+from repro.models.rglru import _causal_conv1d, CONV_K
+
+
+def _heads(cfg: ModelConfig) -> tuple[int, int, int]:
+    di = cfg.d_inner_xlstm
+    nh = cfg.n_heads
+    return di, nh, di // nh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    di, nh, dh = _heads(cfg)
+    ks = jax.random.split(key, 9)
+    blk = lambda k: (jax.random.normal(k, (nh, dh, dh)) / jnp.sqrt(dh)).astype(dtype)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, di)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": blk(ks[2]), "wk": blk(ks[3]), "wv": blk(ks[4]),
+        "w_i": dense_init(ks[5], di, nh, dtype),
+        "b_i": jnp.zeros((nh,), dtype),
+        "w_f": dense_init(ks[6], di, nh, dtype),
+        "b_f": jnp.full((nh,), 3.0, dtype),      # forget-gate bias: remember
+        "gn": jnp.ones((di,), dtype),
+        "w_down": dense_init(ks[7], di, d, dtype),
+    }
+
+
+def spec_mlstm_block(cfg: ModelConfig, plan: ParallelPlan) -> dict:
+    from jax.sharding import PartitionSpec as P
+
+    w_in = plan.fsdp_axis if plan.fsdp else None
+    tp = plan.tp_axis
+    return {
+        "w_up": P(w_in, tp),
+        "conv_w": P(None, tp), "conv_b": P(tp),
+        # heads (nh=4) generally don't divide tp=16 -> shard the dh dims
+        "wq": P(None, None, tp), "wk": P(None, None, tp), "wv": P(None, None, tp),
+        "w_i": P(tp, None), "b_i": P(None),
+        "w_f": P(tp, None), "b_f": P(None),
+        "gn": P(tp),
+        "w_down": P(tp, w_in),
+    }
+
+
+def _group_norm(x: jnp.ndarray, scale: jnp.ndarray, nh: int) -> jnp.ndarray:
+    """Per-head RMS norm over the head channels. x (..., di)."""
+    shp = x.shape
+    xh = x.reshape(*shp[:-1], nh, shp[-1] // nh).astype(jnp.float32)
+    var = jnp.mean(xh * xh, axis=-1, keepdims=True)
+    xh = xh * jax.lax.rsqrt(var + 1e-6)
+    return (xh.reshape(shp) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mlstm_qkvif(p: dict, x: jnp.ndarray, conv_state=None):
+    """x (B,S,D) -> q,k,v (B,S,NH,dh), i,f raw gates (B,S,NH), z, conv_state."""
+    nh = p["wq"].shape[0]
+    di = p["conv_b"].shape[0]
+    up = x @ p["w_up"]
+    xi, z = jnp.split(up, 2, axis=-1)
+    xc, conv_new = _causal_conv1d(xi, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    b, s, _ = x.shape
+    xch = xc.reshape(b, s, nh, di // nh)
+    xih = xi.reshape(b, s, nh, di // nh)
+    q = jnp.einsum("bsnd,nde->bsne", xch, p["wq"])
+    k = jnp.einsum("bsnd,nde->bsne", xch, p["wk"])
+    v = jnp.einsum("bsnd,nde->bsne", xih, p["wv"])
+    i_raw = (xi @ p["w_i"] + p["b_i"]).astype(jnp.float32)
+    f_raw = (xi @ p["w_f"] + p["b_f"]).astype(jnp.float32)
+    return q, k, v, i_raw, f_raw, z, conv_new
+
+
+def mlstm_parallel(q, k, v, i_raw, f_raw) -> jnp.ndarray:
+    """Stabilized parallel (quadratic) form. q/k/v (B,S,NH,dh) -> (B,S,NH,dh)."""
+    b, s, nh, dh = q.shape
+    lf = jax.nn.log_sigmoid(f_raw)                     # (B,S,NH)
+    lfc = jnp.cumsum(lf, axis=1)                       # inclusive Σ log f
+    # pair weight (t, j): lfc_t - lfc_j + i_j, j <= t
+    dmat = lfc[:, :, None, :] - lfc[:, None, :, :] + i_raw[:, None, :, :]
+    tpos = jnp.arange(s)
+    causal = tpos[:, None] >= tpos[None, :]
+    dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)   # (B,T,J,NH)
+    m = jnp.max(dmat, axis=2)                          # (B,T,NH)
+    dexp = jnp.exp(dmat - m[:, :, None, :])
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    sc = jnp.einsum("btnd,bjnd->btjn", q.astype(jnp.float32) * scale,
+                    k.astype(jnp.float32)) * dexp
+    num = jnp.einsum("btjn,bjnd->btnd", sc, v.astype(jnp.float32))
+    denom = jnp.maximum(jnp.abs(jnp.sum(sc, axis=2)), jnp.exp(-m))  # (B,T,NH)
+    return (num / denom[..., None]).astype(q.dtype)
+
+
+def mlstm_step(state: dict, q, k, v, i_raw, f_raw):
+    """Recurrent step. q/k/v (B,NH,dh); state {C (B,NH,dh,dh), n, m}."""
+    lf = jax.nn.log_sigmoid(f_raw)                     # (B,NH)
+    m_new = jnp.maximum(lf + state["m"], i_raw)
+    fp = jnp.exp(lf + state["m"] - m_new)[..., None]
+    ip = jnp.exp(i_raw - m_new)[..., None]
+    k32, v32, q32 = (t.astype(jnp.float32) for t in (k, v, q))
+    c_new = fp[..., None] * state["C"] + ip[..., None] * (v32[..., :, None] * k32[..., None, :])
+    n_new = fp * state["n"] + ip * k32
+    dh = q.shape[-1]
+    q32 = q32 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    num = jnp.einsum("bnvk,bnk->bnv", c_new, q32)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bnk,bnk->bn", n_new, q32)), jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(q.dtype)
+    return {"C": c_new, "n": n_new, "m": m_new}, h
+
+
+def mlstm_chunkwise(q, k, v, i_raw, f_raw, chunk: int) -> tuple[jnp.ndarray, dict]:
+    """Chunkwise-parallel mLSTM (§Perf X1): O(S·L) memory instead of the
+    O(S²) stabilized gate matrix — intra-chunk quadratic attention +
+    inter-chunk recurrent state carry, numerically identical (same
+    stabilizer algebra) to the parallel form.
+
+    Returns (h (B,S,NH,dh), final recurrent cell state)."""
+    b, s, nh, dh = q.shape
+    if s % chunk:
+        pad = chunk - s % chunk
+        padw = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        q, k, v = (jnp.pad(t, padw) for t in (q, k, v))
+        i_raw = jnp.pad(i_raw, [(0, 0), (0, pad), (0, 0)], constant_values=-1e30)
+        f_raw = jnp.pad(f_raw, [(0, 0), (0, pad), (0, 0)], constant_values=30.0)
+    n_chunks = q.shape[1] // chunk
+
+    def split(t):
+        return t.reshape(b, n_chunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, ic, fc = (split(t.astype(jnp.float32)) for t in (q, k, v, i_raw, f_raw))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    def step(carry, inp):
+        c_run, n_run, m_run = carry
+        qq, kk, vv, ii, ff = inp                       # (B, L, NH, dh)/(B, L, NH)
+        lf = jax.nn.log_sigmoid(ff)
+        lfc = jnp.cumsum(lf, axis=1)                   # in-chunk Σ log f
+        # intra pair weights (t, j): lfc_t - lfc_j + i_j, j <= t
+        dmat = lfc[:, :, None, :] - lfc[:, None, :, :] + ii[:, None, :, :]
+        tpos = jnp.arange(chunk)
+        causal = tpos[:, None] >= tpos[None, :]
+        dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+        m_intra = jnp.max(dmat, axis=2)                # (B, L, NH)
+        w_inter = lfc + m_run[:, None, :]              # carry weight at t
+        m_t = jnp.maximum(m_intra, w_inter)
+        dexp = jnp.exp(dmat - m_t[:, :, None, :])
+        sc = jnp.einsum("btnd,bjnd->btjn", qq * scale, kk) * dexp
+        num = jnp.einsum("btjn,bjnd->btnd", sc, vv)
+        den = jnp.sum(sc, axis=2)                      # (B, L, NH)
+        e_int = jnp.exp(w_inter - m_t)                 # (B, L, NH)
+        num = num + e_int[..., None] * jnp.einsum(
+            "bnvk,btnk->btnv", c_run, qq * scale
+        )
+        den = den + e_int * jnp.einsum("bnk,btnk->btn", n_run, qq * scale)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # fold the chunk into the carry
+        w_end = lfc[:, -1:, :] - lfc + ii              # (B, L, NH)
+        m_fold = jnp.maximum(jnp.max(w_end, axis=1), lfc[:, -1, :] + m_run)
+        we = jnp.exp(w_end - m_fold[:, None, :])
+        carry_w = jnp.exp(lfc[:, -1, :] + m_run - m_fold)
+        c_new = carry_w[..., None, None] * c_run + jnp.einsum(
+            "btn,btnv,btnk->bnvk", we, vv, kk
+        )
+        n_new = carry_w[..., None] * n_run + jnp.einsum("btn,btnk->bnk", we, kk)
+        return (c_new, n_new, m_fold), h
+
+    c0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, nh, dh), jnp.float32)
+    m0 = jnp.full((b, nh), -1e30, jnp.float32)
+    (c_f, n_f, m_f), hs = jax.lax.scan(step, (c0, n0, m0), (qc, kc, vc, ic, fc))
+    h = hs.swapaxes(0, 1).reshape(b, n_chunks * chunk, nh, dh)[:, :s]
+    return h.astype(q.dtype), {"C": c_f, "n": n_f, "m": m_f}
+
+
+def mlstm_final_state(k, v, i_raw, f_raw) -> dict:
+    """Fold a full sequence into the end-of-sequence recurrent state:
+    C_S = Σ_j exp(lfc_S - lfc_j + i_j - m_S) v_j k_j^T (stabilized)."""
+    lf = jax.nn.log_sigmoid(f_raw)
+    lfc = jnp.cumsum(lf, axis=1)                       # (B,S,NH)
+    w = lfc[:, -1:, :] - lfc + i_raw                   # (B,S,NH)
+    m = jnp.max(w, axis=1)                             # (B,NH)
+    ww = jnp.exp(w - m[:, None, :])
+    k32, v32 = k.astype(jnp.float32), v.astype(jnp.float32)
+    c = jnp.einsum("bsn,bsnv,bsnk->bnvk", ww, v32, k32)
+    n = jnp.einsum("bsn,bsnk->bnk", ww, k32)
+    return {"C": c, "n": n, "m": m}
+
+
+def mlstm_block_forward(p: dict, x: jnp.ndarray, state: dict | None = None,
+                        chunk_size: int = 0) -> tuple[jnp.ndarray, dict]:
+    nh = p["wq"].shape[0]
+    conv_state = None if state is None else state["conv"]
+    q, k, v, i_raw, f_raw, z, conv_new = _mlstm_qkvif(p, x, conv_state)
+    if x.shape[1] == 1 and state is not None:
+        cell = {"C": state["C"], "n": state["n"], "m": state["m"]}
+        cell_new, h = mlstm_step(
+            cell, q[:, 0], k[:, 0], v[:, 0], i_raw[:, 0], f_raw[:, 0]
+        )
+        h = h[:, None]
+        new_state = {"conv": conv_new, **cell_new}
+    elif chunk_size and x.shape[1] > chunk_size:
+        # §Perf X1: chunkwise-parallel form, O(S·L) memory
+        h, cell = mlstm_chunkwise(q, k, v, i_raw, f_raw, chunk_size)
+        new_state = {"conv": conv_new, **cell}
+    else:
+        h = mlstm_parallel(q, k, v, i_raw, f_raw)
+        # fold the sequence into the final recurrent state (prefill -> decode)
+        cell = mlstm_final_state(k, v, i_raw, f_raw)
+        new_state = {"conv": conv_new, **cell}
+    b, s, _, dh = h.shape
+    hflat = h.reshape(b, s, nh * dh)
+    out = (_group_norm(hflat, p["gn"], nh) * jax.nn.silu(z)) @ p["w_down"]
+    return out, new_state
+
+
+def init_mlstm_state_cell(batch: int, nh: int, dh: int) -> dict:
+    return {
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> dict:
+    di, nh, dh = _heads(cfg)
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, di), jnp.bfloat16),
+        **init_mlstm_state_cell(batch, nh, dh),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm_block(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    ks = jax.random.split(key, 4)
+    return {
+        "w": dense_init(ks[0], d, 4 * d, dtype),               # z,i,f,o from x
+        "r": (jax.random.normal(ks[1], (4, nh, dh, dh)) / jnp.sqrt(dh)).astype(dtype),
+        "b": jnp.concatenate(
+            [jnp.zeros((2 * d,), dtype), jnp.full((d,), 3.0, dtype), jnp.zeros((d,), dtype)]
+        ),
+        "gn": jnp.ones((d,), dtype),
+        "w_down": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def spec_slstm_block(cfg: ModelConfig, plan: ParallelPlan) -> dict:
+    from jax.sharding import PartitionSpec as P
+
+    w_in = plan.fsdp_axis if plan.fsdp else None
+    tp = plan.tp_axis
+    return {
+        "w": P(w_in, tp),
+        "r": P(None, None, None, tp),
+        "b": P(tp),
+        "gn": P(tp),
+        "w_down": P(tp, w_in),
+    }
+
+
+def slstm_forward(p: dict, x: jnp.ndarray, state: dict | None = None
+                  ) -> tuple[jnp.ndarray, dict]:
+    """x (B,S,D). Sequential scan over time (sLSTM is not parallelizable)."""
+    b, s, d = x.shape
+    nh = p["r"].shape[1]
+    dh = d // nh
+    if state is None:
+        state = {
+            "c": jnp.zeros((b, nh, dh), jnp.float32),
+            "n": jnp.zeros((b, nh, dh), jnp.float32),
+            "m": jnp.full((b, nh, dh), -1e30, jnp.float32),
+            "h": jnp.zeros((b, d), jnp.float32),
+        }
+    gx = (x @ p["w"] + p["b"]).astype(jnp.float32)             # (B,S,4D)
+    gx = gx.reshape(b, s, 4, nh, dh)
+
+    def step(carry, g_t):
+        c, n, m, h = carry
+        hh = h.reshape(b, nh, dh)
+        rec = jnp.einsum("bnd,gnde->gbne", hh, p["r"].astype(jnp.float32))
+        z_r, i_r, f_r, o_r = (g_t[:, gi] + rec[gi] for gi in range(4))
+        z = jnp.tanh(z_r)
+        o = jax.nn.sigmoid(o_r)
+        lf = jax.nn.log_sigmoid(f_r)
+        m_new = jnp.maximum(lf + m, i_r)
+        ip = jnp.exp(i_r - m_new)
+        fp = jnp.exp(lf + m - m_new)
+        c_new = fp * c + ip * z
+        n_new = fp * n + ip
+        h_new = (o * c_new / jnp.maximum(n_new, 1e-6)).reshape(b, d)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    carry0 = (state["c"], state["n"], state["m"], state["h"])
+    (c, n, m, h), hs = jax.lax.scan(step, carry0, gx.transpose(1, 0, 2, 3, 4))
+    hs = hs.transpose(1, 0, 2)                                 # (B,S,D)
+    out = _group_norm(hs.astype(x.dtype), p["gn"], nh) @ p["w_down"]
+    return out, {"c": c, "n": n, "m": m, "h": h}
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    return {
+        "c": jnp.zeros((batch, nh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh, dh), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }

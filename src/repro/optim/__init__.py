@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamWConfig, adamw_update, global_norm, init_opt_state, opt_state_specs
+from repro.optim.schedule import cosine_with_warmup
+
+__all__ = [
+    "AdamWConfig", "adamw_update", "global_norm", "init_opt_state",
+    "opt_state_specs", "cosine_with_warmup",
+]

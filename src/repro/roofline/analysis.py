@@ -1,0 +1,151 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / ICI_bw
+
+Sources: ``compiled.cost_analysis()`` (per-partition flops / bytes
+accessed) and the partitioned HLO text for collective operand bytes.
+
+XLA's cost analysis counts a ``while`` (lax.scan) body ONCE regardless of
+trip count, so per-layer costs of scanned stacks are recovered by
+two-point extrapolation: lower the model UNROLLED at 1x and 2x the block
+pattern, take the difference as the per-repeat cost, and extrapolate to
+the full depth. This is exact for homogeneous stacks (the difference
+cancels embed/head/optimizer overheads) and is validated against the
+analytic MODEL_FLOPS = 6·N·D in the tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9_\[\]\{\},\. ]+?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.I,
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _line_result_bytes(line: str) -> int:
+    """Bytes of the result shape(s) on an HLO op line ('%x = TYPE op(...')."""
+    lhs = line.split("=", 1)[1] if "=" in line else line
+    head = lhs.split("(", 1)[0]
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(head):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective kind (result-shape sized)."""
+    out: dict[str, int] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1).lower()
+        if "-done" in line.split("(")[0]:
+            continue  # avoid double count of start/done pairs
+        b = _line_result_bytes(line)
+        out[kind] = out.get(kind, 0) + b
+        count[kind] = count.get(kind, 0) + 1
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    out["counts"] = count
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def extrapolate(point1: dict, point2: dict, n_rep1: int, n_rep2: int,
+                n_rep_full: int) -> RooflineTerms:
+    """Two-point linear extrapolation of per-chip costs to full depth."""
+    def extr(key):
+        v1, v2 = point1[key], point2[key]
+        slope = (v2 - v1) / max(n_rep2 - n_rep1, 1)
+        return v1 + slope * (n_rep_full - n_rep1)
+
+    return RooflineTerms(
+        flops_per_chip=extr("flops"),
+        bytes_per_chip=extr("bytes"),
+        coll_bytes_per_chip=extr("coll_bytes"),
+    )
+
+
+def cost_point(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_bytes": float(coll["total"]),
+        "coll_detail": {k: v for k, v in coll.items() if k not in ("total",)},
+    }
+
+
+def model_flops(n_active_params: int, tokens: int, is_train: bool) -> float:
+    """MODEL_FLOPS = 6·N·D (train: fwd+bwd) or 2·N·D (inference fwd)."""
+    return (6.0 if is_train else 2.0) * n_active_params * tokens

@@ -1,0 +1,111 @@
+"""Render EXPERIMENTS.md tables from results/dryrun.json.
+
+    PYTHONPATH=src python -m repro.roofline.report results/dryrun.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_table(results: dict, mesh: str = "single") -> str:
+    rows = []
+    hdr = ("| cell | mb | peak/dev GiB | fits | t_compute s | t_memory s | "
+           "t_collective s | bottleneck | MODEL/HLO flops | t_mem floor s |")
+    sep = "|" + "---|" * 10
+    rows.append(hdr)
+    rows.append(sep)
+    for k in sorted(results):
+        if not k.endswith("/" + mesh):
+            continue
+        v = results[k]
+        if "error" in v:
+            rows.append(f"| {k[: -len(mesh) - 1]} | ERROR | | | | | | | | |")
+            continue
+        m = v["memory"]
+        rl = v.get("roofline", {})
+        rows.append(
+            f"| {k[: -len(mesh) - 1]} | {v.get('microbatches', '-')} "
+            f"| {m['approx_peak_per_device'] / 2**30:.2f} "
+            f"| {'Y' if m['fits_hbm_16g'] else 'N'} "
+            f"| {rl.get('t_compute_s', float('nan')):.4f} "
+            f"| {rl.get('t_memory_s', float('nan')):.3f} "
+            f"| {rl.get('t_collective_s', float('nan')):.4f} "
+            f"| {rl.get('bottleneck', '-')} "
+            f"| {rl.get('useful_flops_ratio', float('nan')):.3f} "
+            f"| {v.get('t_memory_floor_s', float('nan')):.4f} |"
+        )
+    return "\n".join(rows)
+
+
+def fmt_dryrun_table(results: dict) -> str:
+    rows = ["| cell | mesh | compile s | peak/dev GiB | fits 16GiB | collectives (counts) |",
+            "|---|---|---|---|---|---|"]
+    for k in sorted(results):
+        v = results[k]
+        if "error" in v:
+            rows.append(f"| {k} | ERROR | | | | |")
+            continue
+        m = v["memory"]
+        coll = ", ".join(f"{kk}:{vv}" for kk, vv in sorted(v["full_collectives"].items()))
+        arch_shape, mesh = k.rsplit("/", 1)
+        rows.append(
+            f"| {arch_shape} | {mesh} | {v['compile_s']} "
+            f"| {m['approx_peak_per_device'] / 2**30:.2f} "
+            f"| {'Y' if m['fits_hbm_16g'] else 'N'} | {coll} |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_fraction(cell: dict, use_floor: bool = False) -> float | None:
+    """MODEL_FLOPS time / binding-term time — the fraction of the chip's
+    peak the step's *useful* math achieves if the step runs exactly at its
+    roofline bound. use_floor swaps the fusion-blind XLA byte count for
+    the fusion-aware argument-traffic floor."""
+    from repro.launch.mesh import PEAK_FLOPS_BF16
+
+    rl = cell.get("roofline")
+    if not rl:
+        return None
+    t_model = rl["model_flops_per_chip"] / PEAK_FLOPS_BF16
+    t_mem = cell.get("t_memory_floor_s", 0.0) if use_floor else rl["t_memory_s"]
+    t_bound = max(rl["t_compute_s"], t_mem, rl["t_collective_s"])
+    return t_model / t_bound if t_bound else None
+
+
+def fmt_fraction_table(base: dict, opt: dict) -> str:
+    rows = ["| cell | frac (XLA-bytes) base→opt | frac (traffic-floor) base→opt |",
+            "|---|---|---|"]
+    for k in sorted(opt):
+        if not k.endswith("/single"):
+            continue
+        fb = roofline_fraction(base.get(k, {}))
+        fo = roofline_fraction(opt[k])
+        gb = roofline_fraction(base.get(k, {}), use_floor=True)
+        go = roofline_fraction(opt[k], use_floor=True)
+        if fo is None:
+            continue
+        rows.append(
+            f"| {k[:-7]} | {fb or 0:.4f} → {fo:.4f} | {gb or 0:.3f} → {go or 0:.3f} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    with open(path) as f:
+        results = json.load(f)
+    print("## Roofline (single-pod 16x16)\n")
+    print(fmt_table(results, "single"))
+    print("\n## Dry-run gate (both meshes)\n")
+    print(fmt_dryrun_table(results))
+    if len(sys.argv) > 2:
+        with open(sys.argv[2]) as f:
+            opt = json.load(f)
+        print("\n## Roofline fractions (baseline -> optimized)\n")
+        print(fmt_fraction_table(results, opt))
+
+
+if __name__ == "__main__":
+    main()

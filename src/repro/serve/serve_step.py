@@ -1,0 +1,30 @@
+"""Serving steps: batched prefill and single-token decode with greedy /
+temperature sampling. Factories return pure functions for jit."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.models.layers import ParallelPlan
+
+
+def make_prefill_step(cfg: ModelConfig, plan: ParallelPlan):
+    def prefill_step(params, batch, state):
+        return lm.prefill(params, batch, cfg, plan, state)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, plan: ParallelPlan, temperature: float = 0.0):
+    def decode_one(params, state, tokens, pos, rng):
+        logits, state = lm.decode_step(params, state, tokens, pos, cfg, plan)
+        if temperature > 0.0:
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), logits, state
+
+    return decode_one

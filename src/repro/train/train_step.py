@@ -1,0 +1,85 @@
+"""Training step: bf16 compute cast, grad, AdamW update, optional
+microbatch gradient accumulation (scan). Pure function factory — the
+launcher wraps it in jit with the full sharding pytrees.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.models.layers import ParallelPlan
+from repro.optim import AdamWConfig, adamw_update, cosine_with_warmup
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    plan: ParallelPlan,
+    opt: AdamWConfig,
+    compute_dtype=jnp.bfloat16,
+    warmup: int = 200,
+    total_steps: int = 10_000,
+    microbatches: int = 1,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``microbatches > 1`` accumulates grads over a scan of batch slices —
+    activation memory drops by the factor, collectives overlap per slice.
+    """
+
+    def loss_for(params, batch):
+        cparams = cast_tree(params, compute_dtype)
+        return lm.loss_fn(cparams, batch, cfg, plan)
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_for, has_aux=True)(
+                params, batch
+            )
+            return loss, metrics, grads
+
+        def slice_mb(x, i):
+            mb = x.shape[0] // microbatches
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+        def body(carry, i):
+            acc, loss_acc = carry
+            mb = jax.tree.map(lambda x: slice_mb(x, i), batch)
+            (loss, _), g = jax.value_and_grad(loss_for, has_aux=True)(params, mb)
+            acc = jax.tree.map(lambda a, gg: a + gg.astype(a.dtype), acc, g)
+            return (acc, loss_acc + loss), None
+
+        # §Perf A3: the accumulator follows the optimizer moment dtype —
+        # for 100B+ (bf16-moment) configs a fp32 copy of the grads is the
+        # single largest training buffer (kimi: 15.6 GiB/chip at 256 chips)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, opt.moment_dtype), params)
+        (gsum, loss_sum), _ = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)), jnp.arange(microbatches)
+        )
+        inv = 1.0 / microbatches
+        grads = jax.tree.map(lambda g: g * inv, gsum)
+        return loss_sum * inv, {}, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = grads_of(params, batch)
+        lr_t = cosine_with_warmup(opt_state["step"], opt.lr, warmup, total_steps)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, opt_state, params, opt, lr_t
+        )
+        out = {"loss": loss, "lr": lr_t, **opt_metrics}
+        if isinstance(metrics, dict):
+            out.update({k: v for k, v in metrics.items() if k != "loss"})
+        return new_params, new_opt, out
+
+    return train_step

@@ -1,0 +1,112 @@
+"""Fault-tolerant training loop.
+
+Production behaviours implemented and tested on host devices:
+
+  * checkpoint/restart — periodic async atomic saves; on start, auto-resume
+    from the latest commit; the data pipeline is seekable (pure fn of step)
+    so the token stream continues exactly;
+  * preemption drain — SIGTERM/SIGINT set a flag; the loop finishes the
+    current step, writes a blocking checkpoint, exits cleanly (the normal
+    TPU-pod eviction path);
+  * failure injection — ``fail_at_step`` raises mid-run *after* optimizer
+    update but *before* the checkpoint of that step, proving restart
+    correctness (test: resumed run is bitwise-identical to uninterrupted);
+  * elastic restart — restore() re-places saved logical arrays against the
+    current mesh, which may have a different device count (see
+    checkpoint/manager.py); tested in tests/test_fault_tolerance.py;
+  * straggler mitigation hook — per-step wall time is tracked; steps
+    slower than ``straggler_factor``x the trailing median are counted and
+    surfaced in metrics (on a real pod this feeds the reshard/evict
+    decision; here it drives logging + tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    log_every: int = 10
+    fail_at_step: int | None = None      # failure injection (tests)
+    straggler_factor: float = 3.0
+
+
+class Trainer:
+    def __init__(
+        self,
+        step_fn: Callable,                 # (params, opt, batch) -> (params, opt, metrics)
+        data_fn: Callable[[int], dict],    # step -> batch (seekable)
+        tcfg: TrainerConfig,
+    ):
+        self.step_fn = step_fn
+        self.data_fn = data_fn
+        self.tcfg = tcfg
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
+        self._preempted = False
+        self.step_times: list[float] = []
+        self.n_stragglers = 0
+
+    def _install_signals(self):
+        def handler(signum, frame):
+            self._preempted = True
+
+        try:
+            signal.signal(signal.SIGTERM, handler)
+            signal.signal(signal.SIGINT, handler)
+        except ValueError:
+            pass  # not on main thread (tests)
+
+    def run(self, params, opt_state, start_step: int = 0, shardings=None):
+        """Returns (params, opt_state, history). Auto-resumes if checkpoints
+        exist (restart-after-failure path)."""
+        tcfg = self.tcfg
+        self._install_signals()
+        state = {"params": params, "opt": opt_state}
+        latest = self.ckpt.latest_step()
+        step = start_step
+        if latest is not None and latest >= start_step:
+            state, step = self.ckpt.restore(state, shardings=shardings)
+            step += 1  # saved after completing `step`
+        params, opt_state = state["params"], state["opt"]
+
+        history = []
+        while step < tcfg.total_steps:
+            t0 = time.time()
+            batch = self.data_fn(step)
+            params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+            self.step_times.append(dt)
+            med = float(np.median(self.step_times[-20:]))
+            if len(self.step_times) > 5 and dt > tcfg.straggler_factor * med:
+                self.n_stragglers += 1
+            if step % tcfg.log_every == 0:
+                history.append({"step": step, "loss": float(metrics["loss"]),
+                                "dt": dt})
+
+            if tcfg.fail_at_step is not None and step == tcfg.fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+
+            if step % tcfg.ckpt_every == 0 or step == tcfg.total_steps - 1:
+                self.ckpt.save(step, {"params": params, "opt": opt_state})
+            if self._preempted:
+                self.ckpt.save(step, {"params": params, "opt": opt_state},
+                               blocking=True)
+                break
+            step += 1
+
+        self.ckpt.wait()
+        return params, opt_state, history

@@ -1,0 +1,138 @@
+"""Per-kernel allclose vs the pure-jnp oracle (interpret=True on CPU),
+swept over shapes/dtypes + hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import adc as adc_mod
+from repro.core import projection as proj
+from repro.core.pwm import QuantSpec
+from repro.kernels import ops, ref
+from repro.kernels.ip2_project import IP2KernelParams, ip2_project_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("patch,n_vec,n_patches", [
+    (8, 16, 5),          # min patch
+    (16, 192, 12),       # mid, n_vec not mult of 128
+    (32, 400, 3),        # paper's 32x32/400-vector operating point
+    (32, 768, 1),        # paper's 768-vector point
+])
+def test_ip2_kernel_vs_core_reference(patch, n_vec, n_patches):
+    spec = proj.PatchSpec(patch_h=patch, patch_w=patch, n_vectors=n_vec)
+    patches = jax.random.uniform(KEY, (n_patches, patch * patch))
+    w = jax.random.normal(jax.random.PRNGKey(1), (n_vec, patch * patch)) * 2.0
+    out_k = ops.ip2_project(patches, w, spec, interpret=True)
+    out_r = proj.analog_project_patches(patches, w, spec)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-5)
+
+
+@pytest.mark.parametrize("pwm_bits,adc_bits,nl", [(6, 8, "none"), (4, 6, "relu"), (8, 10, "none")])
+def test_ip2_kernel_quant_nl_adc_sweep(pwm_bits, adc_bits, nl):
+    from repro.core.analog_nl import AnalogNLSpec
+
+    spec = proj.PatchSpec(
+        patch_h=8, patch_w=8, n_vectors=24,
+        quant=QuantSpec(pwm_bits=pwm_bits),
+        nl=AnalogNLSpec(kind=nl),
+    )
+    adc = adc_mod.ADCSpec(bits=adc_bits)
+    patches = jax.random.uniform(KEY, (4, 7, 64))
+    w = jax.random.normal(jax.random.PRNGKey(2), (24, 64)) * 3.0
+    bias = jax.random.normal(jax.random.PRNGKey(3), (24,)) * 0.1
+    out_k = ops.ip2_project(patches, w, spec, adc=adc, bias=bias, interpret=True)
+    ref_analog = proj.analog_project_patches(patches, w, spec)
+    out_r = adc_mod.digital_readout(ref_analog, spec.summer.v_ref, bias, adc)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-5)
+
+
+def test_ip2_kernel_block_shape_sweep():
+    """Different BlockSpec tilings must not change results."""
+    spec = proj.PatchSpec(patch_h=16, patch_w=16, n_vectors=64)
+    patches = jax.random.uniform(KEY, (40, 256))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 256))
+    base = ops.ip2_project(patches, w, spec, interpret=True)
+    for bp, bm, bk in [(8, 128, 128), (128, 128, 512), (16, 256, 256)]:
+        out = ops.ip2_project(
+            patches, w, spec, block_p=bp, block_m=bm, block_k=bk, interpret=True
+        )
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(3, 100, 200), (1, 511, 130)])
+def test_quant_matmul_vs_oracle(dtype, shape):
+    b, k, m = shape
+    a = (jax.random.normal(KEY, (b, k)) * 2).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, m))
+    w8, sw = ops.quantize_weights_int8(w)
+    got = ops.quant_matmul(a, w8, sw, interpret=True)
+    a8, sa = ref.quantize_activations_ref(a.astype(jnp.float32).reshape(-1, k))
+    want = ref.quant_matmul_ref(a8, sa, w8, sw).reshape(b, m).astype(dtype)
+    # bf16 output rounding: lsb ≈ 0.8% of magnitude
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    scale = float(jnp.abs(want.astype(jnp.float32)).max())
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32) / scale, np.asarray(want, np.float32) / scale,
+        atol=tol,
+    )
+
+
+def test_quant_matmul_accuracy_vs_float():
+    a = jax.random.normal(KEY, (16, 300))
+    w = jax.random.normal(jax.random.PRNGKey(1), (300, 200))
+    w8, sw = ops.quantize_weights_int8(w)
+    y = ops.quant_matmul(a, w8, sw, interpret=True)
+    rel = float(jnp.abs(y - a @ w).max() / jnp.abs(a @ w).max())
+    assert rel < 0.03
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_patches=st.integers(1, 9),
+    n_vec=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ip2_kernel_property_allclose(n_patches, n_vec, seed):
+    spec = proj.PatchSpec(patch_h=8, patch_w=8, n_vectors=n_vec)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    patches = jax.random.uniform(k1, (n_patches, 64))
+    w = jax.random.normal(k2, (n_vec, 64)) * 2.0
+    out_k = ops.ip2_project(patches, w, spec, interpret=True)
+    out_r = proj.analog_project_patches(patches, w, spec)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ip2_output_bounded_by_rails(seed):
+    """Analog outputs can never exceed the voltage rails (physics)."""
+    from repro.core.analog_nl import AnalogNLSpec
+
+    spec = proj.PatchSpec(
+        patch_h=8, patch_w=8, n_vectors=8, nl=AnalogNLSpec(kind="relu", v_sat=1.0)
+    )
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    patches = jax.random.uniform(k1, (3, 64))
+    w = jax.random.normal(k2, (8, 64)) * 50.0   # absurd weight currents
+    out = ops.ip2_project(patches, w, spec, interpret=True)
+    assert float(out.min()) >= 0.0 and float(out.max()) <= 1.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.integers(2, 8))
+def test_pwm_monotone_property(seed, bits):
+    """PWM quantization is monotone non-decreasing (a comparator ramp)."""
+    from repro.core.pwm import pwm_quantize
+
+    x = jnp.sort(jax.random.uniform(jax.random.PRNGKey(seed), (100,)))
+    q = pwm_quantize(x, QuantSpec(pwm_bits=bits))
+    assert bool(jnp.all(jnp.diff(q) >= 0))

@@ -1,0 +1,69 @@
+"""Optimizer / schedule / compression invariants (hypothesis property tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import AdamWConfig, adamw_update, cosine_with_warmup, init_opt_state
+from repro.optim.compression import quantize_ef
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), lr=st.floats(1e-5, 1e-2))
+def test_adamw_descends_quadratic(seed, lr):
+    """AdamW on f(x)=|x|² must decrease the loss from any start."""
+    key = jax.random.PRNGKey(seed)
+    params = {"x": jax.random.normal(key, (16,)) * 3}
+    opt = AdamWConfig(lr=lr, weight_decay=0.0)
+    state = init_opt_state(params, opt)
+    loss = lambda p: jnp.sum(p["x"] ** 2)
+    l0 = float(loss(params))
+    for _ in range(25):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(g, state, params, opt, jnp.float32(lr))
+    assert float(loss(params)) < l0
+
+
+def test_adamw_grad_clip_bounds_update():
+    params = {"x": jnp.zeros((4,))}
+    opt = AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    state = init_opt_state(params, opt)
+    g = {"x": jnp.full((4,), 1e6)}                    # exploding grads
+    new_params, _, m = adamw_update(g, state, params, opt, jnp.float32(0.1))
+    assert float(jnp.abs(new_params["x"]).max()) < 1.0
+    assert float(m["grad_norm"]) > 1e5                # norm reported unclipped
+
+
+def test_adamw_bf16_moments_roundtrip():
+    params = {"x": jnp.ones((8,))}
+    opt = AdamWConfig(moment_dtype=jnp.bfloat16)
+    state = init_opt_state(params, opt)
+    assert state["m"]["x"].dtype == jnp.bfloat16
+    g = {"x": jnp.full((8,), 0.1)}
+    _, state, _ = adamw_update(g, state, params, opt, jnp.float32(1e-3))
+    assert state["m"]["x"].dtype == jnp.bfloat16      # dtype preserved
+
+
+def test_cosine_schedule_shape():
+    steps = jnp.arange(0, 1000)
+    lr = jax.vmap(lambda s: cosine_with_warmup(s, 1e-3, 100, 1000))(steps)
+    assert float(lr[0]) == 0.0
+    assert float(lr[100]) >= float(lr[999])           # decays after warmup
+    assert np.argmax(np.asarray(lr)) <= 101           # peak at end of warmup
+    assert float(lr[999]) >= 1e-4 - 1e-9              # floor = min_ratio*base
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_error_feedback_identity(seed):
+    """codes*scale + err == corrected input (exact decomposition)."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    err0 = jax.random.normal(jax.random.PRNGKey(seed + 1), (64,)) * 0.01
+    scale = jnp.max(jnp.abs(g + err0)) / 127.0
+    codes, err = quantize_ef(g, err0, scale)
+    np.testing.assert_allclose(
+        np.asarray(codes.astype(jnp.float32) * scale + err),
+        np.asarray(g + err0), rtol=1e-5, atol=1e-6,
+    )
+    assert float(jnp.abs(err).max()) <= float(scale) * 0.5 + 1e-6
