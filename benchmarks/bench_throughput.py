@@ -1,12 +1,115 @@
 """Paper Fig. 3 — processing rate vs weight lines C ∈ {1,2,4,8} for
 720p/1080p sensors at 400/768 vectors per 32×32 patch, + the 8×8/192-vector
 operating point. Reproduces the ~90 Hz 1080p C=2 claim and >30 Hz for 8×8,
-and the 10x/30x data-dimensionality reduction (§1, §2.1.4)."""
+and the 10x/30x data-dimensionality reduction (§1, §2.1.4).
 
+Also sweeps the dense vs compact execution modes (DESIGN.md §3) over
+active_fraction ∈ {1.0, 0.5, 0.25, 0.1}: wall time of the selectable
+frontend compute (CDS patch voltages -> projection -> ADC readout; the
+optics/mosaic stage integrates photons regardless of selection and is
+excluded from both sides) and the streamed feature bytes vs full-frame raw.
+"""
+
+import dataclasses
+import os
+import sys
 import time
 
 from repro.core.power import SensorConfig, data_reduction
 from repro.core.throughput import figure3_sweep, frame_rate, rate_point
+
+RAW_PIXEL_BITS = 10     # column SAR raw readout
+FEATURE_BITS = 8        # edge-ADC feature samples (paper's 8-bit point)
+
+
+def _best_of(f, *args, n: int = 7) -> float:
+    """Best-of-n wall time in seconds for a jitted fn (CPU sim timing)."""
+    import jax
+
+    jax.tree_util.tree_leaves(f(*args))[0].block_until_ready()   # compile
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = f(*args)
+        jax.tree_util.tree_leaves(out)[0].block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def compact_sweep(
+    image: int = 256, patch: int = 16, n_vectors: int = 400, batch: int = 8
+) -> list[dict]:
+    """Dense-then-mask vs select->gather->project, same weights/selection."""
+    import jax
+
+    import repro.core as c
+    from repro.core import saliency as sal
+    from repro.core.frontend import FrontendConfig, project_readout, init_frontend_params
+    from repro.core.projection import PatchSpec
+
+    base = FrontendConfig(
+        image_h=image, image_w=image,
+        patch=PatchSpec(patch_h=patch, patch_w=patch, n_vectors=n_vectors),
+        aa_cutoff=None, active_fraction=0.25,
+    )
+    params = init_frontend_params(jax.random.PRNGKey(0), base)
+    rgb = jax.random.uniform(jax.random.PRNGKey(1), (batch, image, image, 3))
+    patches = c.extract_patches(c.mosaic(rgb), patch, patch)
+    weights = c.strike_columns(params["a_rgb"], patch, patch)
+    energy = c.patch_energy(patches)
+    raw_bits = image * image * RAW_PIXEL_BITS
+
+    # projection+readout is independent of active_fraction: one jitted fn
+    # each (compact re-traces per k from the index shape; dense compiles once)
+    dense = jax.jit(lambda pp, mm: sal.apply_patch_mask(
+        project_readout(pp, weights, params, base, None), mm))
+    compact = jax.jit(lambda pp, ii: project_readout(
+        sal.gather_patches(pp, ii), weights, params, base, None))
+
+    rows = []
+    speedup_at_25 = None
+    for af in (1.0, 0.5, 0.25, 0.1):
+        cfg = dataclasses.replace(base, active_fraction=af)
+        k = cfg.n_active
+        mask = c.topk_patch_mask(energy, af)
+        idx = c.topk_patch_indices(energy, k)
+
+        t_dense = _best_of(dense, patches, mask)
+        t_compact = _best_of(compact, patches, idx)
+        speedup = t_dense / t_compact
+        if af == 0.25:
+            speedup_at_25 = speedup
+        stream_bits = k * n_vectors * FEATURE_BITS
+        rows.append({
+            "name": f"frontend_dense_vs_compact_af{af:g}",
+            "us_per_call": t_compact * 1e6,
+            "derived": (
+                f"dense {t_dense * 1e3:.2f}ms compact {t_compact * 1e3:.2f}ms "
+                f"{speedup:.2f}x; stream {stream_bits / 8 / 1024:.0f}KiB "
+                f"vs raw {raw_bits / 8 / 1024:.0f}KiB "
+                f"({raw_bits / stream_bits:.1f}x fewer bytes)"
+            ),
+        })
+
+    # the paper's streamed-bytes claim at its own operating point:
+    # 2 Mpix / 32x32 / 400 vec / 25 % active, 8-bit features vs 10-bit raw
+    op = SensorConfig()
+    byte_reduction = data_reduction(op) * RAW_PIXEL_BITS / FEATURE_BITS
+    rows.append({
+        "name": "compact_streamed_bytes_reduction_paper_point",
+        "us_per_call": 0.0,
+        "derived": f"{byte_reduction:.1f}x vs full-frame raw (paper ~10x)",
+    })
+    # wall-clock asserts are meaningless on noisy shared runners; CI sets
+    # IP2_BENCH_RELAX=1 to log instead of fail (byte accounting stays hard)
+    if speedup_at_25 is None or speedup_at_25 < 2.0:
+        msg = f"compact path only {speedup_at_25:.2f}x faster at 25% activity"
+        if os.environ.get("IP2_BENCH_RELAX"):
+            print(f"WARNING: {msg}", file=sys.stderr)
+        else:
+            raise AssertionError(msg)
+    assert byte_reduction >= 10.0
+    return rows
 
 
 def run() -> list[dict]:
@@ -37,4 +140,5 @@ def run() -> list[dict]:
     rows.append({"name": "data_reduction_vs_rgb", "us_per_call": us,
                  "derived": f"{red_rgb:.1f}x (paper 30x)"})
     assert 85 <= op.frame_hz <= 95 and hz8 > 30 and red >= 10 and red_rgb >= 30
+    rows.extend(compact_sweep())
     return rows

@@ -1,10 +1,13 @@
 """Benchmark harness — one module per paper table/figure (DESIGN.md §6).
 
-Prints ``name,us_per_call,derived`` CSV. ``--quick`` skips the training
-benches (bench_accuracy trains 10 small models and dominates wall time).
+Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_throughput.json``
+(all rows, keyed by module) so successive PRs accumulate a perf trajectory.
+``--quick`` skips the training benches (bench_accuracy trains 10 small
+models and dominates wall time).
 """
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -12,6 +15,7 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json-out", default="BENCH_throughput.json")
     args = ap.parse_args()
 
     from benchmarks import bench_kernels, bench_leakage, bench_power, bench_throughput
@@ -29,14 +33,22 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    results: dict[str, list[dict]] = {}
     for label, mod in modules:
         try:
-            for row in mod.run():
+            rows = mod.run()
+            results[label] = rows
+            for row in rows:
                 print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
         except Exception as e:
             failures += 1
+            results[label] = [{"name": label, "error": f"{type(e).__name__}: {e}"}]
             print(f"{label},FAIL,{type(e).__name__}: {e}", file=sys.stderr)
             traceback.print_exc()
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.json_out}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

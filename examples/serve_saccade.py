@@ -3,10 +3,12 @@
     PYTHONPATH=src python examples/serve_saccade.py
 
 Simulates the sensor<->backend closed loop over a video stream of batched
-requests: frame t's salient-patch mask comes from the backend's attention
-on frame t-1 (the saccade), so only ~25% of patches are ADC-converted and
-streamed — the paper's 10x bandwidth reduction — while classification
-quality tracks the full-frame oracle.
+requests, entirely on the compact path: frame t's patch selection comes
+from the backend's attention on frame t-1 (the saccade), only those ~25 %
+of patches are gathered, projected, and ADC-converted — the paper's 10x
+bandwidth reduction — and the backend attends over exactly k compact
+tokens (O(k²) instead of O(P²) attention). The dense (P, M) feature grid
+is never materialized anywhere in the loop.
 """
 
 import time
@@ -14,9 +16,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-import repro.core as c
 from repro.data.pipeline import SceneStream
-from repro.models.vit import ViTConfig, init_vit, vit_forward
+from repro.models.vit import ViTConfig, init_vit
+from repro.serve.serve_step import make_bootstrap_indices, make_saccade_step
 from repro.core.frontend import FrontendConfig
 from repro.core.projection import PatchSpec
 
@@ -32,33 +34,31 @@ def main():
     stream = SceneStream(image=64)
     batch_size = 16
 
-    @jax.jit
-    def serve(params, rgb, mask):
-        logits = vit_forward(params, rgb, cfg, mask=mask)
-        # next-frame saccade: energy of current features per patch (stand-in
-        # for backend attention rollout; same interface)
-        patches = c.extract_patches(c.mosaic(rgb), 16, 16)
-        scores = c.patch_energy(patches)
-        next_mask = c.topk_patch_mask(scores, fcfg.active_fraction)
-        return logits, next_mask
+    bootstrap = jax.jit(make_bootstrap_indices(cfg))
+    step = jax.jit(make_saccade_step(cfg, explore=0.1))
 
-    mask = None
+    indices = None
     n_total = fcfg.n_patches * batch_size
+    k = fcfg.n_active
     t0 = time.time()
     for t in range(10):
         rgb, labels = stream.batch(t, batch_size)
         rgb = jnp.asarray(rgb)
-        logits, mask = serve(params, rgb, mask)
+        if indices is None:
+            indices = bootstrap(params, rgb)       # frame 0: in-pixel energy
+        logits, indices, aux = step(params, rgb, indices)
         acc = float(jnp.mean((jnp.argmax(logits, -1) == jnp.asarray(labels))))
-        active = int(mask.sum())
+        active = int(aux["valid"].sum())
         print(f"frame {t}: {active}/{n_total} patches ADC-converted "
               f"({active / n_total:.0%}), acc(untrained)={acc:.2f}")
     dt = (time.time() - t0) / 10
-    feats_per_frame = fcfg.n_active * fcfg.patch.n_vectors * batch_size
+    feats_per_frame = k * fcfg.patch.n_vectors * batch_size
     pixels_per_frame = batch_size * 64 * 64 * 3
     print(f"\n{dt * 1e3:.0f} ms/frame (CPU sim); stream: {feats_per_frame} "
           f"features vs {pixels_per_frame} RGB px = "
-          f"{pixels_per_frame / feats_per_frame:.1f}x reduction")
+          f"{pixels_per_frame / feats_per_frame:.1f}x reduction; "
+          f"backend attends {k} tokens instead of {fcfg.n_patches} "
+          f"({(fcfg.n_patches / k) ** 2:.0f}x fewer attention scores)")
 
 
 if __name__ == "__main__":

@@ -57,9 +57,13 @@ def smoke_config(arch: str) -> ModelConfig:
     heads = (heads // kv) * kv  # keep GQA divisibility
     moe = None
     if cfg.moe is not None:
+        # capacity_factor = n_experts makes the smoke dispatch dropless:
+        # with an untrained (biased) router the real factor drops tokens,
+        # and which tokens get dropped depends on batch composition — so
+        # decode == forward only holds when capacity never binds.
         moe = MoEConfig(
             n_experts=4, top_k=2, d_expert=64,
-            capacity_factor=cfg.moe.capacity_factor,
+            capacity_factor=4.0,
             n_shared_experts=min(cfg.moe.n_shared_experts, 1),
         )
     return dataclasses.replace(

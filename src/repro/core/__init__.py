@@ -11,10 +11,12 @@ from repro.core.adc import ADCSpec, adc_quantize, digital_readout
 from repro.core.analog_nl import AnalogNLSpec, analog_nonlinearity
 from repro.core.bayer import antialias, bayer_channel_map, mosaic, strike_columns
 from repro.core.frontend import (
+    CompactFeatures,
     FrontendConfig,
     apply_frontend,
     compact_features,
     init_frontend_params,
+    sensor_patches,
 )
 from repro.core.power import AreaBudget, EnergyConstants, SensorConfig, data_reduction, power_report
 from repro.core.projection import (
@@ -25,7 +27,16 @@ from repro.core.projection import (
 )
 from repro.core.pwm import QuantSpec, pwm_quantize, quantize_weights, weight_codes
 from repro.core.qth_attention import QTHSpec, pow2_quantize, qth_attention
-from repro.core.saliency import apply_patch_mask, patch_energy, topk_patch_mask
+from repro.core.saliency import (
+    apply_patch_mask,
+    compact_active,
+    gather_patches,
+    indices_from_mask,
+    mask_from_indices,
+    patch_energy,
+    topk_patch_indices,
+    topk_patch_mask,
+)
 from repro.core.switched_cap import (
     SummerSpec,
     TAU_LEAK_65NM_S,
@@ -39,12 +50,14 @@ __all__ = [
     "ADCSpec", "adc_quantize", "digital_readout",
     "AnalogNLSpec", "analog_nonlinearity",
     "antialias", "bayer_channel_map", "mosaic", "strike_columns",
-    "FrontendConfig", "apply_frontend", "compact_features", "init_frontend_params",
+    "CompactFeatures", "FrontendConfig", "apply_frontend", "compact_features",
+    "init_frontend_params", "sensor_patches",
     "AreaBudget", "EnergyConstants", "SensorConfig", "data_reduction", "power_report",
     "PatchSpec", "analog_project_frame", "analog_project_patches", "extract_patches",
     "QuantSpec", "pwm_quantize", "quantize_weights", "weight_codes",
     "QTHSpec", "pow2_quantize", "qth_attention",
-    "apply_patch_mask", "patch_energy", "topk_patch_mask",
+    "apply_patch_mask", "compact_active", "gather_patches", "indices_from_mask",
+    "mask_from_indices", "patch_energy", "topk_patch_indices", "topk_patch_mask",
     "SummerSpec", "TAU_LEAK_65NM_S", "capacitor_divider", "charge_share_sum",
     "passive_droop_trace",
     "figure3_sweep", "frame_rate", "rate_point",

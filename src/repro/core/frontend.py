@@ -13,14 +13,29 @@ Two selectable paths compute the projection:
 * ``analog=False`` — the float "algorithm simulation" the paper trains
   against: full-RGB patches through the unquantized matrix A.
 
-Both paths are differentiable (STE through the quantizers), enabling the
-accuracy/bits/active-fraction co-design studies of §1 and §2.1.3.
+And two execution modes select the dataflow (see DESIGN.md §3 for when to
+choose each):
+
+* ``mode="dense"``   — project every patch, then zero-mask the deselected
+  ones. Features keep the full (..., P, M) grid shape; used for training
+  and the accuracy/bits/active-fraction co-design studies where gradients
+  must reach every patch position.
+* ``mode="compact"`` — *select -> gather -> project*: only the (exactly k)
+  active patches are gathered ahead of the projection, so analog compute,
+  ADC conversions and streamed features all scale with the active
+  fraction — the dataflow the hardware actually implements and the source
+  of the paper's 10x bandwidth / <30 mW/MP claims. Returns static-shape
+  (..., k, M) features plus the patch indices.
+
+Both paths are differentiable (STE through the quantizers; the compact
+gather is a differentiable take), enabling the co-design studies of §1 and
+§2.1.3 on either dataflow.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +71,20 @@ class FrontendConfig:
         return max(1, int(round(self.n_patches * self.active_fraction)))
 
 
+class CompactFeatures(NamedTuple):
+    """The bandwidth-true frontend output: only active patches exist.
+
+    ``features[..., i, :]`` is the ADC-converted projection of patch
+    ``indices[..., i]``; ``valid[..., i]`` is False only when fewer than k
+    patches were active and slot i is a repeated filler (never the case
+    when selection comes from the exactly-k index-first API).
+    """
+
+    features: jnp.ndarray   # (..., k, M)
+    indices: jnp.ndarray    # (..., k) int32 patch indices
+    valid: jnp.ndarray      # (..., k) bool
+
+
 def init_frontend_params(key: jax.Array, cfg: FrontendConfig) -> dict:
     """A is always trained in vectorized-RGB space (M, N²·3); the analog path
     strikes columns to A' at apply time (paper §2.1.5).
@@ -76,18 +105,15 @@ def init_frontend_params(key: jax.Array, cfg: FrontendConfig) -> dict:
 ProjectFn = Callable[[jnp.ndarray, jnp.ndarray, proj_mod.PatchSpec], jnp.ndarray]
 
 
-def apply_frontend(
-    params: dict,
-    rgb: jnp.ndarray,
-    cfg: FrontendConfig,
-    mask: jnp.ndarray | None = None,
-    project_fn: ProjectFn | None = None,
+def sensor_patches(
+    params: dict, rgb: jnp.ndarray, cfg: FrontendConfig
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """rgb (..., H, W, 3) in [0,1] -> (features (..., P, M), mask (..., P)).
+    """Optics + mosaic + patch extraction: rgb (..., H, W, 3) ->
+    (patches (..., P, N), effective weights (M, N)).
 
-    ``mask`` is the backend's saccadic patch selection for this frame; if
-    None, a patch-energy top-k stand-in is used. ``project_fn`` lets the
-    Pallas kernel replace the reference einsum (same signature/semantics).
+    This is the part of the frontend that is physically unavoidable — every
+    photodiode integrates light regardless of selection — and therefore
+    shared verbatim by the dense and compact dataflows.
     """
     p = cfg.patch
     if cfg.aa_cutoff is not None:
@@ -107,22 +133,86 @@ def apply_frontend(
         patches = jnp.concatenate(per_c, axis=-1)                    # (..., P, N²·3)
         weights = params["a_rgb"]
 
-    if mask is None:
-        mask = sal_mod.topk_patch_mask(sal_mod.patch_energy(patches), cfg.active_fraction)
+    return patches, weights
 
+
+def project_readout(
+    patches: jnp.ndarray,
+    weights: jnp.ndarray,
+    params: dict,
+    cfg: FrontendConfig,
+    project_fn: ProjectFn | None,
+) -> jnp.ndarray:
+    """Analog projection + edge ADC (or the float simulation) over whatever
+    set of patches it is handed — the full grid (dense) or the gathered
+    active set (compact)."""
     if cfg.analog:
         fn = project_fn or proj_mod.analog_project_patches
-        out_v = fn(patches, weights, p)                              # (..., P, M)
-        feats = adc_mod.digital_readout(out_v, p.summer.v_ref, params["bias"], cfg.adc)
-    else:
-        n_in = patches.shape[-1]
-        feats = jnp.einsum("...pi,vi->...pv", patches, weights) / n_in + params["bias"]
+        out_v = fn(patches, weights, cfg.patch)                      # (..., n, M)
+        return adc_mod.digital_readout(out_v, cfg.patch.summer.v_ref, params["bias"], cfg.adc)
+    n_in = patches.shape[-1]
+    return jnp.einsum("...pi,vi->...pv", patches, weights) / n_in + params["bias"]
 
-    return sal_mod.apply_patch_mask(feats, mask), mask
+
+def apply_frontend(
+    params: dict,
+    rgb: jnp.ndarray,
+    cfg: FrontendConfig,
+    mask: jnp.ndarray | None = None,
+    project_fn: ProjectFn | None = None,
+    mode: str = "dense",
+    indices: jnp.ndarray | None = None,
+):
+    """rgb (..., H, W, 3) in [0,1] -> frontend features.
+
+    Selection inputs (the backend's saccadic prediction for this frame):
+    ``indices`` (..., k) takes precedence, then ``mask`` (..., P); if both
+    are None a patch-energy top-k stand-in is used. ``project_fn`` lets the
+    Pallas kernel replace the reference einsum (same signature/semantics).
+
+    Returns (mode="dense"):   (features (..., P, M), mask (..., P)) with
+      deselected patches zeroed — compute scales with P.
+    Returns (mode="compact"): :class:`CompactFeatures` with (..., k, M)
+      features — compute scales with k (select -> gather -> project).
+    """
+    if mode not in ("dense", "compact"):
+        raise ValueError(f"mode must be 'dense' or 'compact', got {mode!r}")
+    k = cfg.n_active
+    patches, weights = sensor_patches(params, rgb, cfg)
+
+    if mode == "dense":
+        if indices is not None:                  # same precedence as compact
+            mask = sal_mod.mask_from_indices(indices, cfg.n_patches)
+        elif mask is None:
+            mask = sal_mod.topk_patch_mask(
+                sal_mod.patch_energy(patches), cfg.active_fraction
+            )
+        feats = project_readout(patches, weights, params, cfg, project_fn)
+        return sal_mod.apply_patch_mask(feats, mask), mask
+
+    # compact: resolve the selection to exactly-k indices, gather the active
+    # patches, and only then spend analog compute / ADC conversions on them.
+    if indices is not None:
+        idx = indices.astype(jnp.int32)
+        if idx.shape[-1] != k:
+            raise ValueError(f"indices last dim {idx.shape[-1]} != n_active {k}")
+        valid = jnp.ones(idx.shape, bool)
+    elif mask is not None:
+        idx, valid = sal_mod.indices_from_mask(mask, k)
+    else:
+        idx = sal_mod.topk_patch_indices(sal_mod.patch_energy(patches), k)
+        valid = jnp.ones(idx.shape, bool)
+
+    active = sal_mod.gather_patches(patches, idx)                    # (..., k, N)
+    feats = project_readout(active, weights, params, cfg, project_fn)
+    feats = feats * valid[..., None].astype(feats.dtype)
+    return CompactFeatures(feats, idx, valid)
 
 
 def compact_features(
     feats: jnp.ndarray, mask: jnp.ndarray, cfg: FrontendConfig
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Bandwidth-true output: only the ADC-converted (active) patches."""
+    """Bandwidth-true view of already-computed dense features: gather the
+    active patches. Prefer ``apply_frontend(..., mode="compact")``, which
+    avoids computing the deselected patches in the first place."""
     return sal_mod.compact_active(feats, mask, cfg.n_active)

@@ -18,6 +18,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+NEG_INF = -1e30   # finite: an all-masked row softmaxes to uniform, not NaN
+
 
 @dataclasses.dataclass(frozen=True)
 class QTHSpec:
@@ -38,11 +40,20 @@ def pow2_quantize(p: jnp.ndarray, spec: QTHSpec = QTHSpec()) -> jnp.ndarray:
     return q
 
 
-def qth_attention_weights(scores: jnp.ndarray, spec: QTHSpec = QTHSpec()) -> jnp.ndarray:
+def qth_attention_weights(
+    scores: jnp.ndarray,
+    spec: QTHSpec = QTHSpec(),
+    key_valid: jnp.ndarray | None = None,
+) -> jnp.ndarray:
     """Softmax -> QTH pow-2 quantization -> optional renormalize.
 
-    scores: (..., q, k) pre-softmax logits.
+    scores: (..., q, k) pre-softmax logits. ``key_valid`` (..., k) excludes
+    keys entirely (powered-down patches on the dense path, filler slots on
+    the compact path): their coefficient is exactly 0 — in circuit terms
+    the value module simply has no stored charge to share.
     """
+    if key_valid is not None:
+        scores = jnp.where(key_valid[..., None, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     q = pow2_quantize(p, spec)
     if spec.renormalize:
@@ -52,9 +63,12 @@ def qth_attention_weights(scores: jnp.ndarray, spec: QTHSpec = QTHSpec()) -> jnp
 
 
 def qth_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                  spec: QTHSpec = QTHSpec()) -> jnp.ndarray:
-    """Full QTH attention: (..., s, d) tensors, scaled dot product."""
+                  spec: QTHSpec = QTHSpec(),
+                  key_valid: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Full QTH attention: (..., s, d) tensors, scaled dot product. The
+    sequence axis can be the full patch grid (dense) or the gathered
+    active-token set (compact) — the circuit sees only converted patches."""
     d = q.shape[-1]
     scores = jnp.einsum("...qd,...kd->...qk", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
-    w = qth_attention_weights(scores, spec).astype(v.dtype)
+    w = qth_attention_weights(scores, spec, key_valid=key_valid).astype(v.dtype)
     return jnp.einsum("...qk,...kd->...qd", w, v)

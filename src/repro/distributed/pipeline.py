@@ -65,7 +65,10 @@ def pipeline_forward(
             return x_out, x_out
 
         x0 = jnp.zeros(mb_shape, microbatches.dtype)
-        x0 = jax.lax.pvary(x0, (axis,))      # carry is device-varying
+        # newer jax requires the carry marked device-varying for shard_map's
+        # varying-manual-axes check; older releases have no pvary (and no check)
+        if hasattr(jax.lax, "pvary"):
+            x0 = jax.lax.pvary(x0, (axis,))
         _, ys = jax.lax.scan(tick, x0, jnp.arange(ticks))
         # final-stage outputs live at ticks n_stages-1 .. ticks-1
         out = jax.lax.dynamic_slice_in_dim(ys, n_stages - 1, n_micro, axis=0)

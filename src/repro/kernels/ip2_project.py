@@ -31,6 +31,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed across jax releases: CompilerParams (new) vs TPUCompilerParams (old)
+COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 @dataclasses.dataclass(frozen=True)
 class IP2KernelParams:
@@ -48,6 +51,28 @@ class IP2KernelParams:
     adc_enable: bool = True
 
 
+def pwm_quantize_tile(x: jnp.ndarray, p: IP2KernelParams) -> jnp.ndarray:
+    """Pixel -> pulse width on the PWM clock grid (time quantization),
+    applied at tile load so the converter lives next to the data."""
+    n = p.pwm_levels - 1
+    return jnp.round(jnp.clip(x, 0.0, 1.0) * n) * (1.0 / n)
+
+
+def analog_epilogue_tile(acc: jnp.ndarray, b: jnp.ndarray, p: IP2KernelParams) -> jnp.ndarray:
+    """The fused analog readout: charge-share /N2 + droop + VR, the 2T
+    nonlinearity, edge-ADC quantization, and the VR-b digital subtraction.
+    Shared by the dense and sparse projection kernels."""
+    out = acc * (p.droop / p.n2) + p.v_ref
+    if p.nl_kind == "relu":
+        out = jnp.clip(out, 0.0, p.v_sat)
+    if p.adc_enable:
+        levels = 2 ** p.adc_bits
+        lsb = (p.adc_vmax - p.adc_vmin) / (levels - 1)
+        clipped = jnp.clip(out, p.adc_vmin, p.adc_vmax)
+        out = jnp.round((clipped - p.adc_vmin) / lsb) * lsb + p.adc_vmin
+    return out - (p.v_ref - b)
+
+
 def _ip2_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, p: IP2KernelParams, k_steps: int):
     """Grid = (patch banks, vector banks, K banks); K innermost/arbitrary."""
 
@@ -55,24 +80,12 @@ def _ip2_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, p: IP2KernelParams, k_st
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # pixel -> pulse width on the PWM clock grid (time quantization)
-    n = p.pwm_levels - 1
-    x = x_ref[...]
-    xq = jnp.round(jnp.clip(x, 0.0, 1.0) * n) * (1.0 / n)
+    xq = pwm_quantize_tile(x_ref[...], p)
     acc_ref[...] += jnp.dot(xq, w_ref[...], preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _epilogue():
-        # charge sharing divides by the physical N2, then summer droop + VR
-        out = acc_ref[...] * (p.droop / p.n2) + p.v_ref
-        if p.nl_kind == "relu":
-            out = jnp.clip(out, 0.0, p.v_sat)
-        if p.adc_enable:
-            levels = 2 ** p.adc_bits
-            lsb = (p.adc_vmax - p.adc_vmin) / (levels - 1)
-            clipped = jnp.clip(out, p.adc_vmin, p.adc_vmax)
-            out = jnp.round((clipped - p.adc_vmin) / lsb) * lsb + p.adc_vmin
-        o_ref[...] = (out - (p.v_ref - b_ref[...])).astype(o_ref.dtype)
+        o_ref[...] = analog_epilogue_tile(acc_ref[...], b_ref[...], p).astype(o_ref.dtype)
 
 
 @functools.partial(
@@ -110,7 +123,7 @@ def ip2_project_pallas(
         out_specs=pl.BlockSpec((block_p, block_m), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((P, M), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_p, block_m), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=COMPILER_PARAMS_CLS(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel — sparse (active-patch-only) IP2 projection.
+
+The compact-first dataflow (DESIGN.md §3): the saccade selector produces
+the indices of the k active patches, and this kernel projects *only* those
+rows of the dense patch array. The gather is not a separate XLA pass —
+it happens in the kernel's index_map: the active-patch indices are
+scalar-prefetched (``pltpu.PrefetchScalarGridSpec``), so before each grid
+step the DMA engine fetches exactly the patch bank the step needs, straight
+from the dense (P, K) array in HBM into VMEM. FLOPs and VMEM traffic both
+scale with ``k / P`` (the active fraction); deselected patches are never
+touched — the digital twin of "deselected patches drain their photodiodes
+and power down".
+
+Grid = (active patch banks, vector banks, K banks). The patch BlockSpec's
+index_map reads ``idx_ref[i]``, the prefetched dense bank index for compact
+output bank ``i``; the full PWM / charge-share / droop / 2T / edge-ADC
+epilogue stays fused exactly as in the dense kernel (shared helpers).
+
+Bank granularity: ``block_r`` patches per bank. The wrapper in ops.py uses
+``block_r=1`` so selection is patch-granular for any saccade pattern (the
+sublane dimension is padded internally; on TPU a bank of 8 amortizes the
+DMA better when the selector emits 8-aligned banks — see DESIGN.md §3.2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ip2_project import (
+    COMPILER_PARAMS_CLS,
+    IP2KernelParams,
+    analog_epilogue_tile,
+    pwm_quantize_tile,
+)
+
+
+def _ip2_sparse_kernel(
+    idx_ref, x_ref, w_ref, b_ref, o_ref, acc_ref, *, p: IP2KernelParams, k_steps: int
+):
+    """Grid = (active banks, vector banks, K banks); K innermost/arbitrary.
+
+    ``idx_ref`` is the scalar-prefetched bank table; it already steered the
+    BlockSpec index_map, so ``x_ref`` holds the gathered active bank."""
+    del idx_ref  # consumed by the index_map, not the body
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xq = pwm_quantize_tile(x_ref[...], p)
+    acc_ref[...] += jnp.dot(xq, w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        o_ref[...] = analog_epilogue_tile(acc_ref[...], b_ref[...], p).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "block_r", "block_m", "block_k", "interpret"),
+)
+def ip2_project_sparse_pallas(
+    bank_idx: jnp.ndarray,     # (R,) int32 dense bank indices of active banks
+    patches: jnp.ndarray,      # (P_rows, K) dense pixel voltages in [0,1]
+    w_q: jnp.ndarray,          # (K, M) DAC-quantized weights (pre-quantized)
+    bias: jnp.ndarray,         # (M,)
+    params: IP2KernelParams,
+    block_r: int = 1,
+    block_m: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Padded-shape kernel entry; use repro.kernels.ops.ip2_project_sparse.
+
+    Returns (R * block_r, M): compact output bank i holds the projection of
+    dense patch rows [bank_idx[i]*block_r, (bank_idx[i]+1)*block_r).
+    """
+    p_rows, K = patches.shape
+    K2, M = w_q.shape
+    (R,) = bank_idx.shape
+    assert K == K2 and bias.shape == (M,)
+    assert p_rows % block_r == 0 and M % block_m == 0 and K % block_k == 0, (
+        f"pad shapes to blocks: {(p_rows, K, M)} vs {(block_r, block_k, block_m)}"
+    )
+    k_steps = K // block_k
+    grid = (R, M // block_m, k_steps)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            # the gather: compact step i loads dense patch bank idx[i]
+            pl.BlockSpec((block_r, block_k), lambda i, j, k, idx: (idx[i], k)),
+            pl.BlockSpec((block_k, block_m), lambda i, j, k, idx: (k, j)),
+            pl.BlockSpec((block_m,), lambda i, j, k, idx: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_m), lambda i, j, k, idx: (i, j)),
+        scratch_shapes=[pltpu.VMEM((block_r, block_m), jnp.float32)],
+    )
+
+    return pl.pallas_call(
+        functools.partial(_ip2_sparse_kernel, p=params, k_steps=k_steps),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R * block_r, M), jnp.float32),
+        compiler_params=COMPILER_PARAMS_CLS(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(bank_idx.astype(jnp.int32), patches, w_q, bias)

@@ -18,6 +18,7 @@ from repro.core import projection as proj_mod
 from repro.core import pwm as pwm_mod
 from repro.kernels import ref
 from repro.kernels.ip2_project import IP2KernelParams, ip2_project_pallas
+from repro.kernels.ip2_project_sparse import ip2_project_sparse_pallas
 from repro.kernels.quant_matmul import quant_matmul_pallas
 
 
@@ -90,12 +91,61 @@ def ip2_project(
 
 def ip2_project_fn(spec: proj_mod.PatchSpec, **kw):
     """Adapter matching core.frontend.ProjectFn (no fused ADC: the frontend
-    applies its own readout; used to drop the kernel into apply_frontend)."""
+    applies its own readout; used to drop the kernel into apply_frontend).
+    Works on both frontend modes — in compact mode the frontend hands it
+    the already-gathered (..., k, N2) active patches."""
 
     def fn(patches, weights, _spec):
         return ip2_project(patches, weights, _spec, adc=None, **kw)
 
     return fn
+
+
+def ip2_project_sparse(
+    patches: jnp.ndarray,          # (..., P, N2) dense patch grid in [0,1]
+    weights: jnp.ndarray,          # (M, N2) float (pre-DAC)
+    indices: jnp.ndarray,          # (..., k) active patch indices
+    spec: proj_mod.PatchSpec,
+    adc=None,
+    bias: jnp.ndarray | None = None,
+    block_m: int = 128,
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Compact-first projection: compute features for ONLY the ``indices``
+    rows of the dense patch grid (+ fused ADC readout when ``adc`` is
+    given). The gather happens inside the kernel via scalar-prefetched
+    index_maps (DESIGN.md §3.2), so deselected patches cost no FLOPs and no
+    VMEM traffic. Returns (..., k, M) in the order of ``indices``.
+    """
+    m, n2 = weights.shape
+    lead = patches.shape[:-2]
+    n_patches = patches.shape[-2]
+    if indices.shape[:-1] != lead:
+        raise ValueError(f"indices lead {indices.shape[:-1]} != patches lead {lead}")
+    k = indices.shape[-1]
+
+    flat_p = patches.reshape(-1, n2).astype(jnp.float32)   # (B*P, N2)
+    batch = flat_p.shape[0] // n_patches
+    # fold the batch into the row index: bank_idx addresses (B*P) dense rows
+    offsets = jnp.arange(batch, dtype=jnp.int32) * n_patches
+    flat_idx = (indices.reshape(batch, k).astype(jnp.int32) + offsets[:, None]).reshape(-1)
+    flat_idx = jnp.clip(flat_idx, 0, flat_p.shape[0] - 1)
+
+    w_q, _ = pwm_mod.quantize_weights(weights, spec.quant)  # DAC programming
+    b = jnp.zeros((m,), jnp.float32) if bias is None else bias.astype(jnp.float32)
+
+    k_in = _pad_to(flat_p, 1, block_k)
+    w_pad = _pad_to(_pad_to(w_q.T.astype(jnp.float32), 0, block_k), 1, block_m)
+    b_pad = _pad_to(b, 0, block_m)
+
+    params = kernel_params_from_spec(spec, adc)
+    out = ip2_project_sparse_pallas(
+        flat_idx, k_in, w_pad, b_pad, params,
+        block_r=1, block_m=block_m, block_k=block_k,
+        interpret=_auto_interpret(interpret),
+    )
+    return out[:, :m].reshape(*lead, k, m)
 
 
 def quant_matmul(

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ip2_project import COMPILER_PARAMS_CLS
+
 
 def _qmm_kernel(a_ref, sa_ref, w_ref, sw_ref, o_ref, acc_ref, *, k_steps: int):
     @pl.when(pl.program_id(2) == 0)
@@ -72,7 +74,7 @@ def quant_matmul_pallas(
         out_specs=pl.BlockSpec((block_p, block_m), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((P, M), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_p, block_m), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=COMPILER_PARAMS_CLS(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

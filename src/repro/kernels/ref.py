@@ -25,6 +25,18 @@ def ip2_project_ref(
     return out - (params.v_ref - bias[None, :])
 
 
+def ip2_project_sparse_ref(
+    bank_idx: jnp.ndarray,
+    patches: jnp.ndarray,
+    w_q: jnp.ndarray,
+    bias: jnp.ndarray,
+    params: IP2KernelParams,
+) -> jnp.ndarray:
+    """Oracle for ip2_project_sparse_pallas with block_r=1 (same padded
+    shapes): an explicit gather followed by the dense projection."""
+    return ip2_project_ref(patches[bank_idx], w_q, bias, params)
+
+
 def quant_matmul_ref(
     a8: jnp.ndarray, s_a: jnp.ndarray, w8: jnp.ndarray, s_w: jnp.ndarray, out_dtype=jnp.float32
 ) -> jnp.ndarray:

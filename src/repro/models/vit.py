@@ -8,6 +8,20 @@ Pipeline per frame:
   -> linear embed -> transformer encoder (optionally with Fig. 4 QTH
   power-of-2 attention) -> masked mean-pool over ACTIVE patches -> classes.
 
+Two token layouts feed the same weights (DESIGN.md §4):
+
+* ``vit_forward``          — dense (..., P) token grid with deselected
+  patches zero-masked; attention keys are restricted to the active set
+  (a powered-down patch stores no charge, so it cannot be attended to).
+  Used for training / co-design, where gradients need the full grid.
+* ``vit_forward_compact``  — exactly the k active tokens, positional
+  embeddings looked up by patch index. Attention cost drops from O(P²) to
+  O(k²) (~16x fewer score FLOPs at 25 % activity; ~4x fewer tokens), and
+  the two layouts produce identical logits for the same selection.
+
+The compact forward also returns the per-patch attention the backend paid
+to each token — the saccade signal that selects the next frame's patches.
+
 The frontend is differentiable (STE quantizers), so the co-design loop
 trains A (the in-pixel weights) jointly with the backend — the study the
 paper describes in §1/§2.1.3.
@@ -20,11 +34,18 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.frontend import FrontendConfig, apply_frontend, init_frontend_params
+from repro.core.frontend import (
+    CompactFeatures,
+    FrontendConfig,
+    apply_frontend,
+    init_frontend_params,
+)
 from repro.models.layers import DEFAULT_PLAN, apply_mlp, dense_init, init_mlp, rms_norm
-from repro.models.attention import init_attention, attention_forward
+from repro.models.attention import init_attention
 from repro.configs.base import ModelConfig
-from repro.core.qth_attention import QTHSpec, qth_attention
+from repro.core.qth_attention import QTHSpec, qth_attention_weights
+
+NEG_INF = -1e30
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,38 +90,101 @@ def init_vit(key, cfg: ViTConfig) -> dict:
     return p
 
 
-def vit_forward(params: dict, rgb: jnp.ndarray, cfg: ViTConfig,
-                mask=None) -> jnp.ndarray:
-    """rgb (B, H, W, 3) -> class logits (B, n_classes)."""
-    bb = cfg.backbone_cfg()
-    feats, mask = apply_frontend(params["ip2"], rgb, cfg.frontend, mask=mask)
-    x = feats @ params["embed"] + params["pos"][None]
-    positions = jnp.arange(x.shape[1])
+def _encoder_attention(
+    lp: dict, h: jnp.ndarray, cfg: ViTConfig, token_valid: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Bidirectional self-attention over the patch tokens (dense grid or
+    compact active set — the sequence axis is whatever it is handed).
+
+    The token sequence is short (P <= a few hundred, k a quarter of that),
+    so scores are materialized explicitly; that also yields the attention
+    probabilities the saccade loop feeds back as next-frame saliency.
+
+    Returns (attn output (B, S, d), probs (B, H, S, S)).
+    """
+    dh = cfg.d_model // cfg.n_heads
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"]) + lp["attn"]["bq"]
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"]) + lp["attn"]["bk"]
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"]) + lp["attn"]["bv"]
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, k) / jnp.sqrt(jnp.asarray(dh, h.dtype))
+    if cfg.qth:
+        # Fig. 4: power-of-2 quantized attention coefficients
+        probs = qth_attention_weights(scores, QTHSpec(), key_valid=token_valid[:, None])
+    else:
+        scores = jnp.where(token_valid[:, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqs,bshk->bqhk", probs.astype(v.dtype), v)
+    return jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"]), probs
+
+
+def _encoder(
+    params: dict, x: jnp.ndarray, cfg: ViTConfig, token_valid: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Transformer trunk + masked mean pool. Returns (logits, received):
+    ``received`` (B, S) is the mean attention mass each token collected
+    across layers/heads/queries — the backend's saliency estimate."""
+    received = jnp.zeros(x.shape[:2], jnp.float32)
+    qv = token_valid.astype(jnp.float32)
+    n_q = jnp.maximum(jnp.sum(qv, axis=-1, keepdims=True), 1.0)
     for lp in params["layers"]:
         h = rms_norm(x, lp["norm1"], cfg.norm_eps)
-        if cfg.qth:
-            # Fig. 4: power-of-2 quantized attention coefficients
-            d, hd = cfg.d_model, cfg.d_model // cfg.n_heads
-            q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"]) + lp["attn"]["bq"]
-            k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"]) + lp["attn"]["bk"]
-            v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"]) + lp["attn"]["bv"]
-            o = qth_attention(
-                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-                v.transpose(0, 2, 1, 3), QTHSpec()
-            ).transpose(0, 2, 1, 3)
-            out = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
-        else:
-            out, _ = attention_forward(
-                lp["attn"], h, bb, positions, causal=False, use_rope=False
-            )
+        out, probs = _encoder_attention(lp, h, cfg, token_valid)
         x = x + out
         h = rms_norm(x, lp["norm2"], cfg.norm_eps)
         x = x + apply_mlp(lp["mlp"], h, "gelu")
+        # attention received per key token, averaged over heads and the
+        # valid queries (invalid query rows emit garbage probabilities)
+        per_key = jnp.einsum("bhqs,bq->bs", probs.astype(jnp.float32), qv)
+        received = received + per_key / (n_q * probs.shape[1])
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     # masked mean pool over the ACTIVE (ADC-converted) patches only
-    w = mask.astype(x.dtype)[..., None]
+    w = token_valid.astype(x.dtype)[..., None]
     pooled = jnp.sum(x * w, axis=1) / jnp.maximum(jnp.sum(w, axis=1), 1.0)
-    return pooled @ params["head"]
+    logits = pooled @ params["head"]
+    return logits, received / len(params["layers"])
+
+
+def vit_forward(params: dict, rgb: jnp.ndarray, cfg: ViTConfig,
+                mask=None) -> jnp.ndarray:
+    """Dense path: rgb (B, H, W, 3) -> class logits (B, n_classes)."""
+    feats, mask = apply_frontend(params["ip2"], rgb, cfg.frontend, mask=mask)
+    x = feats @ params["embed"] + params["pos"][None]
+    logits, _ = _encoder(params, x, cfg, mask)
+    return logits
+
+
+def vit_forward_compact(
+    params: dict,
+    rgb: jnp.ndarray,
+    cfg: ViTConfig,
+    indices: jnp.ndarray | None = None,
+    mask: jnp.ndarray | None = None,
+    project_fn=None,
+) -> tuple[jnp.ndarray, dict]:
+    """Compact path: frontend projects only the k selected patches, the
+    backend attends over exactly those k tokens (index-looked-up positional
+    embeddings), and the attention itself scores the next saccade.
+
+    Returns (logits (B, n_classes), aux) with aux:
+      ``indices`` (B, k)  — the patches that were ADC-converted;
+      ``valid``   (B, k)  — False only on filler slots (< k active);
+      ``saliency``(B, P)  — backend attention scattered back onto the patch
+        grid (unobserved patches score 0): frame t+1's selection signal.
+    """
+    cf: CompactFeatures = apply_frontend(
+        params["ip2"], rgb, cfg.frontend,
+        mask=mask, indices=indices, mode="compact", project_fn=project_fn,
+    )
+    # index-based positional embeddings: pos[idx], not pos broadcast over P
+    x = cf.features @ params["embed"] + params["pos"][cf.indices]
+    logits, received = _encoder(params, x, cfg, cf.valid)
+
+    received = jnp.where(cf.valid, received, 0.0)
+    b = jnp.arange(received.shape[0])[:, None]
+    saliency = jnp.zeros(
+        (received.shape[0], cfg.frontend.n_patches), jnp.float32
+    ).at[b, cf.indices].max(received)
+    return logits, {"indices": cf.indices, "valid": cf.valid, "saliency": saliency}
 
 
 def vit_loss(params, rgb, labels, cfg: ViTConfig):

@@ -1,5 +1,6 @@
 """Serving steps: batched prefill and single-token decode with greedy /
-temperature sampling. Factories return pure functions for jit."""
+temperature sampling, plus the IP2 closed saccade loop. Factories return
+pure functions for jit."""
 
 from __future__ import annotations
 
@@ -26,5 +27,88 @@ def make_decode_step(cfg: ModelConfig, plan: ParallelPlan, temperature: float = 
         else:
             nxt = jnp.argmax(logits, axis=-1)
         return nxt.astype(jnp.int32), logits, state
-
     return decode_one
+
+
+# ---------------------------------------------------------------------------
+# IP2 saccadic serving (paper §1 "shifted attention"; DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+def make_bootstrap_indices(cfg):
+    """First-frame selection, before any backend attention exists: the
+    in-pixel patch-energy proxy (cheap analog event detection) picks the
+    initial k patches. Returns a jit-ready fn rgb (B,H,W,3) -> (B,k) int32.
+    """
+    from repro.core import frontend as fe
+    from repro.core import saliency as sal
+
+    fcfg = cfg.frontend
+
+    def bootstrap(params, rgb):
+        patches, _ = fe.sensor_patches(params["ip2"], rgb, fcfg)
+        return sal.topk_patch_indices(sal.patch_energy(patches), fcfg.n_active)
+
+    return bootstrap
+
+
+def make_saccade_step(cfg, explore: float = 0.1, project_fn=None):
+    """Closed-loop serving step on the compact path end to end.
+
+    Frame t: the frontend gathers and projects ONLY the k patches the
+    backend attended to on frame t-1; the backend classifies the k compact
+    tokens; its attention over those tokens — scattered back onto the patch
+    grid — is frame t+1's selection. Nothing in the loop ever materializes
+    the dense (P, M) feature grid, so compute, ADC conversions, and
+    streamed bytes all scale with the active fraction.
+
+    Args:
+      cfg: ViTConfig (imported lazily to keep serve import-light).
+      explore: weight on the (per-frame max-normalized) in-pixel
+        patch-energy proxy added to the saliency before the top-k, letting
+        bright unobserved events pull the gaze. Unobserved patches score
+        the mean observed attention (absence of evidence, not zero
+        saliency) — raw attention mass on observed tokens would otherwise
+        structurally dominate and freeze the gaze on the bootstrap set
+        forever. An infinitesimal energy term is kept even at explore=0 so
+        the otherwise-tied unobserved candidates rank by scene content
+        rather than by top_k's lowest-index tie-break (which would drift
+        the gaze toward patch 0); at explore=0 selection changes only when
+        a patch out-attends the observed mean, and the freed slot goes to
+        the brightest unobserved patch.
+      project_fn: optional kernel-backed projection (e.g.
+        ``ops.ip2_project_fn(cfg.frontend.patch, interpret=...)``) applied
+        to the gathered active patches.
+
+    Returns step(params, rgb, indices) -> (logits, next_indices, aux),
+    pure and jit-able; ``indices`` for the first frame come from
+    :func:`make_bootstrap_indices`.
+    """
+    from repro.core import frontend as fe
+    from repro.core import saliency as sal
+    from repro.models.vit import vit_forward_compact
+
+    fcfg = cfg.frontend
+
+    def step(params, rgb, indices):
+        logits, aux = vit_forward_compact(
+            params, rgb, cfg, indices=indices, project_fn=project_fn
+        )
+        att = aux["saliency"]                               # (B, P), 0 unobserved
+        b = jnp.arange(att.shape[0])[:, None]
+        observed = jnp.zeros(att.shape, bool).at[b, aux["indices"]].max(aux["valid"])
+        # unobserved patches carry the mean observed attention as a prior:
+        # below-average tokens get shed, unseen patches get a fair shot
+        n_obs = jnp.maximum(observed.sum(-1, keepdims=True), 1)
+        baseline = att.sum(-1, keepdims=True) / n_obs
+        scores = jnp.where(observed, att, baseline)
+        patches, _ = fe.sensor_patches(params["ip2"], rgb, fcfg)
+        energy = sal.patch_energy(patches)
+        energy = energy / jnp.maximum(
+            jnp.max(energy, axis=-1, keepdims=True), 1e-9
+        )
+        # baseline-scaled; the 1e-3 floor is a content-aware tie-break only
+        scores = scores + max(explore, 1e-3) * baseline * energy
+        next_indices = sal.topk_patch_indices(scores, fcfg.n_active)
+        return logits, next_indices, aux
+
+    return step

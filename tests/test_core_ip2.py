@@ -148,6 +148,51 @@ class TestSaliencyADC:
         mask = c.topk_patch_mask(scores, 0.25)
         np.testing.assert_allclose(np.asarray(mask.sum(-1)), 16)
 
+    def test_topk_mask_tied_scores_exactly_k(self):
+        """Regression: equal scores must never over-select. The old
+        ``scores >= thresh`` comparison returned every tied patch, breaking
+        compact_active's exactly-k contract."""
+        scores = jnp.ones((2, 16))                       # all tied
+        mask = c.topk_patch_mask(scores, 0.25)
+        np.testing.assert_allclose(np.asarray(mask.sum(-1)), 4)
+        # deterministic tie-break: lowest patch indices win
+        assert bool(mask[:, :4].all()) and not bool(mask[:, 4:].any())
+        # partial tie at the threshold value
+        scores = jnp.array([[0.9, 0.5, 0.5, 0.5, 0.5, 0.1, 0.0, 0.0]])
+        mask = c.topk_patch_mask(scores, 0.25)           # k = 2
+        np.testing.assert_allclose(np.asarray(mask), [[True, True] + [False] * 6])
+
+    def test_topk_indices_deterministic_and_sorted_by_score(self):
+        scores = jnp.array([[0.1, 0.7, 0.7, 0.9, 0.0]])
+        idx = c.topk_patch_indices(scores, 3)
+        np.testing.assert_array_equal(np.asarray(idx), [[3, 1, 2]])
+
+    def test_mask_index_roundtrip(self):
+        scores = jax.random.uniform(KEY, (4, 32))
+        idx = c.topk_patch_indices(scores, 8)
+        mask = c.mask_from_indices(idx, 32)
+        np.testing.assert_allclose(np.asarray(mask.sum(-1)), 8)
+        idx2, valid = c.indices_from_mask(mask, 8)
+        assert bool(valid.all())
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(idx), -1), np.asarray(idx2)   # ascending order
+        )
+
+    def test_indices_from_mask_fewer_than_k(self):
+        mask = jnp.zeros((1, 8), bool).at[0, 2].set(True).at[0, 6].set(True)
+        idx, valid = c.indices_from_mask(mask, 4)
+        np.testing.assert_array_equal(np.asarray(idx[0, :2]), [2, 6])
+        np.testing.assert_array_equal(np.asarray(valid), [[True, True, False, False]])
+
+    def test_compact_active_exactly_k_on_ties(self):
+        feats = jax.random.normal(KEY, (2, 16, 4))
+        mask = c.topk_patch_mask(jnp.ones((2, 16)), 0.25)
+        compact, idx = c.compact_active(feats, mask, 4)
+        assert compact.shape == (2, 4, 4) and idx.shape == (2, 4)
+        np.testing.assert_allclose(
+            np.asarray(compact), np.asarray(feats[:, :4])    # ties -> lowest idx
+        )
+
     def test_adc_levels(self):
         spec = c.ADCSpec(bits=8)
         x = jnp.linspace(-1, 1, 3000)

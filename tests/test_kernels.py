@@ -1,11 +1,18 @@
 """Per-kernel allclose vs the pure-jnp oracle (interpret=True on CPU),
-swept over shapes/dtypes + hypothesis property tests."""
+swept over shapes/dtypes + hypothesis property tests (the property tests
+are skipped when hypothesis is not installed; see requirements-dev.txt)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import adc as adc_mod
 from repro.core import projection as proj
@@ -92,47 +99,131 @@ def test_quant_matmul_accuracy_vs_float():
 
 
 # ---------------------------------------------------------------------------
+# sparse (active-patch-only) projection kernel
+# ---------------------------------------------------------------------------
+
+class TestSparseProjection:
+    def _dense_gather(self, patches, w, idx, spec, **kw):
+        dense = ops.ip2_project(patches, w, spec, interpret=True, **kw)
+        return jnp.take_along_axis(dense, idx[..., None], axis=-2)
+
+    @pytest.mark.parametrize("patch,n_vec,n_patches,k", [
+        (8, 16, 16, 4),
+        (16, 192, 12, 3),      # n_vec not a multiple of 128
+        (16, 32, 16, 16),      # k == P (compact degenerates to dense)
+    ])
+    def test_sparse_matches_dense_gather_random_sets(self, patch, n_vec, n_patches, k):
+        spec = proj.PatchSpec(patch_h=patch, patch_w=patch, n_vectors=n_vec)
+        patches = jax.random.uniform(KEY, (2, n_patches, patch * patch))
+        w = jax.random.normal(jax.random.PRNGKey(1), (n_vec, patch * patch)) * 2.0
+        idx = jax.random.permutation(
+            jax.random.PRNGKey(2), jnp.arange(n_patches)
+        )[None, :k].repeat(2, 0)
+        out_s = ops.ip2_project_sparse(patches, w, idx, spec, interpret=True)
+        want = self._dense_gather(patches, w, idx, spec)
+        assert out_s.shape == (2, k, n_vec)
+        np.testing.assert_allclose(np.asarray(out_s), np.asarray(want), atol=1e-5)
+
+    def test_sparse_with_fused_adc_and_bias(self):
+        spec = proj.PatchSpec(patch_h=8, patch_w=8, n_vectors=24)
+        adc = adc_mod.ADCSpec(bits=6)
+        patches = jax.random.uniform(KEY, (3, 9, 64))
+        w = jax.random.normal(jax.random.PRNGKey(1), (24, 64)) * 3.0
+        bias = jax.random.normal(jax.random.PRNGKey(2), (24,)) * 0.1
+        idx = jnp.array([[0, 8, 4], [7, 1, 2], [3, 3, 5]], jnp.int32)
+        out_s = ops.ip2_project_sparse(
+            patches, w, idx, spec, adc=adc, bias=bias, interpret=True
+        )
+        want = self._dense_gather(patches, w, idx, spec, adc=adc, bias=bias)
+        np.testing.assert_allclose(np.asarray(out_s), np.asarray(want), atol=1e-5)
+
+    def test_sparse_repeated_indices_fewer_than_k_active(self):
+        """< k active patches: the selector pads by repeating indices; the
+        kernel must simply project the repeated bank again."""
+        spec = proj.PatchSpec(patch_h=8, patch_w=8, n_vectors=16)
+        patches = jax.random.uniform(KEY, (1, 8, 64))
+        w = jax.random.normal(jax.random.PRNGKey(1), (16, 64))
+        idx = jnp.array([[2, 5, 5, 5]], jnp.int32)      # only 2 distinct active
+        out_s = ops.ip2_project_sparse(patches, w, idx, spec, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out_s[0, 1]), np.asarray(out_s[0, 2]), atol=0
+        )
+        want = self._dense_gather(patches, w, idx, spec)
+        np.testing.assert_allclose(np.asarray(out_s), np.asarray(want), atol=1e-5)
+
+    def test_sparse_kernel_vs_padded_oracle(self):
+        """Direct padded-shape parity: pallas entry vs ref oracle."""
+        from repro.kernels.ip2_project_sparse import ip2_project_sparse_pallas
+
+        params = IP2KernelParams(n2=64, adc_enable=False)
+        patches = jax.random.uniform(KEY, (16, 256))
+        w = jax.random.normal(jax.random.PRNGKey(1), (256, 128))
+        bias = jnp.zeros((128,))
+        idx = jnp.array([3, 15, 0, 7, 7, 11], jnp.int32)
+        got = ip2_project_sparse_pallas(
+            idx, patches, w, bias, params, block_m=128, block_k=256, interpret=True
+        )
+        want = ref.ip2_project_sparse_ref(idx, patches, w, bias, params)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # hypothesis property tests
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=20, deadline=None)
-@given(
-    n_patches=st.integers(1, 9),
-    n_vec=st.integers(1, 40),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_ip2_kernel_property_allclose(n_patches, n_vec, seed):
-    spec = proj.PatchSpec(patch_h=8, patch_w=8, n_vectors=n_vec)
-    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
-    patches = jax.random.uniform(k1, (n_patches, 64))
-    w = jax.random.normal(k2, (n_vec, 64)) * 2.0
-    out_k = ops.ip2_project(patches, w, spec, interpret=True)
-    out_r = proj.analog_project_patches(patches, w, spec)
-    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-5)
+if HAVE_HYPOTHESIS:
 
-
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1))
-def test_ip2_output_bounded_by_rails(seed):
-    """Analog outputs can never exceed the voltage rails (physics)."""
-    from repro.core.analog_nl import AnalogNLSpec
-
-    spec = proj.PatchSpec(
-        patch_h=8, patch_w=8, n_vectors=8, nl=AnalogNLSpec(kind="relu", v_sat=1.0)
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_patches=st.integers(1, 9),
+        n_vec=st.integers(1, 40),
+        seed=st.integers(0, 2**31 - 1),
     )
-    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
-    patches = jax.random.uniform(k1, (3, 64))
-    w = jax.random.normal(k2, (8, 64)) * 50.0   # absurd weight currents
-    out = ops.ip2_project(patches, w, spec, interpret=True)
-    assert float(out.min()) >= 0.0 and float(out.max()) <= 1.0
+    def test_ip2_kernel_property_allclose(n_patches, n_vec, seed):
+        spec = proj.PatchSpec(patch_h=8, patch_w=8, n_vectors=n_vec)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        patches = jax.random.uniform(k1, (n_patches, 64))
+        w = jax.random.normal(k2, (n_vec, 64)) * 2.0
+        out_k = ops.ip2_project(patches, w, spec, interpret=True)
+        out_r = proj.analog_project_patches(patches, w, spec)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-5)
 
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 9))
+    def test_sparse_kernel_property_allclose(seed, k):
+        """Sparse == gather(dense) for arbitrary random active sets."""
+        spec = proj.PatchSpec(patch_h=8, patch_w=8, n_vectors=16)
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        patches = jax.random.uniform(k1, (9, 64))
+        w = jax.random.normal(k2, (16, 64)) * 2.0
+        idx = jax.random.randint(k3, (k,), 0, 9)
+        out_s = ops.ip2_project_sparse(patches, w, idx, spec, interpret=True)
+        dense = ops.ip2_project(patches, w, spec, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out_s), np.asarray(dense[idx]), atol=1e-5
+        )
 
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1), bits=st.integers(2, 8))
-def test_pwm_monotone_property(seed, bits):
-    """PWM quantization is monotone non-decreasing (a comparator ramp)."""
-    from repro.core.pwm import pwm_quantize
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_ip2_output_bounded_by_rails(seed):
+        """Analog outputs can never exceed the voltage rails (physics)."""
+        from repro.core.analog_nl import AnalogNLSpec
 
-    x = jnp.sort(jax.random.uniform(jax.random.PRNGKey(seed), (100,)))
-    q = pwm_quantize(x, QuantSpec(pwm_bits=bits))
-    assert bool(jnp.all(jnp.diff(q) >= 0))
+        spec = proj.PatchSpec(
+            patch_h=8, patch_w=8, n_vectors=8, nl=AnalogNLSpec(kind="relu", v_sat=1.0)
+        )
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        patches = jax.random.uniform(k1, (3, 64))
+        w = jax.random.normal(k2, (8, 64)) * 50.0   # absurd weight currents
+        out = ops.ip2_project(patches, w, spec, interpret=True)
+        assert float(out.min()) >= 0.0 and float(out.max()) <= 1.0
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), bits=st.integers(2, 8))
+    def test_pwm_monotone_property(seed, bits):
+        """PWM quantization is monotone non-decreasing (a comparator ramp)."""
+        from repro.core.pwm import pwm_quantize
+
+        x = jnp.sort(jax.random.uniform(jax.random.PRNGKey(seed), (100,)))
+        q = pwm_quantize(x, QuantSpec(pwm_bits=bits))
+        assert bool(jnp.all(jnp.diff(q) >= 0))

@@ -16,7 +16,9 @@ from repro.core.frontend import FrontendConfig
 from repro.core.projection import PatchSpec
 from repro.data.pipeline import SceneStream
 from repro.kernels import ops
-from repro.models.vit import ViTConfig, init_vit, vit_forward, vit_loss
+from repro.models.vit import (
+    ViTConfig, init_vit, vit_forward, vit_forward_compact, vit_loss,
+)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -79,6 +81,103 @@ class TestFrontendPipeline:
         assert 0.01 < float(jnp.std(feats)) < 1.0   # ADC range used, not clipped
 
 
+class TestCompactDataflow:
+    """select -> gather -> project: the compact path must be bit-identical
+    (up to dtype/order-of-summation) to the dense-then-mask path."""
+
+    def test_compact_features_equal_dense_gather_same_mask(self):
+        fcfg = _fcfg()
+        params = c.init_frontend_params(KEY, fcfg)
+        rgb = jax.random.uniform(KEY, (3, 64, 64, 3))
+        dense, mask = c.apply_frontend(params, rgb, fcfg)
+        cf = c.apply_frontend(params, rgb, fcfg, mask=mask, mode="compact")
+        gathered = jnp.take_along_axis(dense, cf.indices[..., None], axis=-2)
+        assert cf.features.shape == (3, 4, 32)
+        assert bool(cf.valid.all())
+        np.testing.assert_allclose(
+            np.asarray(cf.features), np.asarray(gathered), atol=1e-6
+        )
+
+    def test_compact_with_kernel_project_fn(self):
+        fcfg = _fcfg()
+        params = c.init_frontend_params(KEY, fcfg)
+        rgb = jax.random.uniform(KEY, (2, 64, 64, 3))
+        cf_ref = c.apply_frontend(params, rgb, fcfg, mode="compact")
+        cf_k = c.apply_frontend(
+            params, rgb, fcfg, mode="compact", indices=cf_ref.indices,
+            project_fn=ops.ip2_project_fn(fcfg.patch, interpret=True),
+        )
+        np.testing.assert_allclose(
+            np.asarray(cf_k.features), np.asarray(cf_ref.features), atol=1e-5
+        )
+
+    def test_sparse_kernel_matches_compact_frontend(self):
+        """The fused scalar-prefetch kernel (gather inside the kernel)
+        computes the same features as gather-then-project."""
+        fcfg = _fcfg()
+        params = c.init_frontend_params(KEY, fcfg)
+        rgb = jax.random.uniform(KEY, (2, 64, 64, 3))
+        patches, weights = c.sensor_patches(params, rgb, fcfg)
+        idx = c.topk_patch_indices(c.patch_energy(patches), fcfg.n_active)
+        feats_k = ops.ip2_project_sparse(
+            patches, weights, idx, fcfg.patch,
+            adc=fcfg.adc, bias=params["bias"], interpret=True,
+        )
+        cf = c.apply_frontend(params, rgb, fcfg, mode="compact", indices=idx)
+        np.testing.assert_allclose(
+            np.asarray(feats_k), np.asarray(cf.features), atol=1e-5
+        )
+
+    @pytest.mark.parametrize("qth", [False, True])
+    def test_vit_dense_vs_compact_equivalence(self, qth):
+        """Same selection => identical logits from the (..., P) zero-masked
+        grid and the (..., k) compact token layout."""
+        fcfg = _fcfg()
+        cfg = ViTConfig(frontend=fcfg, n_layers=2, d_model=64, n_heads=4,
+                        d_ff=128, qth=qth)
+        params = init_vit(KEY, cfg)
+        rgb = jax.random.uniform(jax.random.PRNGKey(5), (3, 64, 64, 3))
+        patches = c.extract_patches(c.mosaic(rgb), 16, 16)
+        mask = c.topk_patch_mask(c.patch_energy(patches), 0.25)
+        logits_dense = vit_forward(params, rgb, cfg, mask=mask)
+        logits_compact, aux = vit_forward_compact(params, rgb, cfg, mask=mask)
+        np.testing.assert_allclose(
+            np.asarray(logits_dense), np.asarray(logits_compact), atol=2e-5
+        )
+        # backend saliency lives only on observed patches
+        sal = np.asarray(aux["saliency"])
+        m = np.asarray(mask)
+        assert (sal[~m] == 0.0).all() and (sal[m] > 0.0).all()
+
+    def test_vit_dense_vs_compact_fewer_than_k_active(self):
+        fcfg = _fcfg()
+        cfg = ViTConfig(frontend=fcfg, n_layers=1, d_model=32, n_heads=2, d_ff=64)
+        params = init_vit(KEY, cfg)
+        rgb = jax.random.uniform(KEY, (2, 64, 64, 3))
+        mask = jnp.zeros((2, 16), bool).at[:, 3].set(True).at[:, 11].set(True)
+        logits_dense = vit_forward(params, rgb, cfg, mask=mask)
+        logits_compact, _ = vit_forward_compact(params, rgb, cfg, mask=mask)
+        np.testing.assert_allclose(
+            np.asarray(logits_dense), np.asarray(logits_compact), atol=2e-5
+        )
+
+    def test_compact_path_ste_gradients_reach_frontend(self):
+        """The co-design gradients flow through gather + STE quantizers on
+        the compact path (not just the dense one)."""
+        fcfg = _fcfg()
+        cfg = ViTConfig(frontend=fcfg, n_layers=1, d_model=32, n_heads=2, d_ff=64)
+        params = init_vit(KEY, cfg)
+        rgb = jax.random.uniform(KEY, (2, 64, 64, 3))
+
+        def loss(p):
+            logits, _ = vit_forward_compact(p, rgb, cfg)
+            return jnp.sum(logits ** 2)
+
+        g = jax.grad(loss)(params)
+        assert float(jnp.abs(g["ip2"]["a_rgb"]).max()) > 0.0
+        assert float(jnp.abs(g["ip2"]["bias"]).max()) > 0.0
+
+
 class TestCoDesignTraining:
     def test_ip2_vit_learns(self):
         """The analog frontend is trainable end-to-end (STE through PWM/DAC/
@@ -133,6 +232,38 @@ class TestServing:
             mask = c.topk_patch_mask(c.patch_energy(patches), 0.25)
             assert logits.shape == (4, 4)
             assert int(mask.sum()) == 4 * 4   # 25% of 16 patches x batch 4
+
+    def test_closed_saccade_loop_fully_compact(self):
+        """Frame t's selection comes from frame t-1's backend attention,
+        end to end on the compact path: static shapes, exactly-k indices,
+        and no dense (P, M) feature grid anywhere in the jitted step."""
+        from repro.serve.serve_step import make_bootstrap_indices, make_saccade_step
+
+        cfg = ViTConfig(frontend=_fcfg(), n_layers=1, d_model=32, n_heads=2, d_ff=64)
+        params = init_vit(KEY, cfg)
+        stream = SceneStream(image=64)
+        bootstrap = jax.jit(make_bootstrap_indices(cfg))
+        step = jax.jit(make_saccade_step(cfg))
+        k = cfg.frontend.n_active
+
+        indices = None
+        selections = []
+        for t in range(4):
+            rgb, _ = stream.batch(t, 4)
+            rgb = jnp.asarray(rgb)
+            if indices is None:
+                indices = bootstrap(params, rgb)
+            logits, indices, aux = step(params, rgb, indices)
+            assert logits.shape == (4, 4)
+            assert indices.shape == (4, k) and indices.dtype == jnp.int32
+            # exactly k distinct patches per element (top-k of scattered
+            # attention can't repeat an index)
+            assert all(len(set(row)) == k for row in np.asarray(indices))
+            assert bool(aux["valid"].all())
+            selections.append({tuple(sorted(r)) for r in np.asarray(indices)})
+        # the gaze must be able to move: a frozen selection means the
+        # attention/energy scores can never outrank the bootstrap set
+        assert any(selections[i] != selections[i + 1] for i in range(3))
 
 
 @pytest.mark.skipif(
