@@ -1,4 +1,4 @@
-"""Benchmark harness — one module per paper table/figure (DESIGN.md §6).
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §7).
 
 Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_throughput.json``
 (all rows, keyed by module) so successive PRs accumulate a perf trajectory.

@@ -1,64 +1,104 @@
-"""Serving loop with saccadic attention (paper §1 'shifted attention').
+"""Saccadic serving on the multi-stream engine (paper §1 'shifted
+attention'; DESIGN.md §5).
 
     PYTHONPATH=src python examples/serve_saccade.py
 
-Simulates the sensor<->backend closed loop over a video stream of batched
-requests, entirely on the compact path: frame t's patch selection comes
-from the backend's attention on frame t-1 (the saccade), only those ~25 %
-of patches are gathered, projected, and ADC-converted — the paper's 10x
-bandwidth reduction — and the backend attends over exactly k compact
-tokens (O(k²) instead of O(P²) attention). The dense (P, M) feature grid
-is never materialized anywhere in the loop.
+Two scenarios, both entirely on the compact path (frame t's patch
+selection comes from the backend's attention on frame t-1; only those
+~25 % of patches are gathered, projected, and ADC-converted — the paper's
+10x bandwidth reduction — and the backend attends over exactly k compact
+tokens, O(k²) instead of O(P²)):
+
+1. **Single camera** through a capacity-1 engine — the PR-1 demo, now on
+   the engine API.
+2. **Multi-camera fleet**: four slots, cameras joining and leaving
+   mid-serve. Slot-based state means churn never changes a tensor shape,
+   so the batched step compiles exactly once for the whole scenario.
 """
 
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.data.pipeline import SceneStream
 from repro.models.vit import ViTConfig, init_vit
-from repro.serve.serve_step import make_bootstrap_indices, make_saccade_step
+from repro.serve.engine import SaccadeEngine
 from repro.core.frontend import FrontendConfig
 from repro.core.projection import PatchSpec
 
 
-def main():
+def make_cfg():
     fcfg = FrontendConfig(
         image_h=64, image_w=64,
         patch=PatchSpec(patch_h=16, patch_w=16, n_vectors=32),
         active_fraction=0.25,
     )
-    cfg = ViTConfig(frontend=fcfg, n_layers=2, d_model=64, n_heads=4, d_ff=128)
-    params = init_vit(jax.random.PRNGKey(0), cfg)
+    return ViTConfig(frontend=fcfg, n_layers=2, d_model=64, n_heads=4, d_ff=128)
+
+
+def single_camera(cfg, params):
+    print("=== scenario 1: single camera, closed saccade loop ===")
+    fcfg = cfg.frontend
     stream = SceneStream(image=64)
-    batch_size = 16
+    engine = SaccadeEngine(cfg, params, capacity=1)
+    engine.admit("cam0")
 
-    bootstrap = jax.jit(make_bootstrap_indices(cfg))
-    step = jax.jit(make_saccade_step(cfg, explore=0.1))
-
-    indices = None
-    n_total = fcfg.n_patches * batch_size
     k = fcfg.n_active
     t0 = time.time()
+    hits = 0
     for t in range(10):
-        rgb, labels = stream.batch(t, batch_size)
-        rgb = jnp.asarray(rgb)
-        if indices is None:
-            indices = bootstrap(params, rgb)       # frame 0: in-pixel energy
-        logits, indices, aux = step(params, rgb, indices)
-        acc = float(jnp.mean((jnp.argmax(logits, -1) == jnp.asarray(labels))))
-        active = int(aux["valid"].sum())
-        print(f"frame {t}: {active}/{n_total} patches ADC-converted "
-              f"({active / n_total:.0%}), acc(untrained)={acc:.2f}")
+        rgb, labels = stream.batch(t, 1)
+        logits = engine.step({"cam0": rgb[0]})["cam0"]
+        hits += int(np.argmax(logits) == labels[0])
+        print(f"frame {t}: {k}/{fcfg.n_patches} patches ADC-converted "
+              f"({k / fcfg.n_patches:.0%}), gaze -> {sorted(map(int, engine.gaze('cam0')))}")
     dt = (time.time() - t0) / 10
-    feats_per_frame = k * fcfg.patch.n_vectors * batch_size
-    pixels_per_frame = batch_size * 64 * 64 * 3
-    print(f"\n{dt * 1e3:.0f} ms/frame (CPU sim); stream: {feats_per_frame} "
-          f"features vs {pixels_per_frame} RGB px = "
-          f"{pixels_per_frame / feats_per_frame:.1f}x reduction; "
-          f"backend attends {k} tokens instead of {fcfg.n_patches} "
-          f"({(fcfg.n_patches / k) ** 2:.0f}x fewer attention scores)")
+    feats = k * fcfg.patch.n_vectors
+    pixels = 64 * 64 * 3
+    print(f"{dt * 1e3:.0f} ms/frame (CPU sim); stream: {feats} features vs "
+          f"{pixels} RGB px = {pixels / feats:.1f}x reduction; backend attends "
+          f"{k} tokens instead of {fcfg.n_patches} "
+          f"({(fcfg.n_patches / k) ** 2:.0f}x fewer attention scores); "
+          f"acc(untrained)={hits / 10:.2f}\n")
+
+
+def multi_camera(cfg, params):
+    print("=== scenario 2: camera fleet with join/leave, one compilation ===")
+    stream = SceneStream(seed=11, image=64)
+    engine = SaccadeEngine(cfg, params, capacity=4, ema_decay=0.5)
+
+    # a little schedule: (frame, action, camera)
+    schedule = {0: [("admit", "lobby"), ("admit", "dock")],
+                3: [("admit", "gate")],
+                6: [("evict", "dock"), ("admit", "roof")]}
+    t0 = time.time()
+    frames_served = 0
+    for t in range(10):
+        for op, cam in schedule.get(t, []):
+            getattr(engine, op)(cam)
+            print(f"frame {t}: {op} {cam!r:8} "
+                  f"({engine.capacity - engine.free_slots}/{engine.capacity} slots)")
+        rgb, _ = stream.batch(t, engine.capacity)
+        frames = {cam: rgb[engine.slot_of(cam)] for cam in engine.stream_ids}
+        out = engine.step(frames)
+        frames_served += len(out)
+    dt = time.time() - t0
+    ages = {cam: int(engine.state.frame_age[engine.slot_of(cam)])
+            for cam in engine.stream_ids}
+    print(f"served {frames_served} stream-frames in {dt * 1e3:.0f} ms "
+          f"({frames_served / dt:.0f} stream-frames/s CPU sim)")
+    print(f"per-camera frame ages: {ages}")
+    print(f"batched step compiled {engine.n_traces}x across the whole "
+          f"admit/evict schedule (slot-based state: shapes never change)")
+    assert engine.n_traces == 1
+
+
+def main():
+    cfg = make_cfg()
+    params = init_vit(jax.random.PRNGKey(0), cfg)
+    single_camera(cfg, params)
+    multi_camera(cfg, params)
 
 
 if __name__ == "__main__":

@@ -78,11 +78,17 @@ class CompactFeatures(NamedTuple):
     ``indices[..., i]``; ``valid[..., i]`` is False only when fewer than k
     patches were active and slot i is a repeated filler (never the case
     when selection comes from the exactly-k index-first API).
+
+    ``energy`` is the in-pixel patch-energy proxy over the FULL grid — the
+    photodiodes integrate light regardless of selection, so this signal is
+    free; the saccade loop consumes it from here instead of re-running
+    :func:`sensor_patches` (DESIGN.md §5).
     """
 
     features: jnp.ndarray   # (..., k, M)
     indices: jnp.ndarray    # (..., k) int32 patch indices
     valid: jnp.ndarray      # (..., k) bool
+    energy: jnp.ndarray     # (..., P) float32 patch-energy proxy
 
 
 def init_frontend_params(key: jax.Array, cfg: FrontendConfig) -> dict:
@@ -162,6 +168,7 @@ def apply_frontend(
     project_fn: ProjectFn | None = None,
     mode: str = "dense",
     indices: jnp.ndarray | None = None,
+    precomputed: tuple[jnp.ndarray, jnp.ndarray] | None = None,
 ):
     """rgb (..., H, W, 3) in [0,1] -> frontend features.
 
@@ -169,6 +176,10 @@ def apply_frontend(
     ``indices`` (..., k) takes precedence, then ``mask`` (..., P); if both
     are None a patch-energy top-k stand-in is used. ``project_fn`` lets the
     Pallas kernel replace the reference einsum (same signature/semantics).
+    ``precomputed`` is an optional ``(patches, weights)`` pair from an
+    earlier :func:`sensor_patches` call on the same frame, so callers that
+    already needed the CDS patch voltages (e.g. the serving engine's
+    in-step bootstrap) don't pay for the optics/mosaic stage twice.
 
     Returns (mode="dense"):   (features (..., P, M), mask (..., P)) with
       deselected patches zeroed — compute scales with P.
@@ -178,7 +189,10 @@ def apply_frontend(
     if mode not in ("dense", "compact"):
         raise ValueError(f"mode must be 'dense' or 'compact', got {mode!r}")
     k = cfg.n_active
-    patches, weights = sensor_patches(params, rgb, cfg)
+    if precomputed is not None:
+        patches, weights = precomputed
+    else:
+        patches, weights = sensor_patches(params, rgb, cfg)
 
     if mode == "dense":
         if indices is not None:                  # same precedence as compact
@@ -192,6 +206,7 @@ def apply_frontend(
 
     # compact: resolve the selection to exactly-k indices, gather the active
     # patches, and only then spend analog compute / ADC conversions on them.
+    energy = sal_mod.patch_energy(patches)
     if indices is not None:
         idx = indices.astype(jnp.int32)
         if idx.shape[-1] != k:
@@ -200,13 +215,13 @@ def apply_frontend(
     elif mask is not None:
         idx, valid = sal_mod.indices_from_mask(mask, k)
     else:
-        idx = sal_mod.topk_patch_indices(sal_mod.patch_energy(patches), k)
+        idx = sal_mod.topk_patch_indices(energy, k)
         valid = jnp.ones(idx.shape, bool)
 
     active = sal_mod.gather_patches(patches, idx)                    # (..., k, N)
     feats = project_readout(active, weights, params, cfg, project_fn)
     feats = feats * valid[..., None].astype(feats.dtype)
-    return CompactFeatures(feats, idx, valid)
+    return CompactFeatures(feats, idx, valid, energy)
 
 
 def compact_features(

@@ -145,12 +145,23 @@ def _encoder(
 
 
 def vit_forward(params: dict, rgb: jnp.ndarray, cfg: ViTConfig,
-                mask=None) -> jnp.ndarray:
-    """Dense path: rgb (B, H, W, 3) -> class logits (B, n_classes)."""
+                mask=None, return_aux: bool = False):
+    """Dense path: rgb (B, H, W, 3) -> class logits (B, n_classes).
+
+    With ``return_aux=True`` also returns ``{"mask", "saliency"}`` —
+    ``saliency`` (B, P) is the backend attention each patch received
+    (0 on deselected patches). Together with the selection and a
+    ``patch_energy`` pass this lets the dense path act as a saccade
+    oracle (see tests/test_system.py, which assembles the full
+    ``saccade_scores`` aux from these pieces).
+    """
     feats, mask = apply_frontend(params["ip2"], rgb, cfg.frontend, mask=mask)
     x = feats @ params["embed"] + params["pos"][None]
-    logits, _ = _encoder(params, x, cfg, mask)
-    return logits
+    logits, received = _encoder(params, x, cfg, mask)
+    if not return_aux:
+        return logits
+    saliency = jnp.where(mask, received, 0.0)
+    return logits, {"mask": mask, "saliency": saliency}
 
 
 def vit_forward_compact(
@@ -160,20 +171,29 @@ def vit_forward_compact(
     indices: jnp.ndarray | None = None,
     mask: jnp.ndarray | None = None,
     project_fn=None,
+    precomputed=None,
 ) -> tuple[jnp.ndarray, dict]:
     """Compact path: frontend projects only the k selected patches, the
     backend attends over exactly those k tokens (index-looked-up positional
     embeddings), and the attention itself scores the next saccade.
 
+    ``precomputed`` optionally forwards an existing ``(patches, weights)``
+    pair from :func:`repro.core.frontend.sensor_patches` (the serving
+    engine computes it once for its in-step bootstrap).
+
     Returns (logits (B, n_classes), aux) with aux:
       ``indices`` (B, k)  — the patches that were ADC-converted;
       ``valid``   (B, k)  — False only on filler slots (< k active);
       ``saliency``(B, P)  — backend attention scattered back onto the patch
-        grid (unobserved patches score 0): frame t+1's selection signal.
+        grid (unobserved patches score 0): frame t+1's selection signal;
+      ``energy``  (B, P)  — the in-pixel patch-energy proxy (free from the
+        frontend; the saccade explore term reads it here instead of
+        re-running ``sensor_patches``).
     """
     cf: CompactFeatures = apply_frontend(
         params["ip2"], rgb, cfg.frontend,
         mask=mask, indices=indices, mode="compact", project_fn=project_fn,
+        precomputed=precomputed,
     )
     # index-based positional embeddings: pos[idx], not pos broadcast over P
     x = cf.features @ params["embed"] + params["pos"][cf.indices]
@@ -184,7 +204,10 @@ def vit_forward_compact(
     saliency = jnp.zeros(
         (received.shape[0], cfg.frontend.n_patches), jnp.float32
     ).at[b, cf.indices].max(received)
-    return logits, {"indices": cf.indices, "valid": cf.valid, "saliency": saliency}
+    return logits, {
+        "indices": cf.indices, "valid": cf.valid,
+        "saliency": saliency, "energy": cf.energy,
+    }
 
 
 def vit_loss(params, rgb, labels, cfg: ViTConfig):

@@ -1,0 +1,303 @@
+"""Multi-stream saccadic serving engine (DESIGN.md §5).
+
+The paper's switched-cap readout is non-destructive precisely to enable
+processing parallelism at <30 mW/MP; the backend half of that story is
+serving MANY camera streams through ONE compiled program. This module
+batches N independent streams through the compact saccade path
+(`serve_step.make_saccade_step`'s exact per-frame semantics) in a single
+jitted step:
+
+* **Slots, not streams.** The engine owns ``capacity`` fixed slots; every
+  device tensor is slot-major with a static leading axis, so the batched
+  step is a pure function of ``(params, frames, state)`` and compiles
+  exactly once. Streams join/leave between frames via host-side
+  bookkeeping (``admit`` / ``evict``) that only rewrites state rows —
+  never shapes — so an admit→evict→admit cycle causes ZERO recompiles
+  (asserted in tests via the engine's trace counter).
+
+* **Per-stream gaze state.** :class:`StreamState` carries each slot's
+  current patch indices, an attention-score EMA (temporal smoothing of
+  the saccade policy; ``ema_decay=0`` reproduces the single-stream step
+  frame-for-frame), the frame age (age 0 ⇒ in-step bootstrap from the
+  patch-energy proxy), and the slot-occupied flag.
+
+* **In-step bootstrap.** Freshly admitted slots select their first gaze
+  from the in-pixel energy proxy *inside* the batched step
+  (``sensor_patches`` runs once and is forwarded to the compact forward
+  via ``precomputed``), so admission needs no per-stream compiled
+  bootstrap call and mixed-age batches stay one program.
+
+* **Sharding.** With a mesh, the slot axis is sharded over the mesh's
+  data axis via ``shard_map`` — the step is per-slot parallel with
+  replicated params, so no collectives cross the slot axis. State
+  buffers are donated, so steady-state serving is allocation-free on
+  accelerators that support donation.
+
+Use the engine when streams come and go or when one host serves many
+cameras; use bare ``make_saccade_step`` for a single fixed-batch stream
+(training-style evaluation, co-design sweeps).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Hashable, Mapping, NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.serve.serve_step import saccade_scores
+
+
+class StreamState(NamedTuple):
+    """Per-slot gaze state; every leaf is slot-major with static shape."""
+
+    indices: jnp.ndarray    # (S, k) int32 — next frame's patch selection
+    ema: jnp.ndarray        # (S, P) float32 — attention-score EMA
+    frame_age: jnp.ndarray  # (S,) int32 — frames served since admit (0 = bootstrap)
+    active: jnp.ndarray     # (S,) bool — slot occupied
+
+
+def init_stream_state(cfg, capacity: int) -> StreamState:
+    """All slots free; indices are a placeholder (age 0 bootstraps in-step)."""
+    k = cfg.frontend.n_active
+    p = cfg.frontend.n_patches
+    return StreamState(
+        indices=jnp.tile(jnp.arange(k, dtype=jnp.int32), (capacity, 1)),
+        ema=jnp.zeros((capacity, p), jnp.float32),
+        frame_age=jnp.zeros((capacity,), jnp.int32),
+        active=jnp.zeros((capacity,), bool),
+    )
+
+
+def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
+                     project_fn=None):
+    """Batched slot step: (params, frames (S,H,W,3), state) -> (logits, state).
+
+    Per slot this is exactly one ``make_saccade_step`` frame — same compact
+    forward, same :func:`saccade_scores` policy — plus the engine-only
+    pieces: in-step bootstrap at age 0, EMA blending of the scores, and
+    freezing of inactive slots (their rows pass through unchanged and
+    their logits are zeroed). Pure and jit-stable: nothing here depends on
+    which slots are occupied except through ``state`` values.
+    """
+    from repro.core import frontend as fe
+    from repro.core import saliency as sal
+    from repro.models.vit import vit_forward_compact
+
+    fcfg = cfg.frontend
+    k = fcfg.n_active
+
+    def step(params, frames, state: StreamState):
+        # optics/mosaic/CDS once; forwarded to the compact forward below
+        patches, weights = fe.sensor_patches(params["ip2"], frames, fcfg)
+        boot = sal.topk_patch_indices(sal.patch_energy(patches), k)
+        fresh = state.frame_age == 0
+        indices = jnp.where(fresh[:, None], boot, state.indices)
+
+        logits, aux = vit_forward_compact(
+            params, frames, cfg, indices=indices,
+            project_fn=project_fn, precomputed=(patches, weights),
+        )
+        scores = saccade_scores(aux, explore)
+        ema = jnp.where(
+            fresh[:, None], scores,
+            ema_decay * state.ema + (1.0 - ema_decay) * scores,
+        )
+        next_idx = sal.topk_patch_indices(ema, k)
+
+        act = state.active
+        new_state = StreamState(
+            indices=jnp.where(act[:, None], next_idx, state.indices),
+            ema=jnp.where(act[:, None], ema, state.ema),
+            frame_age=jnp.where(act, state.frame_age + 1, state.frame_age),
+            active=act,
+        )
+        logits = jnp.where(act[:, None], logits, 0.0)
+        return logits, new_state
+
+    return step
+
+
+def _make_admit(capacity: int, k: int):
+    """Row reset with a *traced* slot scalar — one compile for any slot."""
+
+    def admit(state: StreamState, slot) -> StreamState:
+        hit = jnp.arange(capacity) == slot
+        return StreamState(
+            indices=jnp.where(hit[:, None],
+                              jnp.arange(k, dtype=jnp.int32)[None], state.indices),
+            ema=jnp.where(hit[:, None], 0.0, state.ema),
+            frame_age=jnp.where(hit, 0, state.frame_age),
+            active=state.active | hit,
+        )
+
+    return admit
+
+
+def _make_evict(capacity: int):
+    def evict(state: StreamState, slot) -> StreamState:
+        hit = jnp.arange(capacity) == slot
+        return state._replace(active=state.active & ~hit)
+
+    return evict
+
+
+class SaccadeEngine:
+    """Slot-based multi-stream saccadic server.
+
+    Host-side bookkeeping maps stream ids to slots; all device state lives
+    in :class:`StreamState` and is only ever rewritten by three jitted
+    pure functions (step / admit-row-reset / evict-flag-clear), each
+    compiled exactly once. ``n_traces`` counts retraces of the batched
+    step — the zero-recompile contract is ``engine.n_traces == 1`` no
+    matter how streams churn.
+
+    ``engine.state`` is the inspection surface, but its buffers are
+    DONATED to the next step/admit/evict call: always read through the
+    attribute (``engine.state.frame_age[...]``), never hold a
+    ``StreamState`` reference across a mutation — on backends that
+    implement donation (TPU/GPU) the held buffers are invalidated.
+
+    Args:
+      cfg: ViTConfig for the backend.
+      params: model params (held by the engine; the step stays pure).
+      capacity: number of slots (static batch of the compiled step).
+      mesh: optional device mesh; the slot axis shards over ``axis`` via
+        shard_map when capacity divides the axis size (else replicated).
+      axis: mesh axis name for the slot dimension (default "data").
+      explore / project_fn: as in ``make_saccade_step``.
+      ema_decay: attention-EMA smoothing; 0.0 (default) = per-frame scores,
+        matching the single-stream step exactly.
+    """
+
+    def __init__(self, cfg, params, capacity: int = 8, *, mesh=None,
+                 axis: str = "data", explore: float = 0.1,
+                 ema_decay: float = 0.0, project_fn=None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.cfg = cfg
+        self.params = params
+        self.capacity = capacity
+        self.mesh = mesh
+        self._slots: list[Hashable | None] = [None] * capacity
+        self._n_traces = 0
+
+        fn = make_engine_step(cfg, explore=explore, ema_decay=ema_decay,
+                              project_fn=project_fn)
+
+        self._slot_spec = P()
+        if mesh is not None:
+            from repro.launch.shardings import fit_spec
+
+            spec = fit_spec(P(axis), (capacity,), mesh)
+            # fit_spec replicates an indivisible axis by returning P(None) —
+            # only shard_map when the slot axis actually survived
+            if any(a is not None for a in spec):
+                self._slot_spec = spec
+                # per-slot parallel, params replicated — no collectives
+                fn = shard_map(
+                    fn, mesh=mesh,
+                    in_specs=(P(), self._slot_spec, self._slot_spec),
+                    out_specs=(self._slot_spec, self._slot_spec),
+                )
+
+        def counted(params, frames, state):
+            # trace-time side effect: jit re-traces exactly once per compile,
+            # so this counts compilations (the zero-recompile contract)
+            self._n_traces += 1
+            return fn(params, frames, state)
+
+        self._step_fn = jax.jit(counted, donate_argnums=(2,))
+        self._admit_fn = jax.jit(
+            _make_admit(capacity, cfg.frontend.n_active), donate_argnums=(0,))
+        self._evict_fn = jax.jit(_make_evict(capacity), donate_argnums=(0,))
+
+        state = init_stream_state(cfg, capacity)
+        if mesh is not None and self._slot_spec != P():
+            sh = NamedSharding(mesh, self._slot_spec)
+            state = jax.tree.map(lambda x: jax.device_put(x, sh), state)
+        self.state = state
+
+    # ---- host-side slot bookkeeping ------------------------------------
+    @property
+    def n_traces(self) -> int:
+        return self._n_traces
+
+    @property
+    def stream_ids(self) -> list[Hashable]:
+        return [s for s in self._slots if s is not None]
+
+    @property
+    def free_slots(self) -> int:
+        return self._slots.count(None)
+
+    def slot_of(self, stream_id: Hashable) -> int:
+        try:
+            return self._slots.index(stream_id)
+        except ValueError:
+            raise KeyError(f"stream {stream_id!r} not admitted") from None
+
+    def admit(self, stream_id: Hashable) -> int:
+        """Claim a free slot for a new stream; its first frame bootstraps
+        from the in-pixel energy proxy inside the next step() call."""
+        if stream_id in self._slots:
+            raise ValueError(f"stream {stream_id!r} already admitted")
+        try:
+            slot = self._slots.index(None)
+        except ValueError:
+            raise RuntimeError(
+                f"engine at capacity ({self.capacity}); evict a stream first"
+            ) from None
+        self._slots[slot] = stream_id
+        self.state = self._admit_fn(self.state, jnp.int32(slot))
+        return slot
+
+    def evict(self, stream_id: Hashable) -> None:
+        slot = self.slot_of(stream_id)
+        self._slots[slot] = None
+        self.state = self._evict_fn(self.state, jnp.int32(slot))
+
+    # ---- serving -------------------------------------------------------
+    def step(self, frames: Mapping[Hashable, Any]) -> dict[Hashable, np.ndarray]:
+        """Serve one frame for every admitted stream.
+
+        ``frames`` maps stream id -> (H, W, 3) RGB frame and must cover
+        exactly the admitted streams (the engine advances all per-stream
+        clocks together). Returns stream id -> (n_classes,) logits.
+        """
+        ids = set(self.stream_ids)
+        if not ids and not frames:
+            return {}                    # idle engine: nothing to serve
+        if set(frames) != ids:
+            missing, unknown = ids - set(frames), set(frames) - ids
+            raise ValueError(
+                f"frames must cover exactly the admitted streams; "
+                f"missing={sorted(map(str, missing))} "
+                f"unknown={sorted(map(str, unknown))}"
+            )
+        f = self.cfg.frontend
+        buf = np.zeros((self.capacity, f.image_h, f.image_w, 3), np.float32)
+        for sid, frame in frames.items():
+            buf[self.slot_of(sid)] = np.asarray(frame, np.float32)
+        logits, self.state = self._step_fn(self.params, jnp.asarray(buf), self.state)
+        logits = np.asarray(logits)
+        return {sid: logits[self.slot_of(sid)] for sid in frames}
+
+    def gaze(self, stream_id: Hashable) -> np.ndarray:
+        """The (k,) patch indices this stream will ADC-convert next frame.
+
+        Undefined before the stream's first frame — a fresh admit selects
+        its first gaze from the in-pixel energy proxy *inside* the next
+        step() call, so there is nothing to report yet (raises).
+        """
+        slot = self.slot_of(stream_id)
+        if int(self.state.frame_age[slot]) == 0:
+            raise RuntimeError(
+                f"stream {stream_id!r} has not served a frame yet; its first "
+                f"gaze is the in-step energy bootstrap of the next step()"
+            )
+        return np.asarray(self.state.indices[slot])

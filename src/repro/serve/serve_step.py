@@ -51,39 +51,67 @@ def make_bootstrap_indices(cfg):
     return bootstrap
 
 
+def saccade_scores(aux: dict, explore: float) -> jnp.ndarray:
+    """Next-frame selection scores (B, P) from one compact forward's aux.
+
+    This is THE saccade policy, shared by :func:`make_saccade_step`, the
+    multi-stream engine (``serve/engine.py``), and the dense-path oracle in
+    the tests — one scoring function, three consumers (DESIGN.md §5).
+
+    Unobserved patches score the mean observed attention (absence of
+    evidence, not zero saliency) — raw attention mass on observed tokens
+    would otherwise structurally dominate and freeze the gaze on the
+    bootstrap set forever. ``explore`` weights the (per-frame
+    max-normalized) in-pixel patch-energy proxy added on top, letting
+    bright unobserved events pull the gaze; an infinitesimal energy term is
+    kept even at explore=0 so otherwise-tied unobserved candidates rank by
+    scene content rather than by top_k's lowest-index tie-break (which
+    would drift the gaze toward patch 0). At explore=0 selection changes
+    only when a patch out-attends the observed mean, and the freed slot
+    goes to the brightest unobserved patch.
+
+    The energy comes from ``aux["energy"]`` — the frontend already computed
+    it on this frame's CDS patch voltages, so the policy costs no second
+    ``sensor_patches`` pass.
+    """
+    att = aux["saliency"]                               # (B, P), 0 unobserved
+    b = jnp.arange(att.shape[0])[:, None]
+    observed = jnp.zeros(att.shape, bool).at[b, aux["indices"]].max(aux["valid"])
+    # unobserved patches carry the mean observed attention as a prior:
+    # below-average tokens get shed, unseen patches get a fair shot
+    n_obs = jnp.maximum(observed.sum(-1, keepdims=True), 1)
+    baseline = att.sum(-1, keepdims=True) / n_obs
+    scores = jnp.where(observed, att, baseline)
+    energy = aux["energy"]
+    energy = energy / jnp.maximum(jnp.max(energy, axis=-1, keepdims=True), 1e-9)
+    # baseline-scaled; the 1e-3 floor is a content-aware tie-break only
+    return scores + max(explore, 1e-3) * baseline * energy
+
+
 def make_saccade_step(cfg, explore: float = 0.1, project_fn=None):
     """Closed-loop serving step on the compact path end to end.
 
     Frame t: the frontend gathers and projects ONLY the k patches the
     backend attended to on frame t-1; the backend classifies the k compact
     tokens; its attention over those tokens — scattered back onto the patch
-    grid — is frame t+1's selection. Nothing in the loop ever materializes
-    the dense (P, M) feature grid, so compute, ADC conversions, and
-    streamed bytes all scale with the active fraction.
+    grid — is frame t+1's selection (see :func:`saccade_scores` for the
+    policy). Nothing in the loop ever materializes the dense (P, M)
+    feature grid, so compute, ADC conversions, and streamed bytes all
+    scale with the active fraction.
 
     Args:
       cfg: ViTConfig (imported lazily to keep serve import-light).
-      explore: weight on the (per-frame max-normalized) in-pixel
-        patch-energy proxy added to the saliency before the top-k, letting
-        bright unobserved events pull the gaze. Unobserved patches score
-        the mean observed attention (absence of evidence, not zero
-        saliency) — raw attention mass on observed tokens would otherwise
-        structurally dominate and freeze the gaze on the bootstrap set
-        forever. An infinitesimal energy term is kept even at explore=0 so
-        the otherwise-tied unobserved candidates rank by scene content
-        rather than by top_k's lowest-index tie-break (which would drift
-        the gaze toward patch 0); at explore=0 selection changes only when
-        a patch out-attends the observed mean, and the freed slot goes to
-        the brightest unobserved patch.
+      explore: see :func:`saccade_scores`.
       project_fn: optional kernel-backed projection (e.g.
         ``ops.ip2_project_fn(cfg.frontend.patch, interpret=...)``) applied
         to the gathered active patches.
 
     Returns step(params, rgb, indices) -> (logits, next_indices, aux),
     pure and jit-able; ``indices`` for the first frame come from
-    :func:`make_bootstrap_indices`.
+    :func:`make_bootstrap_indices`. For many concurrent streams use
+    :class:`repro.serve.engine.SaccadeEngine`, which batches this exact
+    step over fixed slots with per-stream state.
     """
-    from repro.core import frontend as fe
     from repro.core import saliency as sal
     from repro.models.vit import vit_forward_compact
 
@@ -93,21 +121,7 @@ def make_saccade_step(cfg, explore: float = 0.1, project_fn=None):
         logits, aux = vit_forward_compact(
             params, rgb, cfg, indices=indices, project_fn=project_fn
         )
-        att = aux["saliency"]                               # (B, P), 0 unobserved
-        b = jnp.arange(att.shape[0])[:, None]
-        observed = jnp.zeros(att.shape, bool).at[b, aux["indices"]].max(aux["valid"])
-        # unobserved patches carry the mean observed attention as a prior:
-        # below-average tokens get shed, unseen patches get a fair shot
-        n_obs = jnp.maximum(observed.sum(-1, keepdims=True), 1)
-        baseline = att.sum(-1, keepdims=True) / n_obs
-        scores = jnp.where(observed, att, baseline)
-        patches, _ = fe.sensor_patches(params["ip2"], rgb, fcfg)
-        energy = sal.patch_energy(patches)
-        energy = energy / jnp.maximum(
-            jnp.max(energy, axis=-1, keepdims=True), 1e-9
-        )
-        # baseline-scaled; the 1e-3 floor is a content-aware tie-break only
-        scores = scores + max(explore, 1e-3) * baseline * energy
+        scores = saccade_scores(aux, explore)
         next_indices = sal.topk_patch_indices(scores, fcfg.n_active)
         return logits, next_indices, aux
 

@@ -151,6 +151,99 @@ def test_pipeline_parallel_matches_sequential():
     assert res["grad_err"] < 1e-5
 
 
+def test_pipeline_fewer_microbatches_than_stages():
+    """The GPipe schedule must stay correct when the pipe is mostly bubble
+    (n_micro < n_stages) — the tail/injection masking, not just the steady
+    state, is what this exercises."""
+    res = run_with_devices("""
+        import json, jax, jax.numpy as jnp
+        from repro.distributed.pipeline import pipeline_forward, split_layers_to_stages
+        mesh = jax.make_mesh((4,), ("pod",))
+        L, D = 4, 8
+        w = jax.random.normal(jax.random.PRNGKey(0), (L, D, D)) * 0.4
+        def stage_fn(params, x):
+            def body(c, p): return jnp.tanh(c @ p), None
+            return jax.lax.scan(body, x, params)[0]
+        mbs = jax.random.normal(jax.random.PRNGKey(1), (2, 3, D))   # 2 < 4 stages
+        out = pipeline_forward(split_layers_to_stages(w, 4), mbs, stage_fn, mesh)
+        def seq(x):
+            def body(c, p): return jnp.tanh(c @ p), None
+            return jax.lax.scan(body, x, w)[0]
+        ref = jnp.stack([seq(mbs[i]) for i in range(2)])
+        print(json.dumps({"fwd_err": float(jnp.abs(out - ref).max())}))
+    """, n=4)
+    assert res["fwd_err"] < 1e-6
+
+
+def test_engine_sharded_slots_match_unsharded_zero_recompiles():
+    """SaccadeEngine with the slot axis shard_map'd over 4 host devices:
+    identical logits to the unsharded engine, state physically spread over
+    the mesh, and one compilation across an admit→evict→admit cycle."""
+    res = run_with_devices("""
+        import json
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.core.frontend import FrontendConfig
+        from repro.core.projection import PatchSpec
+        from repro.data.pipeline import SceneStream
+        from repro.launch.mesh import make_host_mesh
+        from repro.models.vit import ViTConfig, init_vit
+        from repro.serve.engine import SaccadeEngine
+
+        fcfg = FrontendConfig(image_h=64, image_w=64,
+                              patch=PatchSpec(patch_h=16, patch_w=16, n_vectors=32),
+                              active_fraction=0.25)
+        cfg = ViTConfig(frontend=fcfg, n_layers=1, d_model=32, n_heads=2, d_ff=64)
+        params = init_vit(jax.random.PRNGKey(0), cfg)
+        stream = SceneStream(image=64)
+        mesh = make_host_mesh(data=4, model=1)
+
+        e_sh = SaccadeEngine(cfg, params, capacity=8, mesh=mesh)
+        e_ref = SaccadeEngine(cfg, params, capacity=8)
+        for s in range(5):
+            e_sh.admit(s); e_ref.admit(s)
+        err = 0.0
+        for t in range(3):
+            rgb, _ = stream.batch(t, 5)
+            frames = {i: rgb[i] for i in range(5)}
+            o1, o2 = e_sh.step(frames), e_ref.step(frames)
+            err = max(err, max(float(np.abs(o1[s] - o2[s]).max()) for s in frames))
+        # churn: evict + admit into the freed slot, then serve again
+        e_sh.evict(0); e_sh.admit(99)
+        rgb, _ = stream.batch(7, 5)
+        e_sh.step({99: rgb[0], **{i: rgb[i] for i in range(1, 5)}})
+
+        # indivisible capacity (5 % 4 != 0): engine must fall back to a
+        # plain jit, NOT shard_map with replicated specs (n_dev x compute)
+        e_odd = SaccadeEngine(cfg, params, capacity=5, mesh=mesh)
+        for s in range(3):
+            e_odd.admit(s)
+        rgb, _ = stream.batch(2, 3)
+        frames = {i: rgb[i] for i in range(3)}
+        o_odd = e_odd.step(frames)
+        o_ref2 = {}
+        e_ref2 = SaccadeEngine(cfg, params, capacity=5)
+        for s in range(3):
+            e_ref2.admit(s)
+        o_ref2 = e_ref2.step(frames)
+        odd_err = max(float(np.abs(o_odd[s] - o_ref2[s]).max()) for s in frames)
+        print(json.dumps({
+            "err": err,
+            "state_devices": len(e_sh.state.ema.sharding.device_set),
+            "traces_sharded": e_sh.n_traces,
+            "traces_ref": e_ref.n_traces,
+            "odd_sharded": e_odd._slot_spec != jax.sharding.PartitionSpec(),
+            "odd_err": odd_err,
+        }))
+    """, n=4)
+    assert res["err"] < 1e-5, res
+    assert res["state_devices"] == 4, res          # slot axis really sharded
+    assert res["traces_sharded"] == 1, res         # admit/evict: no recompile
+    assert res["traces_ref"] == 1, res
+    assert res["odd_sharded"] is False, res        # indivisible -> plain jit
+    assert res["odd_err"] < 1e-5, res
+
+
 def test_compressed_allreduce_and_error_feedback():
     res = run_with_devices("""
         import json, jax, jax.numpy as jnp

@@ -1,0 +1,221 @@
+"""Multi-stream saccadic serving engine (DESIGN.md §5): slot bookkeeping,
+per-stream state isolation, equivalence with the single-stream step, and
+the zero-recompile contract across admit/evict churn."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.frontend import FrontendConfig
+from repro.core.projection import PatchSpec
+from repro.data.pipeline import SceneStream
+from repro.models.vit import ViTConfig, init_vit
+from repro.serve.engine import SaccadeEngine, init_stream_state
+from repro.serve.serve_step import (
+    make_bootstrap_indices, make_saccade_step, saccade_scores,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(**kw):
+    fcfg = FrontendConfig(
+        image_h=64, image_w=64,
+        patch=PatchSpec(patch_h=16, patch_w=16, n_vectors=32),
+        active_fraction=0.25,
+    )
+    base = dict(frontend=fcfg, n_layers=1, d_model=32, n_heads=2, d_ff=64)
+    base.update(kw)
+    return ViTConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = _cfg()
+    return cfg, init_vit(KEY, cfg)
+
+
+class TestBookkeeping:
+    def test_admit_evict_slot_reuse(self, served):
+        cfg, params = served
+        eng = SaccadeEngine(cfg, params, capacity=2)
+        assert eng.free_slots == 2
+        s0 = eng.admit("a")
+        s1 = eng.admit("b")
+        assert {s0, s1} == {0, 1} and eng.free_slots == 0
+        with pytest.raises(RuntimeError, match="capacity"):
+            eng.admit("c")
+        with pytest.raises(ValueError, match="already admitted"):
+            eng.admit("a")
+        eng.evict("a")
+        assert eng.free_slots == 1 and eng.stream_ids == ["b"]
+        assert eng.admit("c") == s0          # freed slot is reused
+        with pytest.raises(KeyError):
+            eng.evict("zzz")
+
+    def test_step_requires_exact_stream_cover(self, served):
+        cfg, params = served
+        eng = SaccadeEngine(cfg, params, capacity=2)
+        eng.admit("a")
+        frame = np.zeros((64, 64, 3), np.float32)
+        with pytest.raises(ValueError, match="unknown"):
+            eng.step({"a": frame, "b": frame})
+        with pytest.raises(ValueError, match="missing"):
+            eng.step({})
+
+    def test_idle_engine_step_is_a_noop(self, served):
+        cfg, params = served
+        eng = SaccadeEngine(cfg, params, capacity=2)
+        assert eng.step({}) == {}
+        assert eng.n_traces == 0         # no streams -> no device dispatch
+
+    def test_admit_resets_row_state(self, served):
+        cfg, params = served
+        eng = SaccadeEngine(cfg, params, capacity=2)
+        eng.admit("a")
+        stream = SceneStream(image=64)
+        rgb, _ = stream.batch(0, 1)
+        for t in range(2):
+            eng.step({"a": rgb[0]})
+        slot = eng.slot_of("a")
+        assert int(eng.state.frame_age[slot]) == 2
+        eng.evict("a")
+        assert not bool(eng.state.active[slot])
+        eng.admit("a2")                      # same slot, fresh stream
+        assert eng.slot_of("a2") == slot
+        assert int(eng.state.frame_age[slot]) == 0
+        assert float(jnp.abs(eng.state.ema[slot]).max()) == 0.0
+
+    def test_gaze_undefined_before_first_frame(self, served):
+        """A fresh admit has no gaze yet (the first selection is the
+        in-step energy bootstrap) — gaze() must refuse, not report the
+        arange placeholder as if it were a real selection."""
+        cfg, params = served
+        eng = SaccadeEngine(cfg, params, capacity=1)
+        eng.admit("a")
+        with pytest.raises(RuntimeError, match="bootstrap"):
+            eng.gaze("a")
+        stream = SceneStream(image=64)
+        rgb, _ = stream.batch(0, 1)
+        eng.step({"a": rgb[0]})
+        assert sorted(set(eng.gaze("a").tolist())) == sorted(eng.gaze("a").tolist())
+
+    def test_init_state_shapes(self):
+        cfg = _cfg()
+        st = init_stream_state(cfg, 5)
+        k, p = cfg.frontend.n_active, cfg.frontend.n_patches
+        assert st.indices.shape == (5, k) and st.ema.shape == (5, p)
+        assert st.frame_age.shape == (5,) and st.active.shape == (5,)
+        assert not bool(st.active.any())
+
+
+class TestEquivalence:
+    def test_engine_matches_single_stream_loop(self, served):
+        """Each slot must serve its stream EXACTLY as a dedicated batch-1
+        single-stream loop would (bootstrap included), regardless of what
+        the other slots are doing."""
+        cfg, params = served
+        stream = SceneStream(image=64)
+        eng = SaccadeEngine(cfg, params, capacity=4)   # 2 slots stay empty
+        eng.admit("x")
+        eng.admit("y")
+
+        boot = jax.jit(make_bootstrap_indices(cfg))
+        step = jax.jit(make_saccade_step(cfg))
+        idx = {"x": None, "y": None}
+        for t in range(3):
+            rgb, _ = stream.batch(t, 2)
+            out = eng.step({"x": rgb[0], "y": rgb[1]})
+            for i, sid in enumerate(("x", "y")):
+                r = jnp.asarray(rgb[i:i + 1])
+                if idx[sid] is None:
+                    idx[sid] = boot(params, r)
+                logits, idx[sid], _ = step(params, r, idx[sid])
+                np.testing.assert_allclose(
+                    out[sid], np.asarray(logits[0]), atol=1e-5)
+                assert (eng.gaze(sid) == np.asarray(idx[sid][0])).all(), (t, sid)
+
+    def test_inactive_slots_emit_zero_logits_and_frozen_state(self, served):
+        cfg, params = served
+        eng = SaccadeEngine(cfg, params, capacity=3)
+        eng.admit("only")
+        stream = SceneStream(image=64)
+        rgb, _ = stream.batch(0, 1)
+        eng.step({"only": rgb[0]})
+        free = [s for s in range(3) if s != eng.slot_of("only")]
+        st = eng.state
+        assert not bool(st.active[jnp.asarray(free)].any())
+        assert int(st.frame_age[jnp.asarray(free)].max()) == 0
+
+    def test_ema_blends_scores_across_frames(self, served):
+        """ema_decay smooths the saccade policy: state.ema after frame 2
+        must equal decay*scores(f1) + (1-decay)*scores(f2) computed from
+        the shared single-stream core."""
+        cfg, params = served
+        decay = 0.7
+        eng = SaccadeEngine(cfg, params, capacity=1, ema_decay=decay)
+        eng.admit("s")
+        stream = SceneStream(image=64)
+        step = jax.jit(make_saccade_step(cfg))
+        boot = jax.jit(make_bootstrap_indices(cfg))
+
+        rgb0, _ = stream.batch(0, 1)
+        rgb1, _ = stream.batch(1, 1)
+        eng.step({"s": rgb0[0]})
+        eng.step({"s": rgb1[0]})
+
+        r0, r1 = jnp.asarray(rgb0), jnp.asarray(rgb1)
+        i0 = boot(params, r0)
+        _, _, aux0 = step(params, r0, i0)
+        s0 = saccade_scores(aux0, 0.1)
+        # frame 1's indices = top-k of the EMA (== s0 on the first frame)
+        from repro.core.saliency import topk_patch_indices
+        i1 = topk_patch_indices(s0, cfg.frontend.n_active)
+        _, _, aux1 = step(params, r1, i1)
+        s1 = saccade_scores(aux1, 0.1)
+        want = decay * s0 + (1 - decay) * s1
+        np.testing.assert_allclose(
+            np.asarray(eng.state.ema), np.asarray(want), atol=1e-6)
+
+
+class TestZeroRecompile:
+    def test_one_compile_across_admit_evict_admit(self, served):
+        """The acceptance-criterion contract: a full admit -> evict ->
+        admit cycle with steps in between never retraces the batched
+        step — the program is a pure function of fixed slot shapes."""
+        cfg, params = served
+        eng = SaccadeEngine(cfg, params, capacity=3)
+        stream = SceneStream(image=64)
+
+        eng.admit("a")
+        eng.admit("b")
+        rgb, _ = stream.batch(0, 3)
+        eng.step({"a": rgb[0], "b": rgb[1]})
+        assert eng.n_traces == 1
+        eng.evict("a")
+        eng.step({"b": rgb[1]})
+        eng.admit("c")                       # reuses a's slot, fresh state
+        eng.step({"b": rgb[1], "c": rgb[2]})
+        eng.admit("d")
+        eng.step({"b": rgb[0], "c": rgb[1], "d": rgb[2]})
+        assert eng.n_traces == 1, "admit/evict churn caused a recompile"
+
+    def test_aux_energy_replaces_second_sensor_pass(self, served):
+        """Satellite regression: the saccade step's explore term reads the
+        patch energy from aux (computed once in the frontend) — the aux
+        must carry it and it must equal a direct sensor_patches pass."""
+        cfg, params = served
+        from repro.core import frontend as fe
+        from repro.core import saliency as sal
+
+        stream = SceneStream(image=64)
+        rgb = jnp.asarray(stream.batch(0, 2)[0])
+        boot = make_bootstrap_indices(cfg)(params, rgb)
+        _, _, aux = make_saccade_step(cfg)(params, rgb, boot)
+        assert "energy" in aux
+        patches, _ = fe.sensor_patches(params["ip2"], rgb, cfg.frontend)
+        np.testing.assert_allclose(
+            np.asarray(aux["energy"]),
+            np.asarray(sal.patch_energy(patches)), atol=1e-6)

@@ -265,6 +265,52 @@ class TestServing:
         # attention/energy scores can never outrank the bootstrap set
         assert any(selections[i] != selections[i + 1] for i in range(3))
 
+    def test_multiframe_saccade_matches_dense_oracle(self):
+        """T=4 frames of the compact closed loop vs a dense-path oracle:
+        for the same selection, frame-for-frame, the logits must agree AND
+        the NEXT selection must agree — i.e. the whole trajectory of the
+        serving path is reproducible from the dense (training) path."""
+        from repro.core.frontend import sensor_patches
+        from repro.serve.serve_step import (
+            make_bootstrap_indices, make_saccade_step, saccade_scores,
+        )
+
+        cfg = ViTConfig(frontend=_fcfg(), n_layers=2, d_model=64, n_heads=4,
+                        d_ff=128)
+        params = init_vit(KEY, cfg)
+        stream = SceneStream(image=64)
+        step = jax.jit(make_saccade_step(cfg))
+        k, P = cfg.frontend.n_active, cfg.frontend.n_patches
+
+        indices = make_bootstrap_indices(cfg)(
+            params, jnp.asarray(stream.batch(0, 4)[0]))
+        for t in range(4):
+            rgb = jnp.asarray(stream.batch(t, 4)[0])
+            logits_c, next_c, _ = step(params, rgb, indices)
+
+            # dense oracle for the same selection: masked grid forward,
+            # saliency from the dense attention, energy straight from the
+            # sensor — then the SAME scoring policy
+            mask = c.mask_from_indices(indices, P)
+            logits_d, aux_d = vit_forward(params, rgb, cfg, mask=mask,
+                                          return_aux=True)
+            patches, _ = sensor_patches(params["ip2"], rgb, cfg.frontend)
+            oracle_aux = {
+                "saliency": aux_d["saliency"],
+                "indices": indices,
+                "valid": jnp.ones(indices.shape, bool),
+                "energy": c.patch_energy(patches),
+            }
+            next_d = c.topk_patch_indices(saccade_scores(oracle_aux, 0.1), k)
+
+            np.testing.assert_allclose(
+                np.asarray(logits_c), np.asarray(logits_d), atol=2e-5,
+                err_msg=f"frame {t}: dense/compact logits diverged")
+            np.testing.assert_array_equal(
+                np.asarray(next_c), np.asarray(next_d),
+                err_msg=f"frame {t}: dense/compact next selection diverged")
+            indices = next_c
+
 
 @pytest.mark.skipif(
     not os.path.exists("results/dryrun.json"), reason="dry-run results absent"
