@@ -1,4 +1,4 @@
-"""Benchmark harness — one module per paper table/figure (DESIGN.md §7).
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §8).
 
 Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_throughput.json``
 (all rows, keyed by module) so successive PRs accumulate a perf trajectory.
@@ -42,7 +42,14 @@ def main() -> None:
                 print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
         except Exception as e:
             failures += 1
-            results[label] = [{"name": label, "error": f"{type(e).__name__}: {e}"}]
+            # a module may attach the rows it collected before failing
+            # (bench_throughput does): keep them in the artifact so one
+            # failed sweep doesn't erase the others' perf trajectory
+            kept = list(getattr(e, "rows", []))
+            for row in kept:
+                print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+            results[label] = kept + [
+                {"name": label, "error": f"{type(e).__name__}: {e}"}]
             print(f"{label},FAIL,{type(e).__name__}: {e}", file=sys.stderr)
             traceback.print_exc()
     if args.json_out:

@@ -2,9 +2,10 @@
 
 Layers: pwm (PWM/DAC quantizers) -> switched_cap (charge sharing, leakage,
 OpAmp) -> projection (patch MVM) -> adc (edge readout) composed by
-frontend.IP2Frontend; saliency gates patches; bayer models the mosaic +
-anti-alias optics; power/throughput reproduce Table 1 and Fig. 3;
-qth_attention is the Fig. 4 extension.
+frontend.IP2Frontend; saliency gates patches spatially; temporal reuses
+held charge across frames (delta gate + droop-budgeted FeatureCache);
+bayer models the mosaic + anti-alias optics; power/throughput reproduce
+Table 1 and Fig. 3; qth_attention is the Fig. 4 extension.
 """
 
 from repro.core.adc import ADCSpec, adc_quantize, digital_readout
@@ -44,6 +45,14 @@ from repro.core.switched_cap import (
     charge_share_sum,
     passive_droop_trace,
 )
+from repro.core.temporal import (
+    FeatureCache,
+    TemporalSpec,
+    held_features,
+    init_feature_cache,
+    refresh,
+    select_stale,
+)
 from repro.core.throughput import figure3_sweep, frame_rate, rate_point
 
 __all__ = [
@@ -60,5 +69,7 @@ __all__ = [
     "mask_from_indices", "patch_energy", "topk_patch_indices", "topk_patch_mask",
     "SummerSpec", "TAU_LEAK_65NM_S", "capacitor_divider", "charge_share_sum",
     "passive_droop_trace",
+    "FeatureCache", "TemporalSpec", "held_features", "init_feature_cache",
+    "refresh", "select_stale",
     "figure3_sweep", "frame_rate", "rate_point",
 ]

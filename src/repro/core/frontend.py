@@ -44,6 +44,7 @@ from repro.core import adc as adc_mod
 from repro.core import bayer as bayer_mod
 from repro.core import projection as proj_mod
 from repro.core import saliency as sal_mod
+from repro.core import temporal as temporal_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +57,7 @@ class FrontendConfig:
     aa_cutoff: float | None = 0.5      # Gaussian AA at 0.5/0.25 Nyquist; None = off
     active_fraction: float = 0.25
     adc: adc_mod.ADCSpec = adc_mod.ADCSpec()
+    temporal: temporal_mod.TemporalSpec = temporal_mod.TemporalSpec()
 
     @property
     def grid(self) -> tuple[int, int]:
@@ -169,6 +171,7 @@ def apply_frontend(
     mode: str = "dense",
     indices: jnp.ndarray | None = None,
     precomputed: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+    cache: temporal_mod.FeatureCache | None = None,
 ):
     """rgb (..., H, W, 3) in [0,1] -> frontend features.
 
@@ -181,13 +184,28 @@ def apply_frontend(
     already needed the CDS patch voltages (e.g. the serving engine's
     in-step bootstrap) don't pay for the optics/mosaic stage twice.
 
+    ``cache`` (compact mode only) enables the temporal delta gate
+    (DESIGN.md §6): of the k selected patches, only the stale subset —
+    CDS energy moved by >= ``cfg.temporal.delta_threshold`` since last
+    recompute, never computed, or drooped past the LSB budget — is
+    gathered/projected/converted (exactly ``cfg.temporal`` budget-j slots,
+    static shape); the rest are served from the held charge modelled by
+    the cache. The return value becomes ``(CompactFeatures, FeatureCache)``.
+
     Returns (mode="dense"):   (features (..., P, M), mask (..., P)) with
       deselected patches zeroed — compute scales with P.
     Returns (mode="compact"): :class:`CompactFeatures` with (..., k, M)
-      features — compute scales with k (select -> gather -> project).
+      features — compute scales with k (select -> gather -> project);
+      with ``cache`` given, ``(CompactFeatures, FeatureCache)`` and
+      per-frame projection/ADC work scales with the recompute budget j.
     """
     if mode not in ("dense", "compact"):
         raise ValueError(f"mode must be 'dense' or 'compact', got {mode!r}")
+    if cache is not None and mode != "compact":
+        raise ValueError(
+            "the temporal cache only applies to mode='compact'; dense "
+            "(training) execution must bypass it — see DESIGN.md §6"
+        )
     k = cfg.n_active
     if precomputed is not None:
         patches, weights = precomputed
@@ -218,10 +236,26 @@ def apply_frontend(
         idx = sal_mod.topk_patch_indices(energy, k)
         valid = jnp.ones(idx.shape, bool)
 
-    active = sal_mod.gather_patches(patches, idx)                    # (..., k, N)
-    feats = project_readout(active, weights, params, cfg, project_fn)
+    if cache is None:
+        active = sal_mod.gather_patches(patches, idx)                # (..., k, N)
+        feats = project_readout(active, weights, params, cfg, project_fn)
+        feats = feats * valid[..., None].astype(feats.dtype)
+        return CompactFeatures(feats, idx, valid, energy)
+
+    # temporal delta gate: recompute only the stale subset of the selection,
+    # scatter-merge into the held-charge cache, serve the selection from it.
+    tspec = cfg.temporal
+    stale_idx, needed, n_stale = temporal_mod.select_stale(
+        energy, idx, cache, tspec, cfg.patch.summer, cfg.adc
+    )
+    stale_patches = sal_mod.gather_patches(patches, stale_idx)       # (..., j, N)
+    new_feats = project_readout(stale_patches, weights, params, cfg, project_fn)
+    cache = temporal_mod.refresh(
+        cache, stale_idx, needed, new_feats, energy, n_stale
+    )
+    feats = temporal_mod.held_features(cache, idx, cfg.patch.summer)  # (..., k, M)
     feats = feats * valid[..., None].astype(feats.dtype)
-    return CompactFeatures(feats, idx, valid, energy)
+    return CompactFeatures(feats, idx, valid, energy), cache
 
 
 def compact_features(

@@ -1,0 +1,289 @@
+"""Temporal delta-gated execution: reuse held charge across frames
+(paper §2.1.2 non-destructive readout; DESIGN.md §6).
+
+The switched-cap readout is *non-destructive*: the projection of a patch
+is charge held on the summing caps, so a patch whose content has not
+changed between frames does not need re-projection or re-conversion —
+only droop-limited refresh. This module adds that temporal layer on top
+of the spatial gating (select -> gather -> project only the ~25 % active
+patches): of the k selected patches, only the *stale* ones are
+recomputed; the rest are served from a per-patch :class:`FeatureCache`
+that models the held (and slowly drooping) charge.
+
+Three pieces:
+
+* **Change detection** — a patch is *stale* when the in-pixel CDS
+  energy proxy has moved by at least ``delta_threshold`` since the
+  patch was last recomputed (the photodiodes integrate light regardless
+  of selection, so this signal is free), when it has never been
+  computed, or when its held charge has drooped past the LSB budget.
+  ``delta_threshold = 0`` makes every selected patch stale — the gate
+  degenerates to PR 2's always-recompute compact path bit for bit.
+
+* **Static-shape stale set** — :func:`select_stale` returns *exactly j*
+  patch indices to recompute (``recompute_budget``; default j = k), so
+  every downstream shape is static and jit-stable. Genuinely stale
+  patches rank first, ordered by hold age plus normalized energy delta
+  — age guarantees that overflow staleness deferred past the budget
+  makes progress every frame (no starvation), delta breaks same-age
+  ties toward the biggest content change. When fewer than j are stale,
+  the spare slots idle: they re-project an already-fresh patch but
+  their output is never converted or merged (``needed=False``), so ADC
+  count and streamed bytes track the true stale count. When more than
+  j are stale the overflow keeps serving held charge and remains stale
+  — its reference energy is only updated at recompute — so it wins a
+  slot within at most ceil(k/j) frames.
+
+* **Droop-aware cache** — :class:`FeatureCache` holds the last computed
+  feature of every patch. A held entry ages one hold per frame; its
+  served value is ``value * SummerSpec.droop_factor() ** age`` (the
+  retention of the summing node, folded in lazily at serve time by
+  :func:`held_features`). :meth:`TemporalSpec.max_hold_frames` converts
+  the ``droop_lsb_budget`` into the largest hold count whose worst-case
+  accumulated droop stays under that many ADC LSBs; older entries are
+  forced stale regardless of the energy delta.
+
+Everything is differentiable (gather/scatter transposes; the projection
+keeps its STE quantizers), but dense *training* must bypass the cache —
+gradients through a frame-t feature would otherwise flow into frame t-1's
+parameters (see DESIGN.md §6 for the contract).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adc as adc_mod
+from repro.core import switched_cap as sc
+
+
+class FeatureCache(NamedTuple):
+    """Held per-patch features over the FULL grid (the summing caps exist
+    for every patch; only *recomputation* is gated).
+
+    Droop is applied *lazily*: ``features`` stores the value as computed
+    (the charge at refresh time) and :func:`held_features` multiplies by
+    ``droop_factor ** age`` at serve time — an O(k·M) epilogue on the
+    gathered selection instead of an O(P·M) decay pass over the whole
+    cache every frame (which would cost as much as the projection the
+    gate is there to avoid).
+
+    Leading dims are arbitrary batch/slot dims, matching the frames fed
+    through the frontend.
+    """
+
+    features: jnp.ndarray   # (..., P, M) f32 — feature values at last recompute
+    energy: jnp.ndarray     # (..., P) f32 — CDS energy at last recompute (delta reference)
+    age: jnp.ndarray        # (..., P) int32 — frames since last recompute
+    valid: jnp.ndarray      # (..., P) bool — entry has ever been computed
+    n_stale: jnp.ndarray    # (...,) int32 — genuinely stale patches recomputed last frame
+
+
+@dataclasses.dataclass(frozen=True)
+class TemporalSpec:
+    """Static config of the temporal gate.
+
+    delta_threshold: a selected patch is stale when
+      ``|energy_now - energy_at_last_recompute| >= delta_threshold``.
+      0.0 (default) marks everything stale — gating off, bitwise equal to
+      the ungated compact path.
+    recompute_budget: j — the static number of patch slots projected per
+      frame. None (default) means j = k (can always recompute the whole
+      active set). Smaller j caps per-frame analog compute / ADC
+      conversions; overflow staleness is served from held charge and
+      refreshed on later frames.
+    droop_lsb_budget: forced-refresh budget. A held entry may droop by at
+      most this many ADC LSBs (worst case, full-scale signal) before it
+      is forced stale.
+    """
+
+    delta_threshold: float = 0.0
+    recompute_budget: int | None = None
+    droop_lsb_budget: float = 0.5
+
+    def budget(self, k: int) -> int:
+        j = k if self.recompute_budget is None else self.recompute_budget
+        if j < 1:
+            raise ValueError(f"recompute_budget must be >= 1, got {j}")
+        return min(j, k)
+
+    def max_hold_frames(
+        self, summer: sc.SummerSpec, adc: adc_mod.ADCSpec
+    ) -> int:
+        """Largest number of frame holds whose accumulated droop stays
+        within ``droop_lsb_budget`` LSBs for a worst-case (full-scale)
+        held signal: the signal retains d^h after h holds, so the error
+        is v_fs * (1 - d^h) <= budget * lsb. 0 means even one hold
+        violates the budget — every entry is stale every frame
+        (``age >= 0`` always holds) and nothing is ever served held.
+        """
+        d = summer.droop_factor()
+        lsb = (adc.v_max - adc.v_min) / (adc.levels - 1)
+        v_fs = max(abs(adc.v_min), abs(adc.v_max))
+        tol = self.droop_lsb_budget * lsb / v_fs
+        if d >= 1.0 or tol >= 1.0:
+            return 2**31 - 2            # no droop (ideal summer): hold forever
+        if tol <= 0.0:
+            return 0                    # zero budget: refresh every frame
+        return int(math.floor(math.log(1.0 - tol) / math.log(d)))
+
+
+def init_feature_cache(cfg, batch_shape: tuple[int, ...] = ()) -> FeatureCache:
+    """Empty (all-invalid) cache for ``cfg`` (anything with ``n_patches``
+    and ``patch.n_vectors`` — a FrontendConfig) over ``batch_shape``
+    leading dims."""
+    p = cfg.n_patches
+    m = cfg.patch.n_vectors
+    return FeatureCache(
+        features=jnp.zeros((*batch_shape, p, m), jnp.float32),
+        energy=jnp.zeros((*batch_shape, p), jnp.float32),
+        age=jnp.zeros((*batch_shape, p), jnp.int32),
+        valid=jnp.zeros((*batch_shape, p), bool),
+        n_stale=jnp.zeros(batch_shape, jnp.int32),
+    )
+
+
+def _take(arr: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Batched row gather: arr (..., P[, M]) at idx (..., k)."""
+    if arr.ndim == idx.ndim:                      # (..., P)
+        return jnp.take_along_axis(arr, idx, axis=-1)
+    return jnp.take_along_axis(arr, idx[..., None], axis=-2)
+
+
+def _scatter_rows(dst: jnp.ndarray, idx: jnp.ndarray, src: jnp.ndarray) -> jnp.ndarray:
+    """Batched row scatter (set): dst (..., P[, M]) rows at idx (..., j)
+    replaced by src. Differentiable; duplicate indices are benign here
+    because duplicates always carry identical values (same patch,
+    same frame)."""
+    lead = idx.shape[:-1]
+    j = idx.shape[-1]
+    if not lead:
+        return dst.at[idx].set(src)
+    b = math.prod(lead)
+    flat_dst = dst.reshape((b,) + dst.shape[len(lead):])
+    flat_idx = idx.reshape(b, j)
+    flat_src = src.reshape((b,) + src.shape[len(lead):])
+    rows = jnp.arange(b)[:, None]
+    out = flat_dst.at[rows, flat_idx].set(flat_src)
+    return out.reshape(dst.shape)
+
+
+def select_stale(
+    energy: jnp.ndarray,
+    indices: jnp.ndarray,
+    cache: FeatureCache,
+    spec: TemporalSpec,
+    summer: sc.SummerSpec,
+    adc: adc_mod.ADCSpec,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The gate: which of this frame's k selected patches to recompute.
+
+    Args:
+      energy: (..., P) this frame's in-pixel patch-energy proxy.
+      indices: (..., k) the saccade selection (exactly-k patch indices).
+      cache: held state from the previous frame.
+      spec / summer / adc: static gate + droop configuration.
+
+    Returns:
+      ``(stale_idx, needed, n_stale)``:
+      stale_idx (..., j) — the exactly-j patch indices to gather/project
+        this frame (a subset of ``indices``);
+      needed (..., j) — True where the slot holds a genuinely stale patch
+        (False = idle spare slot: its projection output is never
+        converted or merged — see :func:`refresh`);
+      n_stale (..., ) int32 — how many of the j slots were genuinely
+        stale (the recompute-fraction numerator; overflow staleness
+        beyond j is deferred, not counted).
+    """
+    k = indices.shape[-1]
+    j = spec.budget(k)
+    max_hold = spec.max_hold_frames(summer, adc)
+
+    e_now = _take(energy, indices)                     # (..., k)
+    e_ref = _take(cache.energy, indices)
+    age = _take(cache.age, indices)
+    valid = _take(cache.valid, indices)
+
+    delta = jnp.abs(e_now - e_ref)
+    stale = (~valid) | (delta >= spec.delta_threshold) | (age >= max_hold)
+
+    # Rank: stale patches strictly first; among stale, hold age plus the
+    # row-normalized delta — age must take part (and eventually dominate)
+    # so that overflow staleness deferred past the budget makes progress
+    # every frame instead of starving behind a fixed first-j positional
+    # winner set; the [0,1) delta term breaks same-age ties toward the
+    # biggest content change. Spare slots rank fresh patches by age but
+    # stay idle. The three bands (fresh [0,1), stale >= 2) are kept small
+    # so f32 rounding cannot swallow the tie-break terms (at the old
+    # 1e9 offset one ulp was 64 — delta and age both rounded away).
+    agef = age.astype(jnp.float32)
+    dmax = jnp.max(delta, axis=-1, keepdims=True)
+    dn = delta / jnp.maximum(dmax, 1e-12)              # [0, 1] per row
+    fresh_rank = 1.0 - 1.0 / (1.0 + agef)              # [0, 1): oldest first
+    score = jnp.where(stale, 2.0 + agef + dn, fresh_rank)
+    _, pos = jax.lax.top_k(score, j)                   # (..., j) positions in [0, k)
+    stale_idx = _take(indices, pos)
+    needed = _take(stale, pos)
+    n_stale = jnp.sum(needed, axis=-1).astype(jnp.int32)
+    return stale_idx, needed, n_stale
+
+
+def refresh(
+    cache: FeatureCache,
+    stale_idx: jnp.ndarray,
+    needed: jnp.ndarray,
+    new_features: jnp.ndarray,
+    energy: jnp.ndarray,
+    n_stale: jnp.ndarray,
+) -> FeatureCache:
+    """Age every held entry by one frame, then scatter-merge the freshly
+    recomputed *stale* patches (droop reset, new delta reference, age 0).
+
+    Only the ``needed`` slots are merged: spare budget slots (fewer stale
+    patches than j) re-project a fresh patch whose held value is still
+    within the droop budget, so their output never leaves the array —
+    no ADC conversion, no streamed bytes, no cache write. ``n_stale``
+    therefore counts exactly the merged (recomputed-and-converted) rows,
+    and the droop clock of held patches keeps ticking until the LSB
+    budget forces a real refresh.
+
+    Droop itself is NOT applied here (see :class:`FeatureCache`): only
+    the per-patch age advances; :func:`held_features` folds
+    ``droop_factor ** age`` in at serve time.
+    """
+    age = jnp.where(cache.valid, cache.age + 1, cache.age)
+
+    old_rows = _take(cache.features, stale_idx)
+    feats = _scatter_rows(
+        cache.features, stale_idx,
+        jnp.where(needed[..., None], new_features, old_rows),
+    )
+    e_ref = _scatter_rows(
+        cache.energy, stale_idx,
+        jnp.where(needed, _take(energy, stale_idx), _take(cache.energy, stale_idx)),
+    )
+    age = _scatter_rows(
+        age, stale_idx, jnp.where(needed, 0, _take(age, stale_idx))
+    )
+    valid = _scatter_rows(
+        cache.valid, stale_idx, needed | _take(cache.valid, stale_idx)
+    )
+    return FeatureCache(feats, e_ref, age, valid, n_stale)
+
+
+def held_features(
+    cache: FeatureCache, indices: jnp.ndarray, summer: sc.SummerSpec
+) -> jnp.ndarray:
+    """Serve the selection from held charge: gather the (..., k) selected
+    rows and apply each entry's accumulated droop, ``value * d^age`` —
+    the charge sat on the summing caps for ``age`` holds. Entries at age
+    0 (refreshed this frame) are served bit-exactly (d^0 == 1)."""
+    feats = _take(cache.features, indices)                  # (..., k, M)
+    age = _take(cache.age, indices).astype(jnp.float32)
+    d = jnp.float32(summer.droop_factor())
+    return feats * jnp.power(d, age)[..., None]

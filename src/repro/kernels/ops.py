@@ -69,6 +69,10 @@ def ip2_project(
     m, n2 = weights.shape
     lead = patches.shape[:-1]
     flat = patches.reshape(-1, n2)
+    # small row batches (the compact path's k rows, or the temporal gate's
+    # j-stale rows — DESIGN.md §6) would otherwise pad up to a full
+    # 128-row MXU tile; clamp to the sublane-aligned row count instead.
+    block_p = max(8, min(block_p, -(-flat.shape[0] // 8) * 8))
 
     w_q, _ = pwm_mod.quantize_weights(weights, spec.quant)  # DAC programming
     w_t = w_q.T                                             # (N2, M)

@@ -1,6 +1,6 @@
 """Pallas TPU kernel — w8a8 quantized matmul (beyond-paper optimization).
 
-The paper's derived digital optimization (DESIGN.md §6): the same
+The paper's derived digital optimization (DESIGN.md §7): the same
 "quantize-the-multiply" insight applied to backend projections and KV-cache
 dequant-matmuls. Weights arrive as int8 codes with a per-output-channel
 scale (exactly the weight-DAC abstraction); activations are quantized

@@ -172,6 +172,7 @@ def vit_forward_compact(
     mask: jnp.ndarray | None = None,
     project_fn=None,
     precomputed=None,
+    cache=None,
 ) -> tuple[jnp.ndarray, dict]:
     """Compact path: frontend projects only the k selected patches, the
     backend attends over exactly those k tokens (index-looked-up positional
@@ -181,6 +182,10 @@ def vit_forward_compact(
     pair from :func:`repro.core.frontend.sensor_patches` (the serving
     engine computes it once for its in-step bootstrap).
 
+    ``cache`` (a :class:`repro.core.temporal.FeatureCache`) enables the
+    temporal delta gate: only the stale subset of the selection is
+    re-projected/converted, held features serve the rest (DESIGN.md §6).
+
     Returns (logits (B, n_classes), aux) with aux:
       ``indices`` (B, k)  — the patches that were ADC-converted;
       ``valid``   (B, k)  — False only on filler slots (< k active);
@@ -188,13 +193,20 @@ def vit_forward_compact(
         grid (unobserved patches score 0): frame t+1's selection signal;
       ``energy``  (B, P)  — the in-pixel patch-energy proxy (free from the
         frontend; the saccade explore term reads it here instead of
-        re-running ``sensor_patches``).
+        re-running ``sensor_patches``);
+      with ``cache`` given, additionally ``cache`` (the refreshed
+      FeatureCache to thread into the next frame) and ``n_stale`` (B,)
+      — how many of the k patches were actually recomputed.
     """
-    cf: CompactFeatures = apply_frontend(
+    out = apply_frontend(
         params["ip2"], rgb, cfg.frontend,
         mask=mask, indices=indices, mode="compact", project_fn=project_fn,
-        precomputed=precomputed,
+        precomputed=precomputed, cache=cache,
     )
+    new_cache = None
+    if cache is not None:
+        out, new_cache = out
+    cf: CompactFeatures = out
     # index-based positional embeddings: pos[idx], not pos broadcast over P
     x = cf.features @ params["embed"] + params["pos"][cf.indices]
     logits, received = _encoder(params, x, cfg, cf.valid)
@@ -204,10 +216,14 @@ def vit_forward_compact(
     saliency = jnp.zeros(
         (received.shape[0], cfg.frontend.n_patches), jnp.float32
     ).at[b, cf.indices].max(received)
-    return logits, {
+    aux = {
         "indices": cf.indices, "valid": cf.valid,
         "saliency": saliency, "energy": cf.energy,
     }
+    if new_cache is not None:
+        aux["cache"] = new_cache
+        aux["n_stale"] = new_cache.n_stale
+    return logits, aux
 
 
 def vit_loss(params, rgb, labels, cfg: ViTConfig):

@@ -49,19 +49,26 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.temporal import FeatureCache, init_feature_cache
 from repro.serve.serve_step import saccade_scores
 
 
 class StreamState(NamedTuple):
-    """Per-slot gaze state; every leaf is slot-major with static shape."""
+    """Per-slot gaze state; every leaf is slot-major with static shape.
+
+    ``cache`` is None unless the engine runs with ``temporal=True``, in
+    which case it carries each slot's held-charge feature cache (incl.
+    the per-patch age array driving the droop budget; DESIGN.md §6).
+    """
 
     indices: jnp.ndarray    # (S, k) int32 — next frame's patch selection
     ema: jnp.ndarray        # (S, P) float32 — attention-score EMA
     frame_age: jnp.ndarray  # (S,) int32 — frames served since admit (0 = bootstrap)
     active: jnp.ndarray     # (S,) bool — slot occupied
+    cache: FeatureCache | None = None   # per-slot temporal cache (temporal mode)
 
 
-def init_stream_state(cfg, capacity: int) -> StreamState:
+def init_stream_state(cfg, capacity: int, temporal: bool = False) -> StreamState:
     """All slots free; indices are a placeholder (age 0 bootstraps in-step)."""
     k = cfg.frontend.n_active
     p = cfg.frontend.n_patches
@@ -70,11 +77,22 @@ def init_stream_state(cfg, capacity: int) -> StreamState:
         ema=jnp.zeros((capacity, p), jnp.float32),
         frame_age=jnp.zeros((capacity,), jnp.int32),
         active=jnp.zeros((capacity,), bool),
+        cache=init_feature_cache(cfg.frontend, (capacity,)) if temporal else None,
     )
 
 
+def _freeze_rows(act: jnp.ndarray, new, old):
+    """Per-leaf ``where(active_slot, new, old)`` with act broadcast from
+    (S,) up to each leaf's rank (slot-major leaves)."""
+    def leaf(n, o):
+        a = act.reshape(act.shape + (1,) * (n.ndim - 1))
+        return jnp.where(a, n, o)
+
+    return jax.tree.map(leaf, new, old)
+
+
 def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
-                     project_fn=None):
+                     project_fn=None, temporal: bool = False):
     """Batched slot step: (params, frames (S,H,W,3), state) -> (logits, state).
 
     Per slot this is exactly one ``make_saccade_step`` frame — same compact
@@ -83,6 +101,12 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
     freezing of inactive slots (their rows pass through unchanged and
     their logits are zeroed). Pure and jit-stable: nothing here depends on
     which slots are occupied except through ``state`` values.
+
+    With ``temporal=True`` the per-slot temporal cache (held-charge
+    feature reuse, DESIGN.md §6) is threaded through ``state.cache``; a
+    fresh slot's cache rows are invalidated in-step (belt to the admit
+    reset, so a recycled slot can never serve its previous occupant's
+    held features).
     """
     from repro.core import frontend as fe
     from repro.core import saliency as sal
@@ -98,9 +122,15 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
         fresh = state.frame_age == 0
         indices = jnp.where(fresh[:, None], boot, state.indices)
 
+        cache = None
+        if temporal:
+            cache = state.cache._replace(
+                valid=state.cache.valid & ~fresh[:, None]
+            )
         logits, aux = vit_forward_compact(
             params, frames, cfg, indices=indices,
             project_fn=project_fn, precomputed=(patches, weights),
+            cache=cache,
         )
         scores = saccade_scores(aux, explore)
         ema = jnp.where(
@@ -115,6 +145,8 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
             ema=jnp.where(act[:, None], ema, state.ema),
             frame_age=jnp.where(act, state.frame_age + 1, state.frame_age),
             active=act,
+            cache=(_freeze_rows(act, aux["cache"], state.cache)
+                   if temporal else None),
         )
         logits = jnp.where(act[:, None], logits, 0.0)
         return logits, new_state
@@ -127,12 +159,23 @@ def _make_admit(capacity: int, k: int):
 
     def admit(state: StreamState, slot) -> StreamState:
         hit = jnp.arange(capacity) == slot
+        cache = state.cache
+        if cache is not None:
+            # full row wipe: a recycled slot starts with no held charge
+            cache = FeatureCache(
+                features=jnp.where(hit[:, None, None], 0.0, cache.features),
+                energy=jnp.where(hit[:, None], 0.0, cache.energy),
+                age=jnp.where(hit[:, None], 0, cache.age),
+                valid=cache.valid & ~hit[:, None],
+                n_stale=jnp.where(hit, 0, cache.n_stale),
+            )
         return StreamState(
             indices=jnp.where(hit[:, None],
                               jnp.arange(k, dtype=jnp.int32)[None], state.indices),
             ema=jnp.where(hit[:, None], 0.0, state.ema),
             frame_age=jnp.where(hit, 0, state.frame_age),
             active=state.active | hit,
+            cache=cache,
         )
 
     return admit
@@ -172,22 +215,29 @@ class SaccadeEngine:
       explore / project_fn: as in ``make_saccade_step``.
       ema_decay: attention-EMA smoothing; 0.0 (default) = per-frame scores,
         matching the single-stream step exactly.
+      temporal: enable the per-slot temporal delta gate (DESIGN.md §6) —
+        each slot carries a held-charge :class:`FeatureCache` in
+        ``state.cache``; only the stale subset of each frame's selection
+        is re-projected/ADC-converted (``cfg.frontend.temporal`` sets the
+        threshold/budget), and admit wipes the recycled slot's cache row.
     """
 
     def __init__(self, cfg, params, capacity: int = 8, *, mesh=None,
                  axis: str = "data", explore: float = 0.1,
-                 ema_decay: float = 0.0, project_fn=None):
+                 ema_decay: float = 0.0, project_fn=None,
+                 temporal: bool = False):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.cfg = cfg
         self.params = params
         self.capacity = capacity
         self.mesh = mesh
+        self.temporal = temporal
         self._slots: list[Hashable | None] = [None] * capacity
         self._n_traces = 0
 
         fn = make_engine_step(cfg, explore=explore, ema_decay=ema_decay,
-                              project_fn=project_fn)
+                              project_fn=project_fn, temporal=temporal)
 
         self._slot_spec = P()
         if mesh is not None:
@@ -216,7 +266,7 @@ class SaccadeEngine:
             _make_admit(capacity, cfg.frontend.n_active), donate_argnums=(0,))
         self._evict_fn = jax.jit(_make_evict(capacity), donate_argnums=(0,))
 
-        state = init_stream_state(cfg, capacity)
+        state = init_stream_state(cfg, capacity, temporal=temporal)
         if mesh is not None and self._slot_spec != P():
             sh = NamedSharding(mesh, self._slot_spec)
             state = jax.tree.map(lambda x: jax.device_put(x, sh), state)
@@ -286,6 +336,20 @@ class SaccadeEngine:
         logits, self.state = self._step_fn(self.params, jnp.asarray(buf), self.state)
         logits = np.asarray(logits)
         return {sid: logits[self.slot_of(sid)] for sid in frames}
+
+    def recompute_fraction(self, stream_id: Hashable) -> float:
+        """Fraction of this stream's k selected patches that were actually
+        re-projected/ADC-converted on its last served frame (temporal mode
+        only). 1.0 on the bootstrap frame; drops toward 0 on static scenes
+        as held charge serves the selection (DESIGN.md §6)."""
+        if not self.temporal:
+            raise RuntimeError("engine was built without temporal=True")
+        slot = self.slot_of(stream_id)
+        if int(self.state.frame_age[slot]) == 0:
+            raise RuntimeError(
+                f"stream {stream_id!r} has not served a frame yet"
+            )
+        return float(self.state.cache.n_stale[slot]) / self.cfg.frontend.n_active
 
     def gaze(self, stream_id: Hashable) -> np.ndarray:
         """The (k,) patch indices this stream will ADC-convert next frame.

@@ -88,7 +88,8 @@ def saccade_scores(aux: dict, explore: float) -> jnp.ndarray:
     return scores + max(explore, 1e-3) * baseline * energy
 
 
-def make_saccade_step(cfg, explore: float = 0.1, project_fn=None):
+def make_saccade_step(cfg, explore: float = 0.1, project_fn=None,
+                      temporal: bool = False):
     """Closed-loop serving step on the compact path end to end.
 
     Frame t: the frontend gathers and projects ONLY the k patches the
@@ -105,12 +106,21 @@ def make_saccade_step(cfg, explore: float = 0.1, project_fn=None):
       project_fn: optional kernel-backed projection (e.g.
         ``ops.ip2_project_fn(cfg.frontend.patch, interpret=...)``) applied
         to the gathered active patches.
+      temporal: enable the temporal delta gate (``cfg.frontend.temporal``;
+        DESIGN.md §6). The step then takes and returns a
+        :class:`repro.core.temporal.FeatureCache` — only the stale subset
+        of each frame's selection is re-projected/ADC-converted, the rest
+        is served from held charge — multiplying the spatial (k/P)
+        savings by the temporal reuse factor on slowly-changing scenes.
 
     Returns step(params, rgb, indices) -> (logits, next_indices, aux),
     pure and jit-able; ``indices`` for the first frame come from
-    :func:`make_bootstrap_indices`. For many concurrent streams use
-    :class:`repro.serve.engine.SaccadeEngine`, which batches this exact
-    step over fixed slots with per-stream state.
+    :func:`make_bootstrap_indices`. With ``temporal=True`` the signature
+    is step(params, rgb, indices, cache) -> (logits, next_indices, aux,
+    cache); seed the cache with
+    :func:`repro.core.temporal.init_feature_cache`. For many concurrent
+    streams use :class:`repro.serve.engine.SaccadeEngine`, which batches
+    this exact step over fixed slots with per-stream state.
     """
     from repro.core import saliency as sal
     from repro.models.vit import vit_forward_compact
@@ -125,4 +135,13 @@ def make_saccade_step(cfg, explore: float = 0.1, project_fn=None):
         next_indices = sal.topk_patch_indices(scores, fcfg.n_active)
         return logits, next_indices, aux
 
-    return step
+    def step_temporal(params, rgb, indices, cache):
+        logits, aux = vit_forward_compact(
+            params, rgb, cfg, indices=indices, project_fn=project_fn,
+            cache=cache,
+        )
+        scores = saccade_scores(aux, explore)
+        next_indices = sal.topk_patch_indices(scores, fcfg.n_active)
+        return logits, next_indices, aux, aux.pop("cache")
+
+    return step_temporal if temporal else step

@@ -244,6 +244,57 @@ def test_engine_sharded_slots_match_unsharded_zero_recompiles():
     assert res["odd_err"] < 1e-5, res
 
 
+def test_temporal_engine_sharded_matches_unsharded():
+    """SaccadeEngine(temporal=True) with the slot axis shard_map'd: the
+    per-slot FeatureCache shards with the rest of StreamState, logits and
+    recompute fractions match the unsharded engine on a static scene
+    (reuse kicks in identically), still one compile."""
+    res = run_with_devices("""
+        import json
+        import numpy as np
+        import jax
+        from repro.core.frontend import FrontendConfig
+        from repro.core.projection import PatchSpec
+        from repro.core.temporal import TemporalSpec
+        from repro.data.pipeline import SceneStream
+        from repro.launch.mesh import make_host_mesh
+        from repro.models.vit import ViTConfig, init_vit
+        from repro.serve.engine import SaccadeEngine
+
+        fcfg = FrontendConfig(image_h=64, image_w=64,
+                              patch=PatchSpec(patch_h=16, patch_w=16, n_vectors=32),
+                              active_fraction=0.25,
+                              temporal=TemporalSpec(delta_threshold=1e-5))
+        cfg = ViTConfig(frontend=fcfg, n_layers=1, d_model=32, n_heads=2, d_ff=64)
+        params = init_vit(jax.random.PRNGKey(0), cfg)
+        stream = SceneStream(image=64)
+        mesh = make_host_mesh(data=4, model=1)
+
+        e_sh = SaccadeEngine(cfg, params, capacity=4, mesh=mesh, temporal=True)
+        e_ref = SaccadeEngine(cfg, params, capacity=4, temporal=True)
+        for s in range(3):
+            e_sh.admit(s); e_ref.admit(s)
+        frame0 = stream.batch(0, 3)[0]
+        frames = {i: frame0[i] for i in range(3)}
+        err = 0.0
+        for t in range(4):                    # static scene: reuse kicks in
+            o = e_sh.step(frames); r = e_ref.step(frames)
+            err = max(err, max(float(np.abs(o[s] - r[s]).max()) for s in frames))
+        print(json.dumps({
+            "err": err,
+            "cache_devices": len(e_sh.state.cache.features.sharding.device_set),
+            "fr_sh": [e_sh.recompute_fraction(s) for s in range(3)],
+            "fr_ref": [e_ref.recompute_fraction(s) for s in range(3)],
+            "traces": e_sh.n_traces,
+        }))
+    """, n=4)
+    assert res["err"] < 1e-5, res
+    assert res["cache_devices"] == 4, res        # cache really sharded
+    assert res["fr_sh"] == res["fr_ref"], res    # identical reuse decisions
+    assert res["fr_sh"] == [0.0, 0.0, 0.0], res  # static scene: no recompute
+    assert res["traces"] == 1, res
+
+
 def test_compressed_allreduce_and_error_feedback():
     res = run_with_devices("""
         import json, jax, jax.numpy as jnp

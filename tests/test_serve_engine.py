@@ -180,6 +180,124 @@ class TestEquivalence:
             np.asarray(eng.state.ema), np.asarray(want), atol=1e-6)
 
 
+class TestBootstrapDeterminism:
+    """Satellite: make_bootstrap_indices must be a pure deterministic
+    function of (params, rgb) — identical under jit and eager, stable
+    across calls, and batch-order equivariant. (It is: the selection is
+    an energy top-k with no RNG; this pins that contract so a future
+    stochastic bootstrap must be made explicit, not derived from params
+    hashing.)"""
+
+    def test_jit_matches_eager(self, served):
+        cfg, params = served
+        boot = make_bootstrap_indices(cfg)
+        jboot = jax.jit(boot)
+        stream = SceneStream(image=64)
+        for t in range(3):
+            rgb = jnp.asarray(stream.batch(t, 4)[0])
+            np.testing.assert_array_equal(
+                np.asarray(boot(params, rgb)), np.asarray(jboot(params, rgb)))
+
+    def test_repeated_calls_identical(self, served):
+        cfg, params = served
+        boot = jax.jit(make_bootstrap_indices(cfg))
+        rgb = jnp.asarray(SceneStream(image=64).batch(7, 2)[0])
+        a = np.asarray(boot(params, rgb))
+        b = np.asarray(boot(params, rgb))
+        np.testing.assert_array_equal(a, b)
+
+    def test_batch_elements_independent(self, served):
+        """Each element's bootstrap depends only on its own frame."""
+        cfg, params = served
+        boot = jax.jit(make_bootstrap_indices(cfg))
+        rgb = jnp.asarray(SceneStream(image=64).batch(3, 4)[0])
+        full = np.asarray(boot(params, rgb))
+        flipped = np.asarray(boot(params, rgb[::-1]))
+        np.testing.assert_array_equal(full, flipped[::-1])
+
+
+class TestStatefulFuzz:
+    """Satellite: random admit/evict/step sequences against a pure-Python
+    slot-bookkeeping oracle AND per-stream reference single-stream loops —
+    slot reuse, free_slots, one compile, and output isolation must all
+    survive arbitrary churn."""
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_random_churn_against_oracle(self, served, seed):
+        cfg, params = served
+        capacity = 3
+        eng = SaccadeEngine(cfg, params, capacity=capacity)
+        boot = jax.jit(make_bootstrap_indices(cfg))
+        step1 = jax.jit(make_saccade_step(cfg))
+        stream = SceneStream(image=64)
+        pool = stream.batch(9000 + seed, 8)[0]          # frame pool
+
+        rng = np.random.default_rng(1000 + seed)
+        slots: list = [None] * capacity                  # the oracle
+        refs: dict = {}                                  # sid -> (idx, age)
+        next_id = 0
+        stepped = False
+
+        for op_i in range(40):
+            op = rng.choice(["admit", "evict", "step"], p=[0.35, 0.2, 0.45])
+            if op == "admit":
+                sid = f"s{next_id}"
+                if None not in slots:
+                    with pytest.raises(RuntimeError, match="capacity"):
+                        eng.admit(sid)
+                    continue
+                got = eng.admit(sid)
+                want = slots.index(None)                 # lowest free slot
+                slots[want] = sid
+                refs[sid] = [None, 0]
+                next_id += 1
+                assert got == want, f"op {op_i}: slot reuse broke"
+            elif op == "evict":
+                live = [s for s in slots if s is not None]
+                if not live:
+                    with pytest.raises(KeyError):
+                        eng.evict("nope")
+                    continue
+                sid = live[int(rng.integers(len(live)))]
+                eng.evict(sid)
+                slots[slots.index(sid)] = None
+                del refs[sid]
+            else:
+                live = [s for s in slots if s is not None]
+                frames = {
+                    sid: pool[(slots.index(sid) + 2 * refs[sid][1]) % len(pool)]
+                    for sid in live
+                }
+                out = eng.step(frames)
+                if live:
+                    stepped = True
+                assert set(out) == set(live)
+                # per-stream isolation: every live stream matches its own
+                # dedicated batch-1 loop, whatever its neighbours did
+                for sid in live:
+                    r = jnp.asarray(frames[sid])[None]
+                    if refs[sid][0] is None:
+                        refs[sid][0] = boot(params, r)
+                    logits, refs[sid][0], _ = step1(params, r, refs[sid][0])
+                    np.testing.assert_allclose(
+                        out[sid], np.asarray(logits[0]), atol=1e-5,
+                        err_msg=f"op {op_i}: stream {sid} diverged")
+                    refs[sid][1] += 1
+
+            # bookkeeping invariants after every op
+            assert eng.free_slots == slots.count(None)
+            assert eng.stream_ids == [s for s in slots if s is not None]
+            for s_i, sid in enumerate(slots):
+                if sid is not None:
+                    assert eng.slot_of(sid) == s_i
+                    assert int(eng.state.frame_age[s_i]) == refs[sid][1]
+            assert int(np.asarray(eng.state.active).sum()) == (
+                capacity - slots.count(None))
+
+        assert stepped and eng.n_traces == 1, (
+            f"churn caused {eng.n_traces} compiles")
+
+
 class TestZeroRecompile:
     def test_one_compile_across_admit_evict_admit(self, served):
         """The acceptance-criterion contract: a full admit -> evict ->

@@ -1,0 +1,447 @@
+"""Temporal delta-gated execution (DESIGN.md §6): threshold-0 equivalence
+with the always-recompute compact path, static-scene reuse within the
+droop budget, budget-j deferred refresh, droop-forced refresh cycles, and
+the gate threaded through the saccade step and the multi-stream engine."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.core as c
+from repro.core.frontend import FrontendConfig, apply_frontend
+from repro.core.projection import PatchSpec
+from repro.core.switched_cap import SummerSpec
+from repro.core.temporal import TemporalSpec, init_feature_cache
+from repro.data.pipeline import SceneStream
+from repro.kernels import ops
+from repro.models.vit import ViTConfig, init_vit, vit_forward_compact
+from repro.serve.engine import SaccadeEngine
+from repro.serve.serve_step import make_bootstrap_indices, make_saccade_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _fcfg(**kw):
+    base = dict(
+        image_h=64, image_w=64,
+        patch=PatchSpec(patch_h=16, patch_w=16, n_vectors=32),
+        active_fraction=0.25,
+    )
+    base.update(kw)
+    return FrontendConfig(**base)
+
+
+def _vcfg(fcfg, **kw):
+    base = dict(frontend=fcfg, n_layers=1, d_model=32, n_heads=2, d_ff=64)
+    base.update(kw)
+    return ViTConfig(**base)
+
+
+class TestMaxHoldFrames:
+    def test_opamp_holds_many_frames(self):
+        spec = TemporalSpec(droop_lsb_budget=0.5)
+        h = spec.max_hold_frames(SummerSpec(), c.ADCSpec())
+        # d = A0/(1+A0) = 1e4/(1e4+1): ~1e-4 droop per hold, 0.5 LSB ~ 3.9e-3
+        assert 30 <= h <= 50
+
+    def test_passive_65nm_cannot_hold(self):
+        """10% droop per 10us hold >> a 0.5-LSB budget: even ONE hold
+        violates it, so the gate must recompute every frame (h=0), never
+        serve a held value."""
+        spec = TemporalSpec(droop_lsb_budget=0.5)
+        h = spec.max_hold_frames(SummerSpec(mode="passive"), c.ADCSpec())
+        assert h == 0
+
+    def test_budget_monotone_in_hold_count(self):
+        summer, adc = SummerSpec(), c.ADCSpec()
+        holds = [TemporalSpec(droop_lsb_budget=b).max_hold_frames(summer, adc)
+                 for b in (0.25, 0.5, 1.0, 2.0)]
+        assert holds == sorted(holds) and holds[0] < holds[-1]
+
+    def test_bound_is_tight(self):
+        """h holds stay within budget; h+1 holds exceed it (full-scale)."""
+        summer, adc = SummerSpec(), c.ADCSpec()
+        spec = TemporalSpec(droop_lsb_budget=0.5)
+        h = spec.max_hold_frames(summer, adc)
+        d = summer.droop_factor()
+        lsb = (adc.v_max - adc.v_min) / (adc.levels - 1)
+        assert (1 - d ** h) * adc.v_max <= spec.droop_lsb_budget * lsb
+        assert (1 - d ** (h + 1)) * adc.v_max > spec.droop_lsb_budget * lsb
+
+
+class TestGateEquivalence:
+    """Acceptance: threshold 0 => the gated path IS the PR-2 compact path."""
+
+    def test_threshold0_features_bitwise(self):
+        fcfg = _fcfg()
+        params = c.init_frontend_params(KEY, fcfg)
+        rgb = jax.random.uniform(jax.random.PRNGKey(3), (3, 64, 64, 3))
+        cf0 = apply_frontend(params, rgb, fcfg, mode="compact")
+        cache = init_feature_cache(fcfg, (3,))
+        for _ in range(3):   # every frame recomputes everything => bitwise
+            cf1, cache = apply_frontend(
+                params, rgb, fcfg, mode="compact", cache=cache)
+            np.testing.assert_array_equal(
+                np.asarray(cf0.features), np.asarray(cf1.features))
+            np.testing.assert_array_equal(
+                np.asarray(cf0.indices), np.asarray(cf1.indices))
+        assert int(cache.n_stale.min()) == fcfg.n_active
+        assert int(cache.age.max()) == 0    # nothing ever held
+
+    def test_threshold0_saccade_logits_bitwise(self):
+        cfg = _vcfg(_fcfg())
+        params = init_vit(KEY, cfg)
+        stream = SceneStream(image=64)
+        plain = jax.jit(make_saccade_step(cfg))
+        gated = jax.jit(make_saccade_step(cfg, temporal=True))
+        idx = make_bootstrap_indices(cfg)(
+            params, jnp.asarray(stream.batch(0, 2)[0]))
+        idx_p = idx_g = idx
+        cache = init_feature_cache(cfg.frontend, (2,))
+        for t in range(3):
+            rgb = jnp.asarray(stream.batch(t, 2)[0])
+            lp, idx_p, _ = plain(params, rgb, idx_p)
+            lg, idx_g, aux, cache = gated(params, rgb, idx_g, cache)
+            np.testing.assert_array_equal(np.asarray(lp), np.asarray(lg))
+            np.testing.assert_array_equal(np.asarray(idx_p), np.asarray(idx_g))
+            assert int(aux["n_stale"].min()) == cfg.frontend.n_active
+
+    def test_dense_mode_rejects_cache(self):
+        fcfg = _fcfg()
+        params = c.init_frontend_params(KEY, fcfg)
+        rgb = jax.random.uniform(KEY, (1, 64, 64, 3))
+        with pytest.raises(ValueError, match="bypass"):
+            apply_frontend(params, rgb, fcfg, mode="dense",
+                           cache=init_feature_cache(fcfg, (1,)))
+
+
+class TestStaticSceneReuse:
+    """Acceptance: on a static scene, recompute fraction <= 10 % after
+    frame 0 while logits stay within the droop-budget tolerance of the
+    always-recompute oracle."""
+
+    def test_t8_static_scene(self):
+        fg = _fcfg(temporal=TemporalSpec(delta_threshold=1e-6))
+        cfg = _vcfg(fg, n_layers=2, d_model=64, n_heads=4, d_ff=128)
+        params = init_vit(KEY, cfg)
+        rgb = jnp.asarray(SceneStream(image=64).batch(0, 3)[0])  # frozen frame
+
+        # fixed gaze (static scene): selection from the energy bootstrap
+        idx = make_bootstrap_indices(cfg)(params, rgb)
+        logits_oracle, _ = vit_forward_compact(params, rgb, cfg, indices=idx)
+
+        cache = init_feature_cache(fg, (3,))
+        k = fg.n_active
+        fracs = []
+        for t in range(8):
+            logits, aux = vit_forward_compact(
+                params, rgb, cfg, indices=idx, cache=cache)
+            cache = aux["cache"]
+            fracs.append(float(np.mean(np.asarray(aux["n_stale"])) / k))
+        assert fracs[0] == 1.0                       # cold cache: all stale
+        assert max(fracs[1:]) <= 0.10                # acceptance criterion
+
+        # served features droop by at most (1 - d^7) of full scale, well
+        # inside the 0.5-LSB budget; require the logits to stay within a
+        # tolerance derived from that budget (k tokens x d_model mixing)
+        lsb = (fg.adc.v_max - fg.adc.v_min) / (fg.adc.levels - 1)
+        tol = fg.temporal.droop_lsb_budget * lsb * 10.0
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(logits_oracle), atol=tol)
+
+    def test_changed_patch_is_detected(self):
+        """Change the *content* of exactly one selected patch between
+        frames: only that patch goes stale. (The detector is AC energy —
+        mean-centered — so it keys on contrast, not absolute brightness:
+        a global illumination shift is free.)"""
+        fg = _fcfg(temporal=TemporalSpec(delta_threshold=1e-3))
+        params = c.init_frontend_params(KEY, fg)
+        rgb = jax.random.uniform(jax.random.PRNGKey(9), (1, 64, 64, 3))
+        cf = apply_frontend(params, rgb, fg, mode="compact")
+        idx = cf.indices                              # fix the gaze
+
+        cache = init_feature_cache(fg, (1,))
+        _, cache = apply_frontend(params, rgb, fg, mode="compact",
+                                  indices=idx, cache=cache)
+        assert int(cache.n_stale[0]) == fg.n_active   # cold
+
+        _, cache = apply_frontend(params, rgb, fg, mode="compact",
+                                  indices=idx, cache=cache)
+        assert int(cache.n_stale[0]) == 0             # static
+
+        target = int(np.asarray(idx)[0, 0])           # flatten one patch's texture
+        gh = 64 // 16
+        py, px = divmod(target, gh)
+        rgb2 = rgb.at[0, py * 16:(py + 1) * 16, px * 16:(px + 1) * 16, :].multiply(0.1)
+        cf2, cache = apply_frontend(params, rgb2, fg, mode="compact",
+                                    indices=idx, cache=cache)
+        assert int(cache.n_stale[0]) == 1
+        assert int(cache.age[0, target]) == 0         # refreshed now
+        # the refreshed feature reflects the NEW content
+        cf_fresh = apply_frontend(params, rgb2, fg, mode="compact", indices=idx)
+        pos = int(np.where(np.asarray(idx)[0] == target)[0][0])
+        np.testing.assert_array_equal(
+            np.asarray(cf2.features[0, pos]), np.asarray(cf_fresh.features[0, pos]))
+
+
+class TestBudgetAndDroop:
+    def test_budget_defers_overflow_staleness(self):
+        """j=1: a cold cache fills one selected patch per frame until all
+        k are held; staleness beyond the budget is deferred, not lost."""
+        fg = _fcfg(temporal=TemporalSpec(delta_threshold=1e-6,
+                                         recompute_budget=1))
+        params = c.init_frontend_params(KEY, fg)
+        rgb = jax.random.uniform(jax.random.PRNGKey(4), (1, 64, 64, 3))
+        idx = apply_frontend(params, rgb, fg, mode="compact").indices
+        cache = init_feature_cache(fg, (1,))
+        k = fg.n_active
+        for t in range(k):
+            _, cache = apply_frontend(params, rgb, fg, mode="compact",
+                                      indices=idx, cache=cache)
+            held = int(np.asarray(cache.valid[0])[np.asarray(idx)[0]].sum())
+            assert int(cache.n_stale[0]) == 1
+            assert held == t + 1
+        _, cache = apply_frontend(params, rgb, fg, mode="compact",
+                                  indices=idx, cache=cache)
+        assert int(cache.n_stale[0]) == 0             # all held now
+
+    def test_never_computed_patch_serves_uncharged_zero(self):
+        """Under budget, a selected-but-not-yet-computed patch serves 0 —
+        an uncharged summing cap — until its deferred refresh lands."""
+        fg = _fcfg(temporal=TemporalSpec(delta_threshold=1e-6,
+                                         recompute_budget=1))
+        params = c.init_frontend_params(KEY, fg)
+        rgb = jax.random.uniform(jax.random.PRNGKey(5), (1, 64, 64, 3))
+        idx = apply_frontend(params, rgb, fg, mode="compact").indices
+        cache = init_feature_cache(fg, (1,))
+        cf, cache = apply_frontend(params, rgb, fg, mode="compact",
+                                   indices=idx, cache=cache)
+        held = np.asarray(cache.valid[0])[np.asarray(idx)[0]]
+        feats = np.asarray(cf.features[0])
+        assert held.sum() == 1
+        assert (np.abs(feats[~held]).max() == 0.0)
+        assert np.abs(feats[held]).max() > 0.0
+
+    def test_budget_overflow_rotates_without_starvation(self):
+        """Persistent motion with j < k: every selected patch stays stale
+        every frame, so the budget must ROTATE through them — hold age
+        takes part in the stale ranking (f32-safely; a large additive
+        offset would round it away) and guarantees each patch is
+        refreshed within ceil(k/j) frames. A positional tie-break would
+        starve the later selection positions forever."""
+        j = 2
+        fg = _fcfg(temporal=TemporalSpec(delta_threshold=1e-6,
+                                         recompute_budget=j))
+        params = c.init_frontend_params(KEY, fg)
+        k = fg.n_active
+        idx = jnp.asarray([[1, 5, 9, 12]], jnp.int32)     # fixed gaze
+        cache = init_feature_cache(fg, (1,))
+        max_age = []
+        for t in range(10):
+            rgb = jax.random.uniform(jax.random.PRNGKey(100 + t),
+                                     (1, 64, 64, 3))      # new content
+            _, cache = apply_frontend(params, rgb, fg, mode="compact",
+                                      indices=idx, cache=cache)
+            assert int(cache.n_stale[0]) == j             # saturated budget
+            ages = np.asarray(cache.age[0])[np.asarray(idx)[0]]
+            valid = np.asarray(cache.valid[0])[np.asarray(idx)[0]]
+            max_age.append(int(ages[valid].max()) if valid.any() else 0)
+        # once warm, no selected patch is ever held longer than k/j frames
+        assert max(max_age[k // j:]) <= k // j, max_age
+
+    def test_passive_summer_forces_refresh_cycle(self):
+        """A leaky passive summer (max_hold 1) must re-convert every other
+        frame even on a static scene — the droop-limited refresh."""
+        ps = PatchSpec(patch_h=16, patch_w=16, n_vectors=32,
+                       summer=SummerSpec(mode="passive", hold_time_s=1e-6))
+        fg = _fcfg(patch=ps,
+                   temporal=TemporalSpec(delta_threshold=1e-6,
+                                         droop_lsb_budget=2.0))
+        assert fg.temporal.max_hold_frames(ps.summer, fg.adc) == 1
+        params = c.init_frontend_params(KEY, fg)
+        rgb = jax.random.uniform(jax.random.PRNGKey(6), (1, 64, 64, 3))
+        idx = apply_frontend(params, rgb, fg, mode="compact").indices
+        cache = init_feature_cache(fg, (1,))
+        stale = []
+        for t in range(6):
+            _, cache = apply_frontend(params, rgb, fg, mode="compact",
+                                      indices=idx, cache=cache)
+            stale.append(int(cache.n_stale[0]))
+        k = fg.n_active
+        assert stale == [k, 0, k, 0, k, 0]
+
+    def test_zero_hold_budget_recomputes_every_frame(self):
+        """max_hold 0 (one hold already violates the LSB budget): the
+        gate must never serve a held value — every selected patch is
+        recomputed every frame even on a static scene, and no served
+        entry ever reaches age 1."""
+        ps = PatchSpec(patch_h=16, patch_w=16, n_vectors=32,
+                       summer=SummerSpec(mode="passive"))
+        fg = _fcfg(patch=ps,
+                   temporal=TemporalSpec(delta_threshold=1e-6,
+                                         droop_lsb_budget=0.5))
+        assert fg.temporal.max_hold_frames(ps.summer, fg.adc) == 0
+        params = c.init_frontend_params(KEY, fg)
+        rgb = jax.random.uniform(jax.random.PRNGKey(11), (1, 64, 64, 3))
+        idx = apply_frontend(params, rgb, fg, mode="compact").indices
+        fresh = apply_frontend(params, rgb, fg, mode="compact", indices=idx)
+        cache = init_feature_cache(fg, (1,))
+        for t in range(4):
+            cf, cache = apply_frontend(params, rgb, fg, mode="compact",
+                                       indices=idx, cache=cache)
+            assert int(cache.n_stale[0]) == fg.n_active
+            assert int(np.asarray(cache.age[0])[np.asarray(idx)[0]].max()) == 0
+            np.testing.assert_array_equal(          # never a drooped serve
+                np.asarray(cf.features), np.asarray(fresh.features))
+
+    def test_held_features_droop_by_factor(self):
+        """A held entry's served value is the computed value times d^h."""
+        fg = _fcfg(temporal=TemporalSpec(delta_threshold=1e-6))
+        params = c.init_frontend_params(KEY, fg)
+        rgb = jax.random.uniform(jax.random.PRNGKey(7), (1, 64, 64, 3))
+        idx = apply_frontend(params, rgb, fg, mode="compact").indices
+        fresh = apply_frontend(params, rgb, fg, mode="compact", indices=idx)
+        cache = init_feature_cache(fg, (1,))
+        h = 3
+        for t in range(1 + h):
+            cf, cache = apply_frontend(params, rgb, fg, mode="compact",
+                                       indices=idx, cache=cache)
+        d = fg.patch.summer.droop_factor()
+        np.testing.assert_allclose(
+            np.asarray(cf.features), np.asarray(fresh.features) * d ** h,
+            rtol=1e-6)
+        assert int(np.asarray(cache.age[0])[np.asarray(idx)[0]].min()) == h
+
+    def test_gated_gradients_reach_frontend(self):
+        """STE-compat: gradients flow through the gated path (gather,
+        scatter-merge, projection quantizers) into the analog weights."""
+        fg = _fcfg(temporal=TemporalSpec(delta_threshold=1e-6))
+        cfg = _vcfg(fg)
+        params = init_vit(KEY, cfg)
+        rgb = jax.random.uniform(KEY, (2, 64, 64, 3))
+        cache = init_feature_cache(fg, (2,))
+
+        def loss(p):
+            logits, _ = vit_forward_compact(p, rgb, cfg, cache=cache)
+            return jnp.sum(logits ** 2)
+
+        g = jax.grad(loss)(params)
+        assert float(jnp.abs(g["ip2"]["a_rgb"]).max()) > 0.0
+        assert float(jnp.abs(g["ip2"]["bias"]).max()) > 0.0
+
+
+class TestKernelGatedParity:
+    def test_sparse_kernel_matches_gated_recompute(self):
+        """The scalar-prefetch sparse kernel can serve as the gated
+        projection: features it computes for the stale subset equal the
+        reference gather-then-project path inside the gate."""
+        fg = _fcfg(temporal=TemporalSpec(delta_threshold=1e-6))
+        params = c.init_frontend_params(KEY, fg)
+        rgb = jax.random.uniform(jax.random.PRNGKey(8), (2, 64, 64, 3))
+        patches, weights = c.sensor_patches(params, rgb, fg)
+        idx = c.topk_patch_indices(c.patch_energy(patches), fg.n_active)
+        feats_k = ops.ip2_project_sparse(
+            patches, weights, idx, fg.patch,
+            adc=fg.adc, bias=params["bias"], interpret=True,
+        )
+        cache = init_feature_cache(fg, (2,))
+        cf, _ = apply_frontend(params, rgb, fg, mode="compact",
+                               indices=idx, cache=cache)
+        np.testing.assert_allclose(
+            np.asarray(feats_k), np.asarray(cf.features), atol=1e-5)
+
+    def test_kernel_project_fn_in_gated_path(self):
+        """ops.ip2_project_fn drops into the gated frontend (it receives
+        the gathered j stale rows) and matches the reference einsum."""
+        fg = _fcfg(temporal=TemporalSpec(delta_threshold=1e-6))
+        params = c.init_frontend_params(KEY, fg)
+        rgb = jax.random.uniform(jax.random.PRNGKey(8), (2, 64, 64, 3))
+        cache_r = init_feature_cache(fg, (2,))
+        cache_k = init_feature_cache(fg, (2,))
+        cf_r, _ = apply_frontend(params, rgb, fg, mode="compact", cache=cache_r)
+        cf_k, _ = apply_frontend(
+            params, rgb, fg, mode="compact", cache=cache_k,
+            project_fn=ops.ip2_project_fn(fg.patch, interpret=True),
+        )
+        np.testing.assert_allclose(
+            np.asarray(cf_k.features), np.asarray(cf_r.features), atol=1e-5)
+
+
+class TestEngineTemporal:
+    @pytest.fixture(scope="class")
+    def served(self):
+        fg = _fcfg(temporal=TemporalSpec(delta_threshold=1e-5))
+        cfg = _vcfg(fg)
+        return cfg, init_vit(KEY, cfg)
+
+    def test_static_scene_fraction_drops_with_zero_recompiles(self, served):
+        cfg, params = served
+        eng = SaccadeEngine(cfg, params, capacity=2, temporal=True)
+        eng.admit("a")
+        frame = SceneStream(image=64).batch(0, 1)[0][0]
+        fracs = []
+        for t in range(5):
+            eng.step({"a": frame})
+            fracs.append(eng.recompute_fraction("a"))
+        assert fracs[0] == 1.0
+        assert fracs[-1] == 0.0 and fracs[-2] == 0.0
+        assert eng.n_traces == 1
+
+    def test_admit_wipes_recycled_slot_cache(self, served):
+        cfg, params = served
+        eng = SaccadeEngine(cfg, params, capacity=1, temporal=True)
+        stream = SceneStream(image=64)
+        frame = stream.batch(0, 1)[0][0]
+        eng.admit("a")
+        for t in range(3):
+            eng.step({"a": frame})
+        slot = eng.slot_of("a")
+        assert bool(eng.state.cache.valid[slot].any())
+        eng.evict("a")
+        eng.admit("b")                       # same slot
+        assert eng.slot_of("b") == slot
+        assert not bool(eng.state.cache.valid[slot].any())
+        assert int(eng.state.cache.n_stale[slot]) == 0
+        # and b's first frame bootstraps from a cold cache: full recompute
+        eng.step({"b": frame})
+        assert eng.recompute_fraction("b") == 1.0
+        assert eng.n_traces == 1
+
+    def test_temporal_engine_matches_single_stream_gated_loop(self, served):
+        """Slot isolation: a stream served by the temporal engine must
+        match a dedicated batch-1 gated single-stream loop frame-for-frame
+        (bootstrap included), whatever the other slots do."""
+        cfg, params = served
+        stream = SceneStream(image=64)
+        eng = SaccadeEngine(cfg, params, capacity=3, temporal=True)
+        eng.admit("x")
+        eng.admit("y")
+
+        from repro.core.temporal import init_feature_cache as init_fc
+        boot = jax.jit(make_bootstrap_indices(cfg))
+        step = jax.jit(make_saccade_step(cfg, temporal=True))
+        idx = {"x": None, "y": None}
+        caches = {s: init_fc(cfg.frontend, (1,)) for s in ("x", "y")}
+        for t in range(3):
+            rgb, _ = stream.batch(t, 2)
+            out = eng.step({"x": rgb[0], "y": rgb[1]})
+            for i, sid in enumerate(("x", "y")):
+                r = jnp.asarray(rgb[i:i + 1])
+                if idx[sid] is None:
+                    idx[sid] = boot(params, r)
+                logits, idx[sid], _, caches[sid] = step(
+                    params, r, idx[sid], caches[sid])
+                np.testing.assert_allclose(
+                    out[sid], np.asarray(logits[0]), atol=1e-5)
+                assert (eng.gaze(sid) == np.asarray(idx[sid][0])).all(), (t, sid)
+
+    def test_recompute_fraction_requires_temporal(self, served):
+        cfg, params = served
+        eng = SaccadeEngine(cfg, params, capacity=1)
+        eng.admit("a")
+        with pytest.raises(RuntimeError, match="temporal"):
+            eng.recompute_fraction("a")
