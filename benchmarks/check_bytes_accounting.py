@@ -1,0 +1,79 @@
+"""Bench-smoke guard: BENCH_throughput.json streamed-bytes rows must be
+MEASURED (ndarray.nbytes of the actual wire payload), never hand-computed
+bit math (DESIGN.md §9).
+
+Two layers of defence:
+
+1. Schema: every bytes-reporting throughput row carries a ``bytes`` record
+   with ``source == "ndarray.nbytes"`` and an integer
+   ``measured_nbytes_per_frame``.
+2. Live re-derivation: the af=0.25 compact-wire figure is recomputed here
+   by actually running the frontend at the bench's operating point and
+   reading ``features.nbytes`` off the emitted array — if someone swaps
+   the bench back to ``k * M * BITS // 8`` constants and the wire format
+   ever drifts (dtype, layout), this comparison breaks loudly.
+
+Run after ``benchmarks/run.py`` (needs both src and the repo root on the
+path, like run.py itself):
+``PYTHONPATH=src:. python benchmarks/check_bytes_accounting.py``.
+"""
+
+import json
+import sys
+
+BYTES_ROWS = (
+    "wire_bytes_compact_af0.25",
+    "frontend_dense_vs_compact_af1",
+    "frontend_dense_vs_compact_af0.5",
+    "frontend_dense_vs_compact_af0.25",
+    "frontend_dense_vs_compact_af0.1",
+    "temporal_demand_static",
+    "temporal_demand_panning",
+    "temporal_demand_full_motion",
+    "temporal_walltime_static_budget_k8",
+)
+
+
+def main(path: str = "BENCH_throughput.json") -> None:
+    with open(path) as f:
+        results = json.load(f)
+    tp = next(v for k, v in results.items() if k.startswith("throughput"))
+    rows = {r["name"]: r for r in tp if "name" in r}
+
+    missing = [n for n in BYTES_ROWS if n not in rows]
+    assert not missing, f"bytes rows missing from the artifact: {missing}"
+    for name in BYTES_ROWS:
+        rec = rows[name].get("bytes")
+        assert isinstance(rec, dict), f"{name}: no bytes record"
+        assert rec.get("source") == "ndarray.nbytes", (
+            f"{name}: bytes not measured from the wire array "
+            f"(source={rec.get('source')!r})"
+        )
+        assert isinstance(rec.get("measured_nbytes_per_frame"), int), name
+
+    # live re-derivation at the bench's compact-sweep operating point —
+    # imported from the bench itself so checker and bench cannot drift
+    import jax
+
+    from benchmarks.bench_throughput import compact_operating_point
+    from repro.core.frontend import apply_frontend, init_frontend_params
+
+    cfg = compact_operating_point()
+    params = init_frontend_params(jax.random.PRNGKey(0), cfg)
+    rgb = jax.random.uniform(
+        jax.random.PRNGKey(1), (1, cfg.image_h, cfg.image_w, 3))
+    cf = apply_frontend(params, rgb, cfg, mode="compact")
+    live = int(cf.features.nbytes)
+    rec = rows["wire_bytes_compact_af0.25"]["bytes"]
+    assert rec["measured_nbytes_per_frame"] == live, (
+        f"artifact says {rec['measured_nbytes_per_frame']} B/frame but the "
+        f"live wire emits {live} B/frame — bytes are not being measured"
+    )
+    drop = rec["float32_nbytes_per_frame"] / rec["measured_nbytes_per_frame"]
+    assert drop >= 3.5, f"measured code-wire drop only {drop:.2f}x vs float32"
+    print(f"bytes accounting OK: {len(BYTES_ROWS)} measured rows, "
+          f"{live} B/frame live == artifact, {drop:.1f}x vs float32")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -8,7 +8,16 @@ bayer models the mosaic + anti-alias optics; power/throughput reproduce
 Table 1 and Fig. 3; qth_attention is the Fig. 4 extension.
 """
 
-from repro.core.adc import ADCSpec, adc_quantize, digital_readout
+from repro.core.adc import (
+    ADCCodes,
+    ADCSpec,
+    adc_quantize,
+    dequantize,
+    digital_codes,
+    digital_readout,
+    encode,
+    readout_scale_zero,
+)
 from repro.core.analog_nl import AnalogNLSpec, analog_nonlinearity
 from repro.core.bayer import antialias, bayer_channel_map, mosaic, strike_columns
 from repro.core.frontend import (
@@ -16,7 +25,10 @@ from repro.core.frontend import (
     FrontendConfig,
     apply_frontend,
     compact_features,
+    dequantize_features,
+    feature_scale_zero,
     init_frontend_params,
+    project_wire,
     sensor_patches,
 )
 from repro.core.power import AreaBudget, EnergyConstants, SensorConfig, data_reduction, power_report
@@ -49,18 +61,22 @@ from repro.core.temporal import (
     FeatureCache,
     TemporalSpec,
     held_features,
+    held_gain,
     init_feature_cache,
     refresh,
     select_stale,
+    take_rows,
 )
 from repro.core.throughput import figure3_sweep, frame_rate, rate_point
 
 __all__ = [
-    "ADCSpec", "adc_quantize", "digital_readout",
+    "ADCCodes", "ADCSpec", "adc_quantize", "dequantize", "digital_codes",
+    "digital_readout", "encode", "readout_scale_zero",
     "AnalogNLSpec", "analog_nonlinearity",
     "antialias", "bayer_channel_map", "mosaic", "strike_columns",
     "CompactFeatures", "FrontendConfig", "apply_frontend", "compact_features",
-    "init_frontend_params", "sensor_patches",
+    "dequantize_features", "feature_scale_zero",
+    "init_frontend_params", "project_wire", "sensor_patches",
     "AreaBudget", "EnergyConstants", "SensorConfig", "data_reduction", "power_report",
     "PatchSpec", "analog_project_frame", "analog_project_patches", "extract_patches",
     "QuantSpec", "pwm_quantize", "quantize_weights", "weight_codes",
@@ -69,7 +85,7 @@ __all__ = [
     "mask_from_indices", "patch_energy", "topk_patch_indices", "topk_patch_mask",
     "SummerSpec", "TAU_LEAK_65NM_S", "capacitor_divider", "charge_share_sum",
     "passive_droop_trace",
-    "FeatureCache", "TemporalSpec", "held_features", "init_feature_cache",
-    "refresh", "select_stale",
+    "FeatureCache", "TemporalSpec", "held_features", "held_gain",
+    "init_feature_cache", "refresh", "select_stale", "take_rows",
     "figure3_sweep", "frame_rate", "rate_point",
 ]

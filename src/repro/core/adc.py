@@ -1,16 +1,32 @@
-"""Edge ADC model (paper §2.1).
+"""Edge ADC model (paper §2.1) and the digital wire format (DESIGN.md §9).
 
 Only the outputs of the selected salient patches (<25 %) are converted; the
-ADC is at the array edge, one (or a few) per column group. The digital side
-subtracts ``V_R - b`` to recover the signed projection plus the learned
-bias b:
+ADC is at the array edge, one (or a few) per column group. What crosses the
+imager boundary is the ADC *code* — an ``ADCSpec.bits``-wide integer — not
+a float: the paper's 10x bandwidth / <30 mW/MP claims are claims about code
+width. This module therefore defines two views of the same conversion:
+
+* **Codes** (:func:`digital_codes`) — the canonical wire format: signed
+  integer codes (int8 for bits <= 8) plus static ``(scale, zero)`` affine
+  metadata derived from the :class:`ADCSpec` and the digital ``V_R - b``
+  subtraction. ``dequantize(codes, scale, zero)`` recovers the readout.
+* **Floats** (:func:`digital_readout`) — the training/simulation view,
+  *defined as* ``dequantize(digital_codes(...))`` plus an STE residual, so
+  the float path is bit-identical to dequantized codes by construction.
+
+The digital side subtracts ``V_R - b`` to recover the signed projection
+plus the learned bias b:
 
     digital_v = ADC(Out_v) - (V_R - b) = Σ(W·P)/N² + b   (up to quantization)
+
+which in code space is the affine map ``digital_v = code * scale + zero``
+with ``scale = lsb`` and ``zero = v_min + (levels//2)*lsb - V_R + b``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -27,15 +43,91 @@ class ADCSpec:
     def levels(self) -> int:
         return 2 ** self.bits
 
+    @property
+    def lsb(self) -> float:
+        return (self.v_max - self.v_min) / (self.levels - 1)
+
+    @property
+    def code_dtype(self):
+        """Smallest signed integer dtype that holds the (centered) codes."""
+        if self.bits <= 8:
+            return jnp.int8
+        if self.bits <= 16:
+            return jnp.int16
+        return jnp.int32
+
+
+class ADCCodes(NamedTuple):
+    """One frame's conversions in wire format: integer codes plus the
+    static affine metadata that dequantizes them. ``codes`` is the only
+    O(k·M) payload; ``scale`` is a scalar and ``zero`` broadcasts with the
+    per-vector bias, so the wire stays at code width."""
+
+    codes: jnp.ndarray   # (..., M) signed integer codes (code_dtype)
+    scale: jnp.ndarray   # () float32 — volts per LSB
+    zero: jnp.ndarray    # (M,) or () float32 — v_min + half·lsb - (V_R - b)
+
+
+def _code_grid(v: jnp.ndarray, spec: ADCSpec) -> jnp.ndarray:
+    """Centered code values as float32 (shared by the jnp path and the
+    Pallas kernel epilogues so the two quantize bit-identically)."""
+    half = spec.levels // 2
+    clipped = jnp.clip(v, spec.v_min, spec.v_max)
+    return jnp.round((clipped - spec.v_min) / spec.lsb) - half
+
+
+def encode(v: jnp.ndarray, spec: ADCSpec = ADCSpec()) -> jnp.ndarray:
+    """Voltage -> signed integer code (no gradients: codes are integers;
+    the STE lives in :func:`digital_readout`'s float view)."""
+    return _code_grid(v, spec).astype(spec.code_dtype)
+
+
+def readout_scale_zero(
+    v_ref: float, bias: jnp.ndarray | float = 0.0, spec: ADCSpec = ADCSpec()
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The (scale, zero) metadata of :func:`digital_codes` for a given
+    reference/bias — static per (ADCSpec, V_R, b); recomputable anywhere
+    without touching the payload."""
+    half = spec.levels // 2
+    scale = jnp.float32(spec.lsb)
+    zero = jnp.float32(spec.v_min + half * spec.lsb - v_ref) + jnp.asarray(
+        bias, jnp.float32
+    )
+    return scale, zero
+
+
+def dequantize(
+    codes: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray
+) -> jnp.ndarray:
+    """codes -> float readout: the ONE affine that is allowed to leave code
+    space (DESIGN.md §9 permits it only at the backend's first matmul)."""
+    return codes.astype(jnp.float32) * scale + zero
+
+
+def digital_codes(
+    out_v: jnp.ndarray,
+    v_ref: float,
+    bias: jnp.ndarray | float = 0.0,
+    spec: ADCSpec = ADCSpec(),
+) -> ADCCodes:
+    """ADC conversion in wire format: codes + (scale, zero) such that
+    ``dequantize(codes, scale, zero) == digital_readout(out_v, ...)``
+    exactly (the float readout is defined as this dequant)."""
+    scale, zero = readout_scale_zero(v_ref, bias, spec)
+    return ADCCodes(encode(out_v, spec), scale, zero)
+
 
 def adc_quantize(v: jnp.ndarray, spec: ADCSpec = ADCSpec()) -> jnp.ndarray:
-    """Uniform mid-rise ADC over [v_min, v_max] with STE gradients."""
-    span = spec.v_max - spec.v_min
-    lsb = span / (spec.levels - 1)
-    clipped = jnp.clip(v, spec.v_min, spec.v_max)
-    q = jnp.round((clipped - spec.v_min) / lsb) * lsb + spec.v_min
+    """Uniform mid-rise ADC over [v_min, v_max] with STE gradients —
+    the voltage-grid view (quantize-then-hold, no V_R - b subtraction),
+    expressed on the same code grid as :func:`encode`."""
+    half = spec.levels // 2
+    q = (_code_grid(v, spec) + half) * spec.lsb + spec.v_min
     if spec.ste:
-        return clipped + jax.lax.stop_gradient(q - clipped)
+        # exact-forward STE: lin - stop_grad(lin) is identically 0.0, so the
+        # value is q bit-for-bit while the gradient is the clip passthrough
+        lin = jnp.clip(v, spec.v_min, spec.v_max)
+        return q + (lin - jax.lax.stop_gradient(lin))
     return q
 
 
@@ -45,5 +137,21 @@ def digital_readout(
     bias: jnp.ndarray | float = 0.0,
     spec: ADCSpec = ADCSpec(),
 ) -> jnp.ndarray:
-    """ADC conversion followed by the digital ``V_R - b`` subtraction."""
-    return adc_quantize(out_v, spec) - (v_ref - bias)
+    """ADC conversion followed by the digital ``V_R - b`` subtraction.
+
+    Defined as ``dequantize(digital_codes(out_v, ...))`` so the float and
+    code paths are bit-identical by construction; ``spec.ste`` adds the
+    straight-through residual (gradient 1 w.r.t. ``out_v`` inside the
+    rails, 1 w.r.t. ``bias``) for the co-design studies.
+    """
+    codes = digital_codes(out_v, v_ref, bias, spec)
+    deq = dequantize(*codes)
+    if spec.ste:
+        # exact-forward STE (value is deq bit-for-bit — the wire contract
+        # dequantize(digital_codes(v)) == digital_readout(v) is exact):
+        # lin - stop_grad(lin) contributes 0.0 to the value and the
+        # straight-through gradient (clip passthrough w.r.t. out_v; the
+        # bias gradient arrives through ``zero`` inside deq).
+        lin = jnp.clip(out_v, spec.v_min, spec.v_max)
+        return deq + (lin - jax.lax.stop_gradient(lin))
+    return deq

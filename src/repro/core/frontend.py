@@ -27,9 +27,19 @@ choose each):
   of the paper's 10x bandwidth / <30 mW/MP claims. Returns static-shape
   (..., k, M) features plus the patch indices.
 
-Both paths are differentiable (STE through the quantizers; the compact
-gather is a differentiable take), enabling the co-design studies of §1 and
-§2.1.3 on either dataflow.
+Compact-mode output on the analog path is the digital WIRE FORMAT by
+default (DESIGN.md §9): int8 ADC codes plus static (scale, zero) dequant
+metadata — what the hardware actually streams, 4x fewer bytes than
+float32 — dequantized in exactly one place, the backend's first matmul
+(:func:`dequantize_features`). ``wire="float"`` selects the
+bit-identical STE float view instead. The float simulation
+(``analog=False``) has no edge ADC and therefore no code wire: its
+compact payload resolves to the (unquantized) float view.
+
+Both the dense path and the float-wire compact path are differentiable
+(STE through the quantizers; the compact gather is a differentiable
+take), enabling the co-design studies of §1 and §2.1.3 on either
+dataflow; integer codes carry no gradients, so training uses those views.
 """
 
 from __future__ import annotations
@@ -74,23 +84,51 @@ class FrontendConfig:
 
 
 class CompactFeatures(NamedTuple):
-    """The bandwidth-true frontend output: only active patches exist.
+    """The bandwidth-true frontend output: only active patches exist, in
+    the digital wire format (DESIGN.md §9).
 
-    ``features[..., i, :]`` is the ADC-converted projection of patch
-    ``indices[..., i]``; ``valid[..., i]`` is False only when fewer than k
-    patches were active and slot i is a repeated filler (never the case
-    when selection comes from the exactly-k index-first API).
+    ``features[..., i, :]`` is the ADC conversion of patch
+    ``indices[..., i]`` — by default the raw int8 ADC *codes* (exactly
+    what the hardware streams off-sensor; ``features.nbytes`` IS the
+    per-frame wire traffic), or the float32 STE readout under the
+    ``wire="float"`` training/diagnostic path. ``valid[..., i]`` is False
+    only when fewer than k patches were active and slot i is a repeated
+    filler (never the case when selection comes from the exactly-k
+    index-first API).
 
-    ``energy`` is the in-pixel patch-energy proxy over the FULL grid — the
-    photodiodes integrate light regardless of selection, so this signal is
-    free; the saccade loop consumes it from here instead of re-running
+    ``scale``/``zero`` are the static affine dequant metadata (ADC LSB and
+    ``v_min + half·lsb - V_R + bias``); ``gain`` is the per-token
+    digital-side multiplier (valid mask × held-charge droop ``d^age``;
+    identically 1.0 on fresh valid conversions). The ONE place these may
+    be folded into the payload is :func:`dequantize_features` — the
+    backend's first matmul (DESIGN.md §9).
+
+    ``energy`` is the in-pixel patch-energy proxy over the FULL grid — an
+    analog-domain signal (the photodiodes integrate light regardless of
+    selection, so it is free) that never crosses the feature wire; the
+    saccade loop consumes it from here instead of re-running
     :func:`sensor_patches` (DESIGN.md §5).
     """
 
-    features: jnp.ndarray   # (..., k, M)
+    features: jnp.ndarray   # (..., k, M) int8 ADC codes (or f32, wire="float")
     indices: jnp.ndarray    # (..., k) int32 patch indices
     valid: jnp.ndarray      # (..., k) bool
-    energy: jnp.ndarray     # (..., P) float32 patch-energy proxy
+    energy: jnp.ndarray     # (..., P) float32 patch-energy proxy (analog domain)
+    scale: jnp.ndarray      # () float32 — ADC LSB (volts per code)
+    zero: jnp.ndarray       # (M,) float32 — dequant offset incl. V_R - b
+    gain: jnp.ndarray       # (..., k) float32 — valid × droop d^age
+
+
+def dequantize_features(cf: CompactFeatures) -> jnp.ndarray:
+    """The one permitted dequant site (DESIGN.md §9): codes -> float32
+    readout via the static affine, times the per-token ``gain`` (valid
+    mask and held-charge droop). Float-wire payloads skip the affine —
+    on the analog path they are already the (bit-identical) dequantized
+    readout, so both wires produce the same floats here."""
+    feats = cf.features
+    if not jnp.issubdtype(feats.dtype, jnp.floating):
+        feats = adc_mod.dequantize(feats, cf.scale, cf.zero)
+    return feats * cf.gain[..., None]
 
 
 def init_frontend_params(key: jax.Array, cfg: FrontendConfig) -> dict:
@@ -153,13 +191,66 @@ def project_readout(
 ) -> jnp.ndarray:
     """Analog projection + edge ADC (or the float simulation) over whatever
     set of patches it is handed — the full grid (dense) or the gathered
-    active set (compact)."""
+    active set (compact). Float view: ``digital_readout`` is the STE
+    dequant of the ADC codes, bit-identical to the code wire by
+    construction (DESIGN.md §9)."""
+    if project_fn is not None and getattr(project_fn, "emits_codes", False):
+        raise ValueError(
+            "project_fn emits wire-format codes (ops.ip2_codes_fn) but this "
+            "is a float path (dense mode or wire='float'): its int8 output "
+            "is not analog voltage. Use ops.ip2_project_fn here, or "
+            "mode='compact' with wire='codes'."
+        )
     if cfg.analog:
         fn = project_fn or proj_mod.analog_project_patches
         out_v = fn(patches, weights, cfg.patch)                      # (..., n, M)
         return adc_mod.digital_readout(out_v, cfg.patch.summer.v_ref, params["bias"], cfg.adc)
     n_in = patches.shape[-1]
     return jnp.einsum("...pi,vi->...pv", patches, weights) / n_in + params["bias"]
+
+
+def feature_scale_zero(
+    params: dict, cfg: FrontendConfig
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The static (scale, zero) dequant metadata of this frontend's wire
+    format — a function of (ADCSpec, V_R, bias) only, never of the frame."""
+    return adc_mod.readout_scale_zero(
+        cfg.patch.summer.v_ref, params["bias"], cfg.adc
+    )
+
+
+def project_wire(
+    patches: jnp.ndarray,
+    weights: jnp.ndarray,
+    params: dict,
+    cfg: FrontendConfig,
+    project_fn: ProjectFn | None,
+    wire: str,
+) -> jnp.ndarray:
+    """Project a gathered patch set onto the requested wire format.
+
+    ``wire="codes"`` (analog only — the float simulation has no ADC, so
+    there are no codes to emit): int8 ADC codes — from the kernel's fused
+    epilogue when ``project_fn`` advertises ``emits_codes`` (the
+    conversion happens exactly once, at the array edge, inside the
+    kernel), else by encoding the analog output here.
+
+    ``wire="float"``: the STE dequant view (differentiable; on the analog
+    path, bit-identical values to dequantizing the codes).
+    """
+    if wire == "float":
+        return project_readout(patches, weights, params, cfg, project_fn)
+    if not cfg.analog:
+        raise ValueError(
+            "wire='codes' requires analog=True: the float simulation has "
+            "no edge ADC, so there is no code wire — use wire='float' "
+            "(the default resolution for analog=False)"
+        )
+    if project_fn is not None and getattr(project_fn, "emits_codes", False):
+        return project_fn(patches, weights, cfg.patch)
+    fn = project_fn or proj_mod.analog_project_patches
+    out_v = fn(patches, weights, cfg.patch)                          # (..., n, M)
+    return adc_mod.encode(out_v, cfg.adc)
 
 
 def apply_frontend(
@@ -172,17 +263,30 @@ def apply_frontend(
     indices: jnp.ndarray | None = None,
     precomputed: tuple[jnp.ndarray, jnp.ndarray] | None = None,
     cache: temporal_mod.FeatureCache | None = None,
+    wire: str | None = None,
 ):
     """rgb (..., H, W, 3) in [0,1] -> frontend features.
 
     Selection inputs (the backend's saccadic prediction for this frame):
     ``indices`` (..., k) takes precedence, then ``mask`` (..., P); if both
     are None a patch-energy top-k stand-in is used. ``project_fn`` lets the
-    Pallas kernel replace the reference einsum (same signature/semantics).
+    Pallas kernel replace the reference einsum (same signature/semantics;
+    a kernel adapter advertising ``emits_codes`` — ``ops.ip2_codes_fn`` —
+    emits the wire format straight from its fused ADC epilogue).
     ``precomputed`` is an optional ``(patches, weights)`` pair from an
     earlier :func:`sensor_patches` call on the same frame, so callers that
     already needed the CDS patch voltages (e.g. the serving engine's
     in-step bootstrap) don't pay for the optics/mosaic stage twice.
+
+    ``wire`` (compact mode only) selects the payload format of
+    :class:`CompactFeatures` (DESIGN.md §9): ``"codes"`` — int8 ADC
+    codes, what the hardware streams, 4x fewer bytes; ``"float"`` — the
+    STE dequant view, bit-identical values after
+    :func:`dequantize_features`, differentiable for compact-path
+    co-design. ``None`` (default) resolves per config: ``"codes"`` when
+    ``cfg.analog`` (there is a real edge ADC) and ``"float"`` for the
+    float simulation (``analog=False`` — no ADC, no code wire; requesting
+    ``"codes"`` there raises).
 
     ``cache`` (compact mode only) enables the temporal delta gate
     (DESIGN.md §6): of the k selected patches, only the stale subset —
@@ -190,10 +294,13 @@ def apply_frontend(
     recompute, never computed, or drooped past the LSB budget — is
     gathered/projected/converted (exactly ``cfg.temporal`` budget-j slots,
     static shape); the rest are served from the held charge modelled by
-    the cache. The return value becomes ``(CompactFeatures, FeatureCache)``.
+    the cache. The cache dtype must match the wire (code caches for
+    ``wire="codes"``). The return value becomes
+    ``(CompactFeatures, FeatureCache)``.
 
     Returns (mode="dense"):   (features (..., P, M), mask (..., P)) with
-      deselected patches zeroed — compute scales with P.
+      deselected patches zeroed — compute scales with P. Always float
+      (the STE training path); ``wire`` does not apply.
     Returns (mode="compact"): :class:`CompactFeatures` with (..., k, M)
       features — compute scales with k (select -> gather -> project);
       with ``cache`` given, ``(CompactFeatures, FeatureCache)`` and
@@ -201,6 +308,10 @@ def apply_frontend(
     """
     if mode not in ("dense", "compact"):
         raise ValueError(f"mode must be 'dense' or 'compact', got {mode!r}")
+    if wire is None:
+        wire = "codes" if cfg.analog else "float"
+    if wire not in ("codes", "float"):
+        raise ValueError(f"wire must be 'codes' or 'float', got {wire!r}")
     if cache is not None and mode != "compact":
         raise ValueError(
             "the temporal cache only applies to mode='compact'; dense "
@@ -236,26 +347,36 @@ def apply_frontend(
         idx = sal_mod.topk_patch_indices(energy, k)
         valid = jnp.ones(idx.shape, bool)
 
+    scale, zero = feature_scale_zero(params, cfg)
     if cache is None:
         active = sal_mod.gather_patches(patches, idx)                # (..., k, N)
-        feats = project_readout(active, weights, params, cfg, project_fn)
-        feats = feats * valid[..., None].astype(feats.dtype)
-        return CompactFeatures(feats, idx, valid, energy)
+        payload = project_wire(active, weights, params, cfg, project_fn, wire)
+        gain = valid.astype(jnp.float32)
+        return CompactFeatures(payload, idx, valid, energy, scale, zero, gain)
 
     # temporal delta gate: recompute only the stale subset of the selection,
-    # scatter-merge into the held-charge cache, serve the selection from it.
+    # scatter-merge into the held-charge cache, serve the selection from it
+    # (raw payload + droop/charge gain; dequantize_features folds them).
+    if jnp.issubdtype(cache.features.dtype, jnp.floating) != (wire == "float"):
+        raise ValueError(
+            f"cache dtype {cache.features.dtype} does not match wire={wire!r}; "
+            "build it with init_feature_cache(cfg, ..., dtype=...) to match"
+        )
     tspec = cfg.temporal
     stale_idx, needed, n_stale = temporal_mod.select_stale(
         energy, idx, cache, tspec, cfg.patch.summer, cfg.adc
     )
     stale_patches = sal_mod.gather_patches(patches, stale_idx)       # (..., j, N)
-    new_feats = project_readout(stale_patches, weights, params, cfg, project_fn)
+    new_feats = project_wire(stale_patches, weights, params, cfg, project_fn, wire)
     cache = temporal_mod.refresh(
         cache, stale_idx, needed, new_feats, energy, n_stale
     )
-    feats = temporal_mod.held_features(cache, idx, cfg.patch.summer)  # (..., k, M)
-    feats = feats * valid[..., None].astype(feats.dtype)
-    return CompactFeatures(feats, idx, valid, energy), cache
+    payload = temporal_mod.take_rows(cache.features, idx)            # (..., k, M)
+    gain = (
+        temporal_mod.held_gain(cache, idx, cfg.patch.summer)
+        * valid.astype(jnp.float32)
+    )
+    return CompactFeatures(payload, idx, valid, energy, scale, zero, gain), cache
 
 
 def compact_features(

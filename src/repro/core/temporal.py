@@ -43,10 +43,15 @@ Three pieces:
   accumulated droop stays under that many ADC LSBs; older entries are
   forced stale regardless of the energy delta.
 
-Everything is differentiable (gather/scatter transposes; the projection
-keeps its STE quantizers), but dense *training* must bypass the cache —
-gradients through a frame-t feature would otherwise flow into frame t-1's
-parameters (see DESIGN.md §6 for the contract).
+The cache stores the WIRE FORMAT (int8 ADC codes, DESIGN.md §9) by
+default — 4x smaller held state, aged integer-safely at serve time via
+:func:`held_gain` on the dequantized value. The float-wire variant
+(``init_feature_cache(..., dtype=jnp.float32)``) keeps the gather/scatter
+chain differentiable end to end (the projection keeps its STE
+quantizers) for co-design diagnostics; integer codes carry no gradients.
+Either way dense *training* must bypass the cache — gradients through a
+frame-t feature would otherwise flow into frame t-1's parameters (see
+DESIGN.md §6 for the contract).
 """
 
 from __future__ import annotations
@@ -66,18 +71,28 @@ class FeatureCache(NamedTuple):
     """Held per-patch features over the FULL grid (the summing caps exist
     for every patch; only *recomputation* is gated).
 
-    Droop is applied *lazily*: ``features`` stores the value as computed
-    (the charge at refresh time) and :func:`held_features` multiplies by
-    ``droop_factor ** age`` at serve time — an O(k·M) epilogue on the
-    gathered selection instead of an O(P·M) decay pass over the whole
-    cache every frame (which would cost as much as the projection the
-    gate is there to avoid).
+    ``features`` is stored in the WIRE FORMAT (DESIGN.md §9): int8 ADC
+    codes by default — the digital side can only ever have cached what
+    crossed the imager boundary, and that is codes, so the held state is
+    4x smaller than a float32 cache. The ``(scale, zero)`` metadata needed
+    to dequantize is static (ADCSpec + V_R + bias) and is NOT stored per
+    entry; the one permitted dequant site supplies it. A float32 cache
+    (``init_feature_cache(..., dtype=jnp.float32)``) remains available
+    for the differentiable float-wire path (co-design diagnostics).
+
+    Droop is applied *lazily* and integer-safely: ``features`` stores the
+    code as converted (the charge at refresh time, never mutated by
+    aging — no cumulative integer rounding) and the serve-time epilogue
+    multiplies the *dequantized* value by ``droop_factor ** age`` — an
+    O(k·M) epilogue on the gathered selection instead of an O(P·M) decay
+    pass over the whole cache every frame (which would cost as much as
+    the projection the gate is there to avoid).
 
     Leading dims are arbitrary batch/slot dims, matching the frames fed
     through the frontend.
     """
 
-    features: jnp.ndarray   # (..., P, M) f32 — feature values at last recompute
+    features: jnp.ndarray   # (..., P, M) int8 ADC codes (or f32, float wire)
     energy: jnp.ndarray     # (..., P) f32 — CDS energy at last recompute (delta reference)
     age: jnp.ndarray        # (..., P) int32 — frames since last recompute
     valid: jnp.ndarray      # (..., P) bool — entry has ever been computed
@@ -116,16 +131,17 @@ class TemporalSpec:
         self, summer: sc.SummerSpec, adc: adc_mod.ADCSpec
     ) -> int:
         """Largest number of frame holds whose accumulated droop stays
-        within ``droop_lsb_budget`` LSBs for a worst-case (full-scale)
-        held signal: the signal retains d^h after h holds, so the error
-        is v_fs * (1 - d^h) <= budget * lsb. 0 means even one hold
-        violates the budget — every entry is stale every frame
+        within ``droop_lsb_budget`` LSBs, checked in the cache's own
+        units (LSB counts — the cache stores ADC codes, DESIGN.md §9): a
+        worst-case held entry sits at ``code_fs = v_fs / lsb`` LSBs of
+        full scale and retains d^h after h holds, so the served error is
+        ``code_fs * (1 - d^h) <= droop_lsb_budget`` LSBs. 0 means even
+        one hold violates the budget — every entry is stale every frame
         (``age >= 0`` always holds) and nothing is ever served held.
         """
         d = summer.droop_factor()
-        lsb = (adc.v_max - adc.v_min) / (adc.levels - 1)
-        v_fs = max(abs(adc.v_min), abs(adc.v_max))
-        tol = self.droop_lsb_budget * lsb / v_fs
+        code_fs = max(abs(adc.v_min), abs(adc.v_max)) / adc.lsb
+        tol = self.droop_lsb_budget / code_fs
         if d >= 1.0 or tol >= 1.0:
             return 2**31 - 2            # no droop (ideal summer): hold forever
         if tol <= 0.0:
@@ -133,14 +149,20 @@ class TemporalSpec:
         return int(math.floor(math.log(1.0 - tol) / math.log(d)))
 
 
-def init_feature_cache(cfg, batch_shape: tuple[int, ...] = ()) -> FeatureCache:
-    """Empty (all-invalid) cache for ``cfg`` (anything with ``n_patches``
-    and ``patch.n_vectors`` — a FrontendConfig) over ``batch_shape``
-    leading dims."""
+def init_feature_cache(
+    cfg, batch_shape: tuple[int, ...] = (), dtype=None
+) -> FeatureCache:
+    """Empty (all-invalid) cache for ``cfg`` (anything with ``n_patches``,
+    ``patch.n_vectors`` and ``adc`` — a FrontendConfig) over
+    ``batch_shape`` leading dims. ``dtype`` defaults to the ADC code
+    dtype (the wire format); pass ``jnp.float32`` only for the
+    differentiable float-wire path."""
     p = cfg.n_patches
     m = cfg.patch.n_vectors
+    if dtype is None:
+        dtype = cfg.adc.code_dtype
     return FeatureCache(
-        features=jnp.zeros((*batch_shape, p, m), jnp.float32),
+        features=jnp.zeros((*batch_shape, p, m), dtype),
         energy=jnp.zeros((*batch_shape, p), jnp.float32),
         age=jnp.zeros((*batch_shape, p), jnp.int32),
         valid=jnp.zeros((*batch_shape, p), bool),
@@ -148,11 +170,14 @@ def init_feature_cache(cfg, batch_shape: tuple[int, ...] = ()) -> FeatureCache:
     )
 
 
-def _take(arr: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+def take_rows(arr: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     """Batched row gather: arr (..., P[, M]) at idx (..., k)."""
     if arr.ndim == idx.ndim:                      # (..., P)
         return jnp.take_along_axis(arr, idx, axis=-1)
     return jnp.take_along_axis(arr, idx[..., None], axis=-2)
+
+
+_take = take_rows
 
 
 def _scatter_rows(dst: jnp.ndarray, idx: jnp.ndarray, src: jnp.ndarray) -> jnp.ndarray:
@@ -276,14 +301,37 @@ def refresh(
     return FeatureCache(feats, e_ref, age, valid, n_stale)
 
 
-def held_features(
+def held_gain(
     cache: FeatureCache, indices: jnp.ndarray, summer: sc.SummerSpec
 ) -> jnp.ndarray:
-    """Serve the selection from held charge: gather the (..., k) selected
-    rows and apply each entry's accumulated droop, ``value * d^age`` —
-    the charge sat on the summing caps for ``age`` holds. Entries at age
-    0 (refreshed this frame) are served bit-exactly (d^0 == 1)."""
-    feats = _take(cache.features, indices)                  # (..., k, M)
+    """Per-served-row droop/charge multiplier for the (..., k) selection:
+    ``d^age`` for held entries (d^0 == 1 on entries refreshed this frame,
+    so fresh conversions serve bit-exactly) and 0 on never-computed
+    entries (an uncharged summing cap serves zero). Applied to the
+    *dequantized* value at the serve epilogue — the stored codes are never
+    aged in place (integer-safe: no cumulative rounding)."""
     age = _take(cache.age, indices).astype(jnp.float32)
     d = jnp.float32(summer.droop_factor())
-    return feats * jnp.power(d, age)[..., None]
+    return jnp.power(d, age) * _take(cache.valid, indices).astype(jnp.float32)
+
+
+def held_features(
+    cache: FeatureCache,
+    indices: jnp.ndarray,
+    summer: sc.SummerSpec,
+    scale: jnp.ndarray | None = None,
+    zero: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Serve the selection from held charge as floats: gather the
+    (..., k) selected rows, dequantize (code caches need the static
+    ``(scale, zero)`` metadata; float caches ignore it) and apply each
+    entry's accumulated droop via :func:`held_gain`."""
+    feats = _take(cache.features, indices)                  # (..., k, M)
+    if not jnp.issubdtype(feats.dtype, jnp.floating):
+        if scale is None or zero is None:
+            raise ValueError(
+                "code-format cache: held_features needs the (scale, zero) "
+                "metadata from repro.core.adc.readout_scale_zero"
+            )
+        feats = adc_mod.dequantize(feats, scale, zero)
+    return feats * held_gain(cache, indices, summer)[..., None]

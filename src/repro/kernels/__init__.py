@@ -1,16 +1,26 @@
 """Pallas TPU kernels for the IP2 compute hot-spots.
 
-ip2_project — the analog patch-projection array's digital twin (fused PWM
-quantize + MXU GEMM + charge-share/ADC epilogue); quant_matmul — w8a8
-backend projections. ops.py = jit'd wrappers (padding, CPU interpret
-fallback); ref.py = pure-jnp oracles every kernel is tested against.
+ip2_project / ip2_project_sparse — the analog patch-projection array's
+digital twin (fused PWM quantize + MXU GEMM + charge-share/ADC epilogue;
+dense grid vs scalar-prefetch active-row gather), emitting float readout
+or the int8 ADC-code wire format (DESIGN.md §9); quant_matmul /
+quant_matmul_pre — w8a8 backend projections (host-quantized floats vs
+pre-quantized codes, e.g. straight from the edge ADC). ops.py = jit'd
+wrappers (padding, CPU interpret fallback); ref.py = pure-jnp oracles
+every kernel is tested against.
 """
 
 from repro.kernels.ops import (
+    ip2_codes_fn,
     ip2_project,
     ip2_project_fn,
+    ip2_project_sparse,
     quant_matmul,
+    quant_matmul_pre,
     quantize_weights_int8,
 )
 
-__all__ = ["ip2_project", "ip2_project_fn", "quant_matmul", "quantize_weights_int8"]
+__all__ = [
+    "ip2_codes_fn", "ip2_project", "ip2_project_fn", "ip2_project_sparse",
+    "quant_matmul", "quant_matmul_pre", "quantize_weights_int8",
+]

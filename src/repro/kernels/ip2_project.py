@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import adc as adc_mod
+
 # renamed across jax releases: CompilerParams (new) vs TPUCompilerParams (old)
 COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
@@ -49,6 +51,18 @@ class IP2KernelParams:
     adc_vmin: float = -1.0
     adc_vmax: float = 1.0
     adc_enable: bool = True
+    adc_out_codes: bool = False  # emit int codes (the wire format, DESIGN.md §9)
+
+    def adc_spec(self) -> adc_mod.ADCSpec:
+        return adc_mod.ADCSpec(
+            bits=self.adc_bits, v_min=self.adc_vmin, v_max=self.adc_vmax
+        )
+
+    @property
+    def out_dtype(self):
+        if self.adc_enable and self.adc_out_codes:
+            return self.adc_spec().code_dtype
+        return jnp.float32
 
 
 def pwm_quantize_tile(x: jnp.ndarray, p: IP2KernelParams) -> jnp.ndarray:
@@ -60,17 +74,28 @@ def pwm_quantize_tile(x: jnp.ndarray, p: IP2KernelParams) -> jnp.ndarray:
 
 def analog_epilogue_tile(acc: jnp.ndarray, b: jnp.ndarray, p: IP2KernelParams) -> jnp.ndarray:
     """The fused analog readout: charge-share /N2 + droop + VR, the 2T
-    nonlinearity, edge-ADC quantization, and the VR-b digital subtraction.
-    Shared by the dense and sparse projection kernels."""
+    nonlinearity, and the edge ADC. Shared by the dense and sparse
+    projection kernels.
+
+    With ``adc_out_codes`` the tile leaves in wire format — centered
+    integer code values (cast to the code dtype by the caller); the bias
+    is NOT applied (it lives in the ``zero`` metadata of
+    :func:`repro.core.adc.readout_scale_zero`). Otherwise the dequantized
+    float readout including the VR-b digital subtraction is produced, on
+    exactly the grid of :func:`repro.core.adc.digital_readout` so kernel
+    and jnp paths stay bit-identical.
+    """
     out = acc * (p.droop / p.n2) + p.v_ref
     if p.nl_kind == "relu":
         out = jnp.clip(out, 0.0, p.v_sat)
-    if p.adc_enable:
-        levels = 2 ** p.adc_bits
-        lsb = (p.adc_vmax - p.adc_vmin) / (levels - 1)
-        clipped = jnp.clip(out, p.adc_vmin, p.adc_vmax)
-        out = jnp.round((clipped - p.adc_vmin) / lsb) * lsb + p.adc_vmin
-    return out - (p.v_ref - b)
+    if not p.adc_enable:
+        return out - (p.v_ref - b)
+    spec = p.adc_spec()
+    code = adc_mod._code_grid(out, spec)           # f32 centered codes
+    if p.adc_out_codes:
+        return code
+    scale, zero = adc_mod.readout_scale_zero(p.v_ref, b, spec)
+    return adc_mod.dequantize(code, scale, zero)
 
 
 def _ip2_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, p: IP2KernelParams, k_steps: int):
@@ -121,7 +146,7 @@ def ip2_project_pallas(
             pl.BlockSpec((block_m,), lambda i, j, k: (j,)),
         ],
         out_specs=pl.BlockSpec((block_p, block_m), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((P, M), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((P, M), params.out_dtype),
         scratch_shapes=[pltpu.VMEM((block_p, block_m), jnp.float32)],
         compiler_params=COMPILER_PARAMS_CLS(
             dimension_semantics=("parallel", "parallel", "arbitrary")

@@ -5,6 +5,12 @@ pre-quantization (the DAC programming step), and CPU fallback:
 on non-TPU backends the wrappers run the kernels in interpret mode when
 ``interpret=None`` (auto), so the whole framework is runnable here while
 the lowered TPU path keeps the real kernels.
+
+Wire format (DESIGN.md §9): both projection wrappers accept
+``codes=True`` (requires ``adc``) to emit the edge-ADC's integer codes
+directly from the fused epilogue — the int8 payload the hardware streams —
+instead of dequantized float32. The matching ``(scale, zero)`` metadata is
+static, from :func:`repro.core.adc.readout_scale_zero`.
 """
 
 from __future__ import annotations
@@ -38,7 +44,11 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0) -> jnp.ndarray:
     return jnp.pad(x, widths, constant_values=value)
 
 
-def kernel_params_from_spec(spec: proj_mod.PatchSpec, adc=None) -> IP2KernelParams:
+def kernel_params_from_spec(
+    spec: proj_mod.PatchSpec, adc=None, codes: bool = False
+) -> IP2KernelParams:
+    if codes and adc is None:
+        raise ValueError("codes=True requires an ADCSpec (the codes ARE the ADC output)")
     return IP2KernelParams(
         n2=spec.pixels_per_patch,
         pwm_levels=spec.quant.pwm_levels,
@@ -50,6 +60,7 @@ def kernel_params_from_spec(spec: proj_mod.PatchSpec, adc=None) -> IP2KernelPara
         adc_vmin=adc.v_min if adc is not None else -1.0,
         adc_vmax=adc.v_max if adc is not None else 1.0,
         adc_enable=adc is not None,
+        adc_out_codes=codes,
     )
 
 
@@ -59,13 +70,16 @@ def ip2_project(
     spec: proj_mod.PatchSpec,
     adc=None,
     bias: jnp.ndarray | None = None,
+    codes: bool = False,
     block_p: int = 128,
     block_m: int = 128,
     block_k: int = 256,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Kernel-backed equivalent of core.projection.analog_project_patches
-    (+ fused ADC readout when ``adc`` is given). Returns (..., P, M)."""
+    (+ fused ADC readout when ``adc`` is given). Returns (..., P, M) —
+    float32 readout, or the int code payload when ``codes=True`` (the bias
+    then lives in the ``zero`` metadata, not the payload)."""
     m, n2 = weights.shape
     lead = patches.shape[:-1]
     flat = patches.reshape(-1, n2)
@@ -83,7 +97,7 @@ def ip2_project(
     w_pad = _pad_to(_pad_to(w_t.astype(jnp.float32), 0, block_k), 1, block_m)
     b_pad = _pad_to(b, 0, block_m)
 
-    params = kernel_params_from_spec(spec, adc)
+    params = kernel_params_from_spec(spec, adc, codes)
     out = ip2_project_pallas(
         k_in, w_pad, b_pad, params,
         block_p=block_p, block_m=block_m, block_k=block_k,
@@ -105,6 +119,20 @@ def ip2_project_fn(spec: proj_mod.PatchSpec, **kw):
     return fn
 
 
+def ip2_codes_fn(spec: proj_mod.PatchSpec, adc, **kw):
+    """Adapter matching core.frontend.ProjectFn whose output is the wire
+    format: int codes straight from the kernel's fused ADC epilogue
+    (DESIGN.md §9). The frontend detects ``emits_codes`` and skips its own
+    jnp re-quantization — the conversion happens exactly once, at the
+    array edge, inside the kernel."""
+
+    def fn(patches, weights, _spec):
+        return ip2_project(patches, weights, _spec, adc=adc, codes=True, **kw)
+
+    fn.emits_codes = True
+    return fn
+
+
 def ip2_project_sparse(
     patches: jnp.ndarray,          # (..., P, N2) dense patch grid in [0,1]
     weights: jnp.ndarray,          # (M, N2) float (pre-DAC)
@@ -112,15 +140,23 @@ def ip2_project_sparse(
     spec: proj_mod.PatchSpec,
     adc=None,
     bias: jnp.ndarray | None = None,
+    codes: bool = False,
+    block_r: int | None = None,
     block_m: int = 128,
     block_k: int = 256,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Compact-first projection: compute features for ONLY the ``indices``
     rows of the dense patch grid (+ fused ADC readout when ``adc`` is
-    given). The gather happens inside the kernel via scalar-prefetched
-    index_maps (DESIGN.md §3.2), so deselected patches cost no FLOPs and no
-    VMEM traffic. Returns (..., k, M) in the order of ``indices``.
+    given; int code payload when ``codes=True``). The gather happens inside
+    the kernel via scalar-prefetched index_maps (DESIGN.md §3.2), so
+    deselected patches cost no FLOPs and no VMEM traffic. Returns
+    (..., k, M) in the order of ``indices``.
+
+    ``block_r`` rows are batched per grid step (arbitrary, non-contiguous
+    rows — selection stays patch-granular); ``None`` picks the
+    sublane-aligned row count, mirroring ``ip2_project``'s ``block_p``
+    clamp, so multi-row batches don't serialize one matmul per row.
     """
     m, n2 = weights.shape
     lead = patches.shape[:-2]
@@ -131,10 +167,18 @@ def ip2_project_sparse(
 
     flat_p = patches.reshape(-1, n2).astype(jnp.float32)   # (B*P, N2)
     batch = flat_p.shape[0] // n_patches
-    # fold the batch into the row index: bank_idx addresses (B*P) dense rows
+    # fold the batch into the row index: row_idx addresses (B*P) dense rows
     offsets = jnp.arange(batch, dtype=jnp.int32) * n_patches
     flat_idx = (indices.reshape(batch, k).astype(jnp.int32) + offsets[:, None]).reshape(-1)
     flat_idx = jnp.clip(flat_idx, 0, flat_p.shape[0] - 1)
+
+    n_rows = flat_idx.shape[0]
+    if block_r is None:
+        block_r = 8                       # sublane-aligned default
+    block_r = max(1, min(block_r, n_rows))
+    # pad the row table to a bank multiple with clipped duplicates (their
+    # output rows are computed and discarded by the slice below)
+    flat_idx = _pad_to(flat_idx, 0, block_r, value=0)
 
     w_q, _ = pwm_mod.quantize_weights(weights, spec.quant)  # DAC programming
     b = jnp.zeros((m,), jnp.float32) if bias is None else bias.astype(jnp.float32)
@@ -143,13 +187,49 @@ def ip2_project_sparse(
     w_pad = _pad_to(_pad_to(w_q.T.astype(jnp.float32), 0, block_k), 1, block_m)
     b_pad = _pad_to(b, 0, block_m)
 
-    params = kernel_params_from_spec(spec, adc)
+    params = kernel_params_from_spec(spec, adc, codes)
     out = ip2_project_sparse_pallas(
         flat_idx, k_in, w_pad, b_pad, params,
-        block_r=1, block_m=block_m, block_k=block_k,
+        block_r=block_r, block_m=block_m, block_k=block_k,
         interpret=_auto_interpret(interpret),
     )
-    return out[:, :m].reshape(*lead, k, m)
+    return out[:n_rows, :m].reshape(*lead, k, m)
+
+
+def quant_matmul_pre(
+    a8: jnp.ndarray,               # (..., K) int8 pre-quantized activations
+    s_a: jnp.ndarray,              # (...,) float32 per-row scales
+    w8: jnp.ndarray,               # (K, M) int8 codes
+    s_w: jnp.ndarray,              # (M,) scales
+    out_dtype=jnp.float32,
+    block_p: int = 128,
+    block_m: int = 128,
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """y = (a8 @ w8) * s_a * s_w for ALREADY-quantized activations.
+
+    The ADC-code consumption entry (DESIGN.md §9): edge-ADC codes are the
+    activation quantization — feeding them here incurs no second rounding.
+    ``s_a`` broadcasts against the row dims of ``a8`` (a scalar works for
+    the ADC's single static LSB scale)."""
+    k, m = w8.shape
+    lead = a8.shape[:-1]
+    flat = a8.reshape(-1, k)
+    s_flat = jnp.broadcast_to(jnp.asarray(s_a, jnp.float32), lead).reshape(-1)
+
+    a_pad = _pad_to(_pad_to(flat, 0, block_p), 1, block_k)
+    sa_pad = _pad_to(s_flat, 0, block_p)
+    w_pad = _pad_to(_pad_to(w8, 0, block_k), 1, block_m)
+    sw_pad = _pad_to(s_w.astype(jnp.float32), 0, block_m)
+
+    out = quant_matmul_pallas(
+        a_pad, sa_pad, w_pad, sw_pad,
+        block_p=block_p, block_m=block_m, block_k=block_k,
+        out_dtype=jnp.float32, interpret=_auto_interpret(interpret),
+    )
+    out = out[: flat.shape[0], :m].astype(out_dtype)
+    return out.reshape(*lead, m)
 
 
 def quant_matmul(
@@ -162,25 +242,20 @@ def quant_matmul(
     block_k: int = 256,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """y = a @ dequant(w8) with in-kernel per-row int8 activation quant."""
+    """y = a @ dequant(w8): quantizes ``a`` per-row to int8 on the host
+    (``ref.quantize_activations_ref``) and defers to
+    :func:`quant_matmul_pre`. Activations that are already int8 codes
+    (e.g. edge-ADC output) should call ``quant_matmul_pre`` directly."""
     out_dtype = out_dtype or a.dtype
-    k, m = w8.shape
+    k, _ = w8.shape
     lead = a.shape[:-1]
     flat = a.reshape(-1, k)
     a8, s_a = ref.quantize_activations_ref(flat)
-
-    a_pad = _pad_to(_pad_to(a8, 0, block_p), 1, block_k)
-    sa_pad = _pad_to(s_a, 0, block_p)
-    w_pad = _pad_to(_pad_to(w8, 0, block_k), 1, block_m)
-    sw_pad = _pad_to(s_w.astype(jnp.float32), 0, block_m)
-
-    out = quant_matmul_pallas(
-        a_pad, sa_pad, w_pad, sw_pad,
-        block_p=block_p, block_m=block_m, block_k=block_k,
-        out_dtype=jnp.float32, interpret=_auto_interpret(interpret),
+    out = quant_matmul_pre(
+        a8, s_a, w8, s_w, out_dtype=out_dtype,
+        block_p=block_p, block_m=block_m, block_k=block_k, interpret=interpret,
     )
-    out = out[: flat.shape[0], :m].astype(out_dtype)
-    return out.reshape(*lead, m)
+    return out.reshape(*lead, w8.shape[1])
 
 
 def quantize_weights_int8(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:

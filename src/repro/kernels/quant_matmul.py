@@ -1,10 +1,18 @@
-"""Pallas TPU kernel — w8a8 quantized matmul (beyond-paper optimization).
+"""Pallas TPU kernel — w8a8 quantized matmul (DESIGN.md §7, §9).
 
-The paper's derived digital optimization (DESIGN.md §7): the same
-"quantize-the-multiply" insight applied to backend projections and KV-cache
-dequant-matmuls. Weights arrive as int8 codes with a per-output-channel
-scale (exactly the weight-DAC abstraction); activations are quantized
-per-row to int8 inside the kernel (dynamic, like the PWM converter).
+The paper's derived digital optimization: the same "quantize-the-multiply"
+insight applied to backend projections and KV-cache dequant-matmuls.
+Weights arrive as int8 codes with a per-output-channel scale (exactly the
+weight-DAC abstraction). Activations arrive ALREADY quantized — this
+kernel never quantizes them itself. The two entry points in ops.py differ
+only in who did that quantization:
+
+* ``ops.quant_matmul`` — float activations; the *wrapper* quantizes them
+  per-row on the host (``ref.quantize_activations_ref``) before the call.
+* ``ops.quant_matmul_pre`` — pre-quantized int8 codes + scales straight
+  in. This is the ADC-code consumption path (DESIGN.md §9): the edge ADC
+  already performed the activation quantization at conversion time, so
+  feeding its codes through here incurs no second rounding.
 
     y[p, m] = (sum_k a8[p,k] * w8[k,m]) * s_a[p] * s_w[m]
 

@@ -4,37 +4,39 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import adc as adc_mod
 from repro.kernels.ip2_project import IP2KernelParams
 
 
 def ip2_project_ref(
     patches: jnp.ndarray, w_q: jnp.ndarray, bias: jnp.ndarray, params: IP2KernelParams
 ) -> jnp.ndarray:
-    """Oracle for ip2_project_pallas (same padded shapes)."""
+    """Oracle for ip2_project_pallas (same padded shapes), including the
+    ``adc_out_codes`` wire-format output (DESIGN.md §9)."""
     n = params.pwm_levels - 1
     xq = jnp.round(jnp.clip(patches, 0.0, 1.0) * n) * (1.0 / n)
     acc = xq.astype(jnp.float32) @ w_q.astype(jnp.float32)
     out = acc * (params.droop / params.n2) + params.v_ref
     if params.nl_kind == "relu":
         out = jnp.clip(out, 0.0, params.v_sat)
-    if params.adc_enable:
-        levels = 2 ** params.adc_bits
-        lsb = (params.adc_vmax - params.adc_vmin) / (levels - 1)
-        clipped = jnp.clip(out, params.adc_vmin, params.adc_vmax)
-        out = jnp.round((clipped - params.adc_vmin) / lsb) * lsb + params.adc_vmin
-    return out - (params.v_ref - bias[None, :])
+    if not params.adc_enable:
+        return out - (params.v_ref - bias[None, :])
+    spec = params.adc_spec()
+    if params.adc_out_codes:
+        return adc_mod.encode(out, spec)
+    return adc_mod.digital_readout(out, params.v_ref, bias[None, :], spec)
 
 
 def ip2_project_sparse_ref(
-    bank_idx: jnp.ndarray,
+    row_idx: jnp.ndarray,
     patches: jnp.ndarray,
     w_q: jnp.ndarray,
     bias: jnp.ndarray,
     params: IP2KernelParams,
 ) -> jnp.ndarray:
-    """Oracle for ip2_project_sparse_pallas with block_r=1 (same padded
-    shapes): an explicit gather followed by the dense projection."""
-    return ip2_project_ref(patches[bank_idx], w_q, bias, params)
+    """Oracle for ip2_project_sparse_pallas (same padded shapes, any
+    block_r): an explicit row gather followed by the dense projection."""
+    return ip2_project_ref(patches[row_idx], w_q, bias, params)
 
 
 def quant_matmul_ref(

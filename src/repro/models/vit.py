@@ -38,6 +38,7 @@ from repro.core.frontend import (
     CompactFeatures,
     FrontendConfig,
     apply_frontend,
+    dequantize_features,
     init_frontend_params,
 )
 from repro.models.layers import DEFAULT_PLAN, apply_mlp, dense_init, init_mlp, rms_norm
@@ -57,6 +58,7 @@ class ViTConfig:
     n_heads: int = 4
     d_ff: int = 256
     qth: bool = False          # Fig. 4 power-of-2 attention in the backend
+    quant_embed: bool = False  # consume ADC codes via the w8a8 kernel (§9)
     norm_eps: float = 1e-5
 
     def backbone_cfg(self) -> ModelConfig:
@@ -164,6 +166,44 @@ def vit_forward(params: dict, rgb: jnp.ndarray, cfg: ViTConfig,
     return logits, {"mask": mask, "saliency": saliency}
 
 
+def prepare_quant_embed(params: dict) -> dict:
+    """Serving-time weight prep for ``ViTConfig.quant_embed``: quantize the
+    embed matrix to int8 ONCE (the DAC-programmed-once analogue, DESIGN.md
+    §9) and stash it as ``params["embed_q"]`` so the hot serving step does
+    not re-derive it every frame. Serving only — do not feed the returned
+    params to an optimizer (``embed_q`` is frozen int8 prep, not a
+    trainable leaf); re-run after any embed update."""
+    from repro.kernels import ops  # lazy: keep the model import-light
+
+    return {**params, "embed_q": ops.quantize_weights_int8(params["embed"])}
+
+
+def _embed_tokens(params: dict, cf: CompactFeatures, cfg: ViTConfig) -> jnp.ndarray:
+    """The backend's first matmul — the ONE place the wire format is
+    dequantized (DESIGN.md §9).
+
+    Default: fold the static affine into the payload
+    (:func:`dequantize_features`) and matmul in float — bit-identical to
+    the float-wire path. With ``cfg.quant_embed`` and a code payload, the
+    codes feed the w8a8 kernel directly (``ops.quant_matmul_pre``): the
+    edge ADC already performed the activation quantization, so there is no
+    second rounding of activations — only the embed weights are quantized
+    (int8 per-column, once via :func:`prepare_quant_embed` or per call as
+    a fallback), and the affine distributes over the matmul:
+
+        ((c·s + z) ⊙ g) @ W  =  g ⊙ (s·(c @ W8)·s_w + z @ dequant(W8))
+    """
+    feats = cf.features
+    if cfg.quant_embed and not jnp.issubdtype(feats.dtype, jnp.floating):
+        from repro.kernels import ops  # lazy: keep the model import-light
+
+        w8, s_w = params.get("embed_q") or ops.quantize_weights_int8(params["embed"])
+        y = ops.quant_matmul_pre(feats, cf.scale, w8, s_w)
+        zero_term = cf.zero @ (w8.astype(jnp.float32) * s_w[None, :])
+        return (y + zero_term) * cf.gain[..., None]
+    return dequantize_features(cf) @ params["embed"]
+
+
 def vit_forward_compact(
     params: dict,
     rgb: jnp.ndarray,
@@ -173,10 +213,19 @@ def vit_forward_compact(
     project_fn=None,
     precomputed=None,
     cache=None,
+    wire: str | None = None,
 ) -> tuple[jnp.ndarray, dict]:
     """Compact path: frontend projects only the k selected patches, the
     backend attends over exactly those k tokens (index-looked-up positional
     embeddings), and the attention itself scores the next saccade.
+
+    On the analog path the frontend hands over the digital wire format —
+    int8 ADC codes plus static dequant metadata (DESIGN.md §9) — and the
+    first matmul (:func:`_embed_tokens`) is the only place it is
+    dequantized. ``wire="float"`` selects the bit-identical STE float
+    view instead (differentiable: compact-path co-design training);
+    ``None`` defers to the frontend's per-config resolution (codes iff
+    there is a real edge ADC).
 
     ``precomputed`` optionally forwards an existing ``(patches, weights)``
     pair from :func:`repro.core.frontend.sensor_patches` (the serving
@@ -184,7 +233,7 @@ def vit_forward_compact(
 
     ``cache`` (a :class:`repro.core.temporal.FeatureCache`) enables the
     temporal delta gate: only the stale subset of the selection is
-    re-projected/converted, held features serve the rest (DESIGN.md §6).
+    re-projected/converted, held codes serve the rest (DESIGN.md §6).
 
     Returns (logits (B, n_classes), aux) with aux:
       ``indices`` (B, k)  — the patches that were ADC-converted;
@@ -201,14 +250,14 @@ def vit_forward_compact(
     out = apply_frontend(
         params["ip2"], rgb, cfg.frontend,
         mask=mask, indices=indices, mode="compact", project_fn=project_fn,
-        precomputed=precomputed, cache=cache,
+        precomputed=precomputed, cache=cache, wire=wire,
     )
     new_cache = None
     if cache is not None:
         out, new_cache = out
     cf: CompactFeatures = out
     # index-based positional embeddings: pos[idx], not pos broadcast over P
-    x = cf.features @ params["embed"] + params["pos"][cf.indices]
+    x = _embed_tokens(params, cf, cfg) + params["pos"][cf.indices]
     logits, received = _encoder(params, x, cfg, cf.valid)
 
     received = jnp.where(cf.valid, received, 0.0)

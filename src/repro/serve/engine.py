@@ -58,7 +58,11 @@ class StreamState(NamedTuple):
 
     ``cache`` is None unless the engine runs with ``temporal=True``, in
     which case it carries each slot's held-charge feature cache (incl.
-    the per-patch age array driving the droop budget; DESIGN.md §6).
+    the per-patch age array driving the droop budget; DESIGN.md §6). The
+    cache payload is stored in the digital wire format — int8 ADC codes
+    (DESIGN.md §9) — so per-slot held state is 4x smaller than a float32
+    cache; every mutation (step / admit wipe / freeze) preserves that
+    dtype.
     """
 
     indices: jnp.ndarray    # (S, k) int32 — next frame's patch selection
@@ -161,9 +165,14 @@ def _make_admit(capacity: int, k: int):
         hit = jnp.arange(capacity) == slot
         cache = state.cache
         if cache is not None:
-            # full row wipe: a recycled slot starts with no held charge
+            # full row wipe: a recycled slot starts with no held charge.
+            # zeros_like keeps the code dtype — where(..., 0.0, int8) would
+            # silently promote the wire-format cache to float32 (§9)
             cache = FeatureCache(
-                features=jnp.where(hit[:, None, None], 0.0, cache.features),
+                features=jnp.where(
+                    hit[:, None, None],
+                    jnp.zeros((), cache.features.dtype), cache.features,
+                ),
                 energy=jnp.where(hit[:, None], 0.0, cache.energy),
                 age=jnp.where(hit[:, None], 0, cache.age),
                 valid=cache.valid & ~hit[:, None],

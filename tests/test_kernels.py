@@ -89,6 +89,25 @@ def test_quant_matmul_vs_oracle(dtype, shape):
     )
 
 
+def test_quant_matmul_pre_skips_second_rounding():
+    """The pre-quantized entry consumes int8 codes + scales as-is (the
+    ADC-code path, §9): no host re-quantization, oracle-exact, and the
+    host-quantizing wrapper is exactly pre(quantize(a))."""
+    a = jax.random.normal(KEY, (6, 40)) * 2
+    a8, sa = ref.quantize_activations_ref(a)
+    w = jax.random.normal(jax.random.PRNGKey(1), (40, 24))
+    w8, sw = ops.quantize_weights_int8(w)
+    got = ops.quant_matmul_pre(a8, sa, w8, sw, interpret=True)
+    want = ref.quant_matmul_ref(a8, sa, w8, sw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    via_host = ops.quant_matmul(a, w8, sw, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(via_host), atol=1e-6)
+    # scalar per-row scale broadcast (the ADC's single static LSB)
+    got_s = ops.quant_matmul_pre(a8, jnp.float32(0.25), w8, sw, interpret=True)
+    want_s = ref.quant_matmul_ref(a8, jnp.full((6,), 0.25, jnp.float32), w8, sw)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s), atol=1e-5)
+
+
 def test_quant_matmul_accuracy_vs_float():
     a = jax.random.normal(KEY, (16, 300))
     w = jax.random.normal(jax.random.PRNGKey(1), (300, 200))
@@ -152,7 +171,8 @@ class TestSparseProjection:
         np.testing.assert_allclose(np.asarray(out_s), np.asarray(want), atol=1e-5)
 
     def test_sparse_kernel_vs_padded_oracle(self):
-        """Direct padded-shape parity: pallas entry vs ref oracle."""
+        """Direct padded-shape parity: pallas entry vs ref oracle, at every
+        row-bank size dividing the row table."""
         from repro.kernels.ip2_project_sparse import ip2_project_sparse_pallas
 
         params = IP2KernelParams(n2=64, adc_enable=False)
@@ -160,11 +180,66 @@ class TestSparseProjection:
         w = jax.random.normal(jax.random.PRNGKey(1), (256, 128))
         bias = jnp.zeros((128,))
         idx = jnp.array([3, 15, 0, 7, 7, 11], jnp.int32)
-        got = ip2_project_sparse_pallas(
-            idx, patches, w, bias, params, block_m=128, block_k=256, interpret=True
-        )
         want = ref.ip2_project_sparse_ref(idx, patches, w, bias, params)
-        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+        for block_r in (1, 2, 3, 6):
+            got = ip2_project_sparse_pallas(
+                idx, patches, w, bias, params,
+                block_r=block_r, block_m=128, block_k=256, interpret=True,
+            )
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+    def test_sparse_block_r_does_not_change_results(self):
+        """The wrapper's sublane-aligned row banking (block_r) is a pure
+        perf knob: any bank size (including non-dividing ones, padded and
+        sliced internally) yields identical features."""
+        spec = proj.PatchSpec(patch_h=8, patch_w=8, n_vectors=24)
+        patches = jax.random.uniform(KEY, (3, 9, 64))
+        w = jax.random.normal(jax.random.PRNGKey(1), (24, 64)) * 2.0
+        idx = jnp.array([[0, 8, 4], [7, 1, 2], [3, 3, 5]], jnp.int32)
+        base = ops.ip2_project_sparse(patches, w, idx, spec,
+                                      block_r=1, interpret=True)
+        for block_r in (None, 2, 4, 8, 16):
+            out = ops.ip2_project_sparse(patches, w, idx, spec,
+                                         block_r=block_r, interpret=True)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                       atol=1e-6)
+
+    def test_kernels_emit_wire_codes(self):
+        """codes=True: both projection kernels emit int8 ADC codes from the
+        fused epilogue whose dequant matches the float fused-ADC output
+        (within fused-multiply-add reassociation, far below 1 LSB)."""
+        from repro.core.adc import dequantize, readout_scale_zero
+
+        spec = proj.PatchSpec(patch_h=8, patch_w=8, n_vectors=24)
+        adc = adc_mod.ADCSpec(bits=8)
+        patches = jax.random.uniform(KEY, (2, 9, 64))
+        w = jax.random.normal(jax.random.PRNGKey(1), (24, 64)) * 3.0
+        bias = jax.random.normal(jax.random.PRNGKey(2), (24,)) * 0.1
+        scale, zero = readout_scale_zero(spec.summer.v_ref, bias, adc)
+
+        f_dense = ops.ip2_project(patches, w, spec, adc=adc, bias=bias,
+                                  interpret=True)
+        c_dense = ops.ip2_project(patches, w, spec, adc=adc, bias=bias,
+                                  codes=True, interpret=True)
+        assert c_dense.dtype == jnp.int8
+        np.testing.assert_allclose(np.asarray(dequantize(c_dense, scale, zero)),
+                                   np.asarray(f_dense), atol=1e-6)
+
+        idx = jnp.array([[0, 8, 4], [7, 1, 2]], jnp.int32)
+        c_sparse = ops.ip2_project_sparse(patches, w, idx, spec, adc=adc,
+                                          bias=bias, codes=True, interpret=True)
+        assert c_sparse.dtype == jnp.int8
+        np.testing.assert_array_equal(
+            np.asarray(c_sparse),
+            np.asarray(jnp.take_along_axis(c_dense, idx[..., None], axis=-2)),
+        )
+
+    def test_codes_require_adc(self):
+        spec = proj.PatchSpec(patch_h=8, patch_w=8, n_vectors=16)
+        patches = jax.random.uniform(KEY, (1, 4, 64))
+        w = jax.random.normal(KEY, (16, 64))
+        with pytest.raises(ValueError, match="codes=True requires"):
+            ops.ip2_project(patches, w, spec, codes=True, interpret=True)
 
 
 # ---------------------------------------------------------------------------

@@ -86,6 +86,9 @@ class TestCompactDataflow:
     (up to dtype/order-of-summation) to the dense-then-mask path."""
 
     def test_compact_features_equal_dense_gather_same_mask(self):
+        """The compact payload is int8 ADC codes (the wire format, §9);
+        dequantized at the one permitted site they equal the dense float
+        path bit for bit (no requant anywhere on the seam)."""
         fcfg = _fcfg()
         params = c.init_frontend_params(KEY, fcfg)
         rgb = jax.random.uniform(KEY, (3, 64, 64, 3))
@@ -93,9 +96,10 @@ class TestCompactDataflow:
         cf = c.apply_frontend(params, rgb, fcfg, mask=mask, mode="compact")
         gathered = jnp.take_along_axis(dense, cf.indices[..., None], axis=-2)
         assert cf.features.shape == (3, 4, 32)
+        assert cf.features.dtype == jnp.int8          # code-width wire
         assert bool(cf.valid.all())
-        np.testing.assert_allclose(
-            np.asarray(cf.features), np.asarray(gathered), atol=1e-6
+        np.testing.assert_array_equal(
+            np.asarray(c.dequantize_features(cf)), np.asarray(gathered)
         )
 
     def test_compact_with_kernel_project_fn(self):
@@ -125,8 +129,16 @@ class TestCompactDataflow:
         )
         cf = c.apply_frontend(params, rgb, fcfg, mode="compact", indices=idx)
         np.testing.assert_allclose(
-            np.asarray(feats_k), np.asarray(cf.features), atol=1e-5
+            np.asarray(feats_k), np.asarray(c.dequantize_features(cf)), atol=1e-5
         )
+        # and in wire format: the kernel's fused epilogue emits the same
+        # int8 codes the frontend streams (code grid == code grid)
+        codes_k = ops.ip2_project_sparse(
+            patches, weights, idx, fcfg.patch,
+            adc=fcfg.adc, bias=params["bias"], codes=True, interpret=True,
+        )
+        assert codes_k.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(codes_k), np.asarray(cf.features))
 
     @pytest.mark.parametrize("qth", [False, True])
     def test_vit_dense_vs_compact_equivalence(self, qth):
@@ -163,14 +175,16 @@ class TestCompactDataflow:
 
     def test_compact_path_ste_gradients_reach_frontend(self):
         """The co-design gradients flow through gather + STE quantizers on
-        the compact path (not just the dense one)."""
+        the compact path (not just the dense one) — via the float wire,
+        whose values are bit-identical to dequantized codes (integer codes
+        themselves carry no gradients; DESIGN.md §9)."""
         fcfg = _fcfg()
         cfg = ViTConfig(frontend=fcfg, n_layers=1, d_model=32, n_heads=2, d_ff=64)
         params = init_vit(KEY, cfg)
         rgb = jax.random.uniform(KEY, (2, 64, 64, 3))
 
         def loss(p):
-            logits, _ = vit_forward_compact(p, rgb, cfg)
+            logits, _ = vit_forward_compact(p, rgb, cfg, wire="float")
             return jnp.sum(logits ** 2)
 
         g = jax.grad(loss)(params)

@@ -211,7 +211,9 @@ class TestBudgetAndDroop:
 
     def test_never_computed_patch_serves_uncharged_zero(self):
         """Under budget, a selected-but-not-yet-computed patch serves 0 —
-        an uncharged summing cap — until its deferred refresh lands."""
+        an uncharged summing cap — until its deferred refresh lands. In
+        wire terms: its ``gain`` is 0, so the dequantized value is exactly
+        0 whatever code sits in the (never-written) cache row."""
         fg = _fcfg(temporal=TemporalSpec(delta_threshold=1e-6,
                                          recompute_budget=1))
         params = c.init_frontend_params(KEY, fg)
@@ -221,7 +223,7 @@ class TestBudgetAndDroop:
         cf, cache = apply_frontend(params, rgb, fg, mode="compact",
                                    indices=idx, cache=cache)
         held = np.asarray(cache.valid[0])[np.asarray(idx)[0]]
-        feats = np.asarray(cf.features[0])
+        feats = np.asarray(c.dequantize_features(cf)[0])
         assert held.sum() == 1
         assert (np.abs(feats[~held]).max() == 0.0)
         assert np.abs(feats[held]).max() > 0.0
@@ -311,22 +313,30 @@ class TestBudgetAndDroop:
             cf, cache = apply_frontend(params, rgb, fg, mode="compact",
                                        indices=idx, cache=cache)
         d = fg.patch.summer.droop_factor()
+        # the stored codes never age in place (integer-safe lazy droop)...
+        np.testing.assert_array_equal(
+            np.asarray(cf.features), np.asarray(fresh.features))
+        # ...the droop rides in the serve-time gain on the dequantized value
         np.testing.assert_allclose(
-            np.asarray(cf.features), np.asarray(fresh.features) * d ** h,
+            np.asarray(c.dequantize_features(cf)),
+            np.asarray(c.dequantize_features(fresh)) * d ** h,
             rtol=1e-6)
         assert int(np.asarray(cache.age[0])[np.asarray(idx)[0]].min()) == h
 
     def test_gated_gradients_reach_frontend(self):
         """STE-compat: gradients flow through the gated path (gather,
-        scatter-merge, projection quantizers) into the analog weights."""
+        scatter-merge, projection quantizers) into the analog weights —
+        on the float wire with a float cache (bit-identical values to the
+        code wire; integer codes carry no gradients, DESIGN.md §9)."""
         fg = _fcfg(temporal=TemporalSpec(delta_threshold=1e-6))
         cfg = _vcfg(fg)
         params = init_vit(KEY, cfg)
         rgb = jax.random.uniform(KEY, (2, 64, 64, 3))
-        cache = init_feature_cache(fg, (2,))
+        cache = init_feature_cache(fg, (2,), dtype=jnp.float32)
 
         def loss(p):
-            logits, _ = vit_forward_compact(p, rgb, cfg, cache=cache)
+            logits, _ = vit_forward_compact(p, rgb, cfg, cache=cache,
+                                            wire="float")
             return jnp.sum(logits ** 2)
 
         g = jax.grad(loss)(params)
@@ -352,7 +362,8 @@ class TestKernelGatedParity:
         cf, _ = apply_frontend(params, rgb, fg, mode="compact",
                                indices=idx, cache=cache)
         np.testing.assert_allclose(
-            np.asarray(feats_k), np.asarray(cf.features), atol=1e-5)
+            np.asarray(feats_k), np.asarray(c.dequantize_features(cf)),
+            atol=1e-5)
 
     def test_kernel_project_fn_in_gated_path(self):
         """ops.ip2_project_fn drops into the gated frontend (it receives
