@@ -1,40 +1,241 @@
-"""Paper Table 1 + §2.1.3 — in-pixel area budget and front-end power.
+"""Paper Table 1 + §2.1.3 — in-pixel area budget and front-end power,
+now event-metered end to end (DESIGN.md §10).
 
 Reproduces: 485 µm² -> 22 µm pitch at 65 nm; < 60 mW for 2 Mpix @ 30 Hz;
-< 30 mW/Mpix including ADC+DAC; ADC conversion is the majority consumer;
-25 % active patches assumed.
+< 30 mW/Mpix including ADC+DAC (asserted at BOTH the 2 Mpix and 1 Mpix
+operating points); ADC conversion is the majority consumer; 25 % active
+patches assumed.
+
+Three layers of evidence, strongest last:
+
+1. **Analytical** — ``power_report`` (the meter on the closed-form
+   steady-state event counts).
+2. **Measured** — a REAL 2 Mpix compact frontend run: the events the
+   runtime actually executed, priced by the same meter; asserted equal
+   to the analytical view at the matched operating point and < 30 mW/MP.
+3. **Governed** — the serving engine under a chip budget set below the
+   ungoverned full-motion demand: measured power must track the budget
+   within 10 % (hard assert — event counts are deterministic, this is
+   not a wall-clock number), while a slack budget stays bitwise
+   identical to the ungoverned engine and the static scene's power
+   collapses to the fixed frame costs.
+
+Every power row carries a ``power`` record with ``source:
+"event-meter"`` — mirroring the §9 measured-bytes schema — and
+``benchmarks/check_power_accounting.py`` re-derives the claims in CI.
 """
 
 import time
 
-from repro.core.power import AreaBudget, EnergyConstants, SensorConfig, power_report
+import numpy as np
+
+from repro.core.power import (
+    AreaBudget, EnergyMeter, SensorConfig, power_report, steady_state_events,
+)
+
+FRAME_HZ = 30.0
 
 
-def run() -> list[dict]:
+def _timed(fn):
     t0 = time.perf_counter_ns()
-    area = AreaBudget().totals()
-    rep = power_report(SensorConfig())
-    rep_1mpix = power_report(SensorConfig(n_pixels=1e6))
-    us = (time.perf_counter_ns() - t0) / 1e3
+    out = fn()
+    return out, (time.perf_counter_ns() - t0) / 1e3
 
-    share = {k: v / rep["total"] for k, v in rep.items()
-             if isinstance(v, float) and k not in ("total", "mw_per_mpix")}
-    top = max(share, key=share.get)
-    rows = [
+
+def area_rows() -> list[dict]:
+    area, us = _timed(lambda: AreaBudget().totals())
+    assert area["Total"]["total_um2"] == 485.0
+    return [
         {"name": "table1_pitch_um", "us_per_call": us,
          "derived": f"{area['Total']['pitch_um']:.1f} (paper: 22.0)"},
         {"name": "table1_total_um2", "us_per_call": us,
          "derived": f"{area['Total']['total_um2']:.0f} (paper: 485)"},
+    ]
+
+
+def analytical_rows() -> list[dict]:
+    rep, us = _timed(lambda: power_report(SensorConfig()))
+    rep_1mpix, us1 = _timed(lambda: power_report(SensorConfig(n_pixels=1e6)))
+    share = rep.share()
+    top = rep.dominant
+    rows = [
         {"name": "power_2mpix_30hz_mw", "us_per_call": us,
-         "derived": f"{rep['total'] * 1e3:.1f} (<60 claim)"},
+         "power": {"mw": rep.total_w * 1e3, "source": "event-meter"},
+         "derived": f"{rep.total_w * 1e3:.1f} (<60 claim)"},
         {"name": "power_mw_per_mpix", "us_per_call": us,
-         "derived": f"{rep['mw_per_mpix']:.1f} (<30 claim)"},
+         "power": {"mw_per_mpix": rep.mw_per_mpix, "source": "event-meter"},
+         "derived": f"{rep.mw_per_mpix:.1f} (<30 claim)"},
         {"name": "power_dominant_component", "us_per_call": us,
          "derived": f"{top} {share[top] * 100:.0f}% (paper: ADC majority)"},
-        {"name": "power_1mpix_mw", "us_per_call": us,
-         "derived": f"{rep_1mpix['total'] * 1e3:.1f}"},
+        {"name": "power_1mpix_mw", "us_per_call": us1,
+         "power": {"mw": rep_1mpix.total_w * 1e3,
+                   "mw_per_mpix": rep_1mpix.mw_per_mpix,
+                   "source": "event-meter"},
+         "derived": (f"{rep_1mpix.total_w * 1e3:.1f} "
+                     f"({rep_1mpix.mw_per_mpix:.1f} mW/MP, <30 claim)")},
     ]
-    assert area["Total"]["total_um2"] == 485.0
-    assert rep["total"] < 0.060 and rep["mw_per_mpix"] < 30.0
+    assert rep.total_w < 0.060 and rep.mw_per_mpix < 30.0
+    # the <30 mW/MP claim is per-megapixel: it must hold at 1 Mpix too,
+    # not only at the 2 Mpix point where the DAC broadcast amortizes more
+    assert rep_1mpix.mw_per_mpix < 30.0
     assert top == "adc"
+
+    # meter == closed form, by construction — pinned here so the artifact
+    # records it next to the numbers it guarantees
+    def consistency():
+        bd = EnergyMeter().power_w(
+            steady_state_events(SensorConfig()), SensorConfig().frame_hz)
+        assert bd.components == rep.components and bd.total_w == rep.total_w
+        return bd
+    bd, usc = _timed(consistency)
+    rows.append({
+        "name": "power_meter_equals_analytical", "us_per_call": usc,
+        "power": {"mw": bd.total_w * 1e3, "source": "event-meter"},
+        "derived": (f"meter(steady-state events) == power_report exactly, "
+                    f"{len(bd.components)} components"),
+    })
+    return rows
+
+
+def measured_runtime_row() -> list[dict]:
+    """Run the real compact frontend at the paper's 2 Mpix / 32x32 /
+    400-vector / 25 % operating point and price the events it EXECUTED."""
+    import jax
+
+    from repro.core.frontend import (
+        FrontendConfig, apply_frontend, init_frontend_params,
+    )
+    from repro.core.projection import PatchSpec
+
+    cfg = FrontendConfig(
+        image_h=1024, image_w=2048, aa_cutoff=None,
+        patch=PatchSpec(patch_h=32, patch_w=32, n_vectors=400),
+        active_fraction=0.25,
+    )
+    params = init_frontend_params(jax.random.PRNGKey(0), cfg)
+    rgb = jax.random.uniform(jax.random.PRNGKey(1), (1, 1024, 2048, 3))
+
+    def run():
+        cf = apply_frontend(params, rgb, cfg, mode="compact")
+        return jax.tree.map(lambda e: float(np.asarray(e)[0]), cf.events)
+    ev, us = _timed(run)
+
+    mpix = 1024 * 2048 / 1e6
+    mw = EnergyMeter().power_mw(ev, FRAME_HZ)
+    measured_per_mpix = mw / mpix
+    rep = power_report(SensorConfig(n_pixels=float(1024 * 2048)))
+    # measured-from-events must reproduce the analytical claim exactly
+    # (same operating point, same meter) and stay inside the paper budget
+    assert abs(measured_per_mpix - rep.mw_per_mpix) / rep.mw_per_mpix < 1e-6
+    assert measured_per_mpix < 30.0
+    return [{
+        "name": "power_measured_2mpix_runtime",
+        "us_per_call": us,
+        "power": {"mw": mw, "mw_per_mpix": measured_per_mpix,
+                  "adc_conversions_per_frame": ev.adc_conversions,
+                  "source": "event-meter"},
+        "derived": (f"{mw:.1f} mW measured from executed events "
+                    f"({measured_per_mpix:.1f} mW/MP, <30 claim; "
+                    f"{ev.adc_conversions:.0f} conversions/frame)"),
+    }]
+
+
+def governed_sweep(frames: int = 16) -> list[dict]:
+    """The closed loop (DESIGN.md §10): a reduced engine config, measured
+    power from executed events, a budget below the ungoverned full-motion
+    demand — budget tracking and the accuracy cost of degradation."""
+    import jax
+
+    from repro.core.frontend import FrontendConfig
+    from repro.core.projection import PatchSpec
+    from repro.core.temporal import TemporalSpec
+    from repro.models.vit import ViTConfig, init_vit
+    from repro.serve.engine import SaccadeEngine
+    from repro.serve.governor import GovernorSpec
+
+    fcfg = FrontendConfig(
+        image_h=64, image_w=64, aa_cutoff=None,
+        patch=PatchSpec(patch_h=8, patch_w=8, n_vectors=64),
+        active_fraction=0.25, temporal=TemporalSpec(delta_threshold=1e-4),
+    )
+    cfg = ViTConfig(frontend=fcfg, n_layers=1, d_model=32, n_heads=2, d_ff=64)
+    params = init_vit(jax.random.PRNGKey(0), cfg)
+    scenes = np.asarray(
+        jax.random.uniform(jax.random.PRNGKey(1), (frames, 64, 64, 3)))
+
+    def serve(governor=None, motion=True):
+        eng = SaccadeEngine(cfg, params, capacity=1, temporal=True,
+                            frame_hz=FRAME_HZ, governor=governor)
+        eng.admit("cam")
+        mws, logits = [], []
+        for t in range(frames):
+            frame = scenes[t] if motion else scenes[0]
+            logits.append(eng.step({"cam": frame})["cam"])
+            mws.append(eng.power_mw("cam"))
+        return eng, np.asarray(mws), np.asarray(logits)
+
+    rows = []
+    t0 = time.perf_counter_ns()
+    _, mw_full, logits_full = serve(motion=True)
+    _, mw_static, logits_static = serve(motion=False)
+    demand = float(mw_full[-5:].mean())
+    static_mw = float(mw_static[-5:].mean())
+    us = (time.perf_counter_ns() - t0) / 1e3
+    rows.append({
+        "name": "power_engine_demand_full_vs_static",
+        "us_per_call": us / (2 * frames),
+        "power": {"full_motion_mw": demand, "static_mw": static_mw,
+                  "source": "event-meter"},
+        "derived": (f"ungoverned demand: full-motion {demand:.3f} mW vs "
+                    f"static {static_mw:.3f} mW "
+                    f"({demand / static_mw:.1f}x — holds are free)"),
+    })
+
+    # --- governed full motion: budget below demand, tracking within 10 %
+    budget = 0.66 * demand
+    t0 = time.perf_counter_ns()
+    eng_g, mw_gov, logits_gov = serve(GovernorSpec(budget_mw=budget))
+    us = (time.perf_counter_ns() - t0) / 1e3
+    steady = mw_gov[-5:]
+    err = float(np.abs(steady - budget).max() / budget)
+    agree = float(np.mean(
+        np.argmax(logits_gov, -1) == np.argmax(logits_full, -1)))
+    k = fcfg.n_active
+    rows.append({
+        "name": "power_governed_full_motion_budget_tracking",
+        "us_per_call": us / frames,
+        "power": {"budget_mw": budget, "measured_mw": float(steady.mean()),
+                  "tracking_error": err, "source": "event-meter"},
+        "derived": (f"budget {budget:.3f} mW (66% of demand) -> measured "
+                    f"{steady.mean():.3f} mW, tracking error {err:.1%} "
+                    f"(<=10% asserted); cap {eng_g.recompute_cap('cam')}/{k} "
+                    f"tier {eng_g.k_tier('cam')}/{k}; argmax agreement vs "
+                    f"ungoverned {agree:.0%} (accuracy cost of degradation)"),
+    })
+    # deterministic event arithmetic, not wall clock: always hard
+    assert err <= 0.10, f"governed tracking error {err:.1%} > 10%"
+
+    # --- slack budget on the static scene: bitwise no-op
+    t0 = time.perf_counter_ns()
+    _, mw_slack, logits_slack = serve(
+        GovernorSpec(budget_mw=4.0 * demand), motion=False)
+    us = (time.perf_counter_ns() - t0) / 1e3
+    identical = bool(np.array_equal(logits_slack, logits_static))
+    rows.append({
+        "name": "power_governed_slack_budget_static",
+        "us_per_call": us / frames,
+        "power": {"budget_mw": 4.0 * demand,
+                  "measured_mw": float(mw_slack[-5:].mean()),
+                  "source": "event-meter"},
+        "derived": (f"slack budget: governed static scene bitwise-identical "
+                    f"to ungoverned = {identical}; steady "
+                    f"{mw_slack[-5:].mean():.3f} mW"),
+    })
+    assert identical, "slack-budget governed path diverged from ungoverned"
+    return rows
+
+
+def run() -> list[dict]:
+    rows = area_rows() + analytical_rows() + measured_runtime_row()
+    rows += governed_sweep()
     return rows

@@ -1,0 +1,87 @@
+"""Bench-smoke guard: BENCH_throughput.json power rows must be priced by
+the event meter (``source == "event-meter"``), the paper's power claims
+must hold, and the governed budget tracking must stay inside 10 %
+(DESIGN.md §10) — mirroring the §9 measured-bytes guard
+(check_bytes_accounting.py).
+
+Three layers of defence:
+
+1. Schema: every power-reporting row carries a ``power`` record with
+   ``source == "event-meter"`` (no hand-computed milliwatts can sneak
+   back into the artifact).
+2. Claims: <30 mW/MP at the 2 Mpix AND 1 Mpix operating points, the
+   measured-runtime row matching the meter, and the governed
+   ``tracking_error <= 0.10``.
+3. Live re-derivation: ``power_report`` is recomputed here and compared
+   against both the artifact AND the meter evaluated on the analytical
+   steady-state events — if someone forks the closed-form report away
+   from the meter, this breaks loudly.
+
+Run after ``benchmarks/run.py`` (needs src and the repo root on the
+path): ``PYTHONPATH=src:. python benchmarks/check_power_accounting.py``.
+"""
+
+import json
+import sys
+
+POWER_ROWS = (
+    "power_2mpix_30hz_mw",
+    "power_mw_per_mpix",
+    "power_1mpix_mw",
+    "power_meter_equals_analytical",
+    "power_measured_2mpix_runtime",
+    "power_engine_demand_full_vs_static",
+    "power_governed_full_motion_budget_tracking",
+    "power_governed_slack_budget_static",
+)
+
+
+def main(path: str = "BENCH_throughput.json") -> None:
+    with open(path) as f:
+        results = json.load(f)
+    pw = next(v for k, v in results.items() if k.startswith("power"))
+    rows = {r["name"]: r for r in pw if "name" in r}
+
+    missing = [n for n in POWER_ROWS if n not in rows]
+    assert not missing, f"power rows missing from the artifact: {missing}"
+    for name in POWER_ROWS:
+        rec = rows[name].get("power")
+        assert isinstance(rec, dict), f"{name}: no power record"
+        assert rec.get("source") == "event-meter", (
+            f"{name}: power not priced by the event meter "
+            f"(source={rec.get('source')!r})"
+        )
+
+    # the claims the artifact asserts, re-checked against the record
+    assert rows["power_mw_per_mpix"]["power"]["mw_per_mpix"] < 30.0
+    assert rows["power_1mpix_mw"]["power"]["mw_per_mpix"] < 30.0
+    assert rows["power_measured_2mpix_runtime"]["power"]["mw_per_mpix"] < 30.0
+    err = rows["power_governed_full_motion_budget_tracking"]["power"]
+    assert err["tracking_error"] <= 0.10, (
+        f"governed tracking error {err['tracking_error']:.1%} > 10%"
+    )
+    assert err["measured_mw"] <= err["budget_mw"] * 1.10
+
+    # live re-derivation: closed form == meter, and == the artifact
+    from repro.core.power import (
+        EnergyMeter, SensorConfig, power_report, steady_state_events,
+    )
+
+    rep = power_report(SensorConfig())
+    bd = EnergyMeter().power_w(
+        steady_state_events(SensorConfig()), SensorConfig().frame_hz)
+    assert rep.components == bd.components and rep.total_w == bd.total_w, (
+        "power_report no longer IS the meter on steady-state events"
+    )
+    art = rows["power_mw_per_mpix"]["power"]["mw_per_mpix"]
+    assert abs(art - rep.mw_per_mpix) < 1e-9, (
+        f"artifact says {art} mW/MP but the live meter derives "
+        f"{rep.mw_per_mpix} — power is not being event-metered"
+    )
+    print(f"power accounting OK: {len(POWER_ROWS)} event-metered rows, "
+          f"{rep.mw_per_mpix:.1f} mW/MP live == artifact, governed "
+          f"tracking error {err['tracking_error']:.1%} <= 10%")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -47,9 +47,9 @@ def main():
 
     # --- sensor-level reports (paper Table 1, §2.1.3, Fig. 3) ---
     rep = c.power_report(c.SensorConfig())
-    print(f"\n2Mpix@30Hz front-end power: {rep['total'] * 1e3:.1f} mW "
-          f"({rep['mw_per_mpix']:.1f} mW/Mpix, ADC share "
-          f"{rep['adc'] / rep['total']:.0%})")
+    print(f"\n2Mpix@30Hz front-end power: {rep.total_w * 1e3:.1f} mW "
+          f"({rep.mw_per_mpix:.1f} mW/Mpix, ADC share "
+          f"{rep.share()['adc']:.0%})")
     p = c.rate_point("1080p", 2, 32, 400)
     print(f"1080p, C=2 weight lines, 400 vec/32x32 patch: {p.frame_hz:.0f} Hz")
     area = c.AreaBudget().totals()

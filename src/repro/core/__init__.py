@@ -31,7 +31,19 @@ from repro.core.frontend import (
     project_wire,
     sensor_patches,
 )
-from repro.core.power import AreaBudget, EnergyConstants, SensorConfig, data_reduction, power_report
+from repro.core.power import (
+    AreaBudget,
+    EnergyConstants,
+    EnergyMeter,
+    EventCounts,
+    PowerBreakdown,
+    PowerReport,
+    SensorConfig,
+    data_reduction,
+    frontend_frame_events,
+    power_report,
+    steady_state_events,
+)
 from repro.core.projection import (
     PatchSpec,
     analog_project_frame,
@@ -60,6 +72,7 @@ from repro.core.switched_cap import (
 from repro.core.temporal import (
     FeatureCache,
     TemporalSpec,
+    gated_frame_events,
     held_features,
     held_gain,
     init_feature_cache,
@@ -77,7 +90,9 @@ __all__ = [
     "CompactFeatures", "FrontendConfig", "apply_frontend", "compact_features",
     "dequantize_features", "feature_scale_zero",
     "init_frontend_params", "project_wire", "sensor_patches",
-    "AreaBudget", "EnergyConstants", "SensorConfig", "data_reduction", "power_report",
+    "AreaBudget", "EnergyConstants", "EnergyMeter", "EventCounts",
+    "PowerBreakdown", "PowerReport", "SensorConfig", "data_reduction",
+    "frontend_frame_events", "power_report", "steady_state_events",
     "PatchSpec", "analog_project_frame", "analog_project_patches", "extract_patches",
     "QuantSpec", "pwm_quantize", "quantize_weights", "weight_codes",
     "QTHSpec", "pow2_quantize", "qth_attention",
@@ -85,7 +100,8 @@ __all__ = [
     "mask_from_indices", "patch_energy", "topk_patch_indices", "topk_patch_mask",
     "SummerSpec", "TAU_LEAK_65NM_S", "capacitor_divider", "charge_share_sum",
     "passive_droop_trace",
-    "FeatureCache", "TemporalSpec", "held_features", "held_gain",
+    "FeatureCache", "TemporalSpec", "gated_frame_events", "held_features",
+    "held_gain",
     "init_feature_cache", "refresh", "select_stale", "take_rows",
     "figure3_sweep", "frame_rate", "rate_point",
 ]

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 
 from repro.core import adc as adc_mod
 from repro.core import bayer as bayer_mod
+from repro.core import power as power_mod
 from repro.core import projection as proj_mod
 from repro.core import saliency as sal_mod
 from repro.core import temporal as temporal_mod
@@ -108,6 +109,15 @@ class CompactFeatures(NamedTuple):
     selection, so it is free) that never crosses the feature wire; the
     saccade loop consumes it from here instead of re-running
     :func:`sensor_patches` (DESIGN.md §5).
+
+    ``events`` is this frame's executed energy-event ledger
+    (:class:`repro.core.power.EventCounts`, per batch element; DESIGN.md
+    §10): the ADC conversions / cap charges / DAC loads / CDS samples /
+    comparator+OpAmp windows that the frontend ACTUALLY spent producing
+    this payload — ``k·M`` conversions on the ungated compact path,
+    ``n_stale·M`` under the temporal gate (holds are free). Price it
+    with :class:`repro.core.power.EnergyMeter`. Like ``energy``, it is
+    O(1) metadata, never part of the wire payload.
     """
 
     features: jnp.ndarray   # (..., k, M) int8 ADC codes (or f32, wire="float")
@@ -117,6 +127,7 @@ class CompactFeatures(NamedTuple):
     scale: jnp.ndarray      # () float32 — ADC LSB (volts per code)
     zero: jnp.ndarray       # (M,) float32 — dequant offset incl. V_R - b
     gain: jnp.ndarray       # (..., k) float32 — valid × droop d^age
+    events: power_mod.EventCounts = power_mod.EventCounts()  # (...,) leaves
 
 
 def dequantize_features(cf: CompactFeatures) -> jnp.ndarray:
@@ -264,6 +275,8 @@ def apply_frontend(
     precomputed: tuple[jnp.ndarray, jnp.ndarray] | None = None,
     cache: temporal_mod.FeatureCache | None = None,
     wire: str | None = None,
+    k_cap: jnp.ndarray | None = None,
+    stale_cap: jnp.ndarray | None = None,
 ):
     """rgb (..., H, W, 3) in [0,1] -> frontend features.
 
@@ -298,6 +311,23 @@ def apply_frontend(
     ``wire="codes"``). The return value becomes
     ``(CompactFeatures, FeatureCache)``.
 
+    ``k_cap`` / ``stale_cap`` (compact mode only) are the power
+    governor's per-stream DATA knobs (DESIGN.md §10) — neither changes a
+    shape, so governing never recompiles. ``k_cap`` (..., ) int32 marks
+    selection slots ``>= k_cap`` invalid (the tokens are shed: not
+    served, not converted, their patches dump like deselected ones);
+    ``stale_cap`` (..., ) int32 truncates the temporal gate's needed set
+    to its first ``stale_cap`` ranked slots (requires ``cache``). Both
+    are bitwise no-ops at ``k_cap >= k`` / ``stale_cap >= j``.
+
+    ``k_cap`` sheds TRAILING slots, so it requires a selection ranked
+    most-salient-first: the default energy top-k and the engine's
+    score top-k are; caller-supplied ``indices`` must be (as
+    ``topk_patch_indices`` emits them). ``mask``-derived selections come
+    out in ascending patch order — shedding their tail would drop
+    arbitrary patches, not the least salient — so that combination
+    raises.
+
     Returns (mode="dense"):   (features (..., P, M), mask (..., P)) with
       deselected patches zeroed — compute scales with P. Always float
       (the STE training path); ``wire`` does not apply.
@@ -316,6 +346,24 @@ def apply_frontend(
         raise ValueError(
             "the temporal cache only applies to mode='compact'; dense "
             "(training) execution must bypass it — see DESIGN.md §6"
+        )
+    if (k_cap is not None or stale_cap is not None) and mode != "compact":
+        raise ValueError(
+            "k_cap/stale_cap are governor knobs of the compact serving "
+            "path (DESIGN.md §10); dense execution has no gate to cap"
+        )
+    if stale_cap is not None and cache is None:
+        raise ValueError(
+            "stale_cap caps the temporal gate's recompute allocation; "
+            "pass a FeatureCache (there is no gate to cap without one)"
+        )
+    if k_cap is not None and mask is not None and indices is None:
+        raise ValueError(
+            "k_cap sheds trailing selection slots and therefore needs a "
+            "selection ranked most-salient-first; mask-derived indices "
+            "come out in ascending patch order (indices_from_mask), so "
+            "the shed tokens would be arbitrary — pass ranked indices "
+            "instead (see topk_patch_indices)"
         )
     k = cfg.n_active
     if precomputed is not None:
@@ -346,13 +394,27 @@ def apply_frontend(
     else:
         idx = sal_mod.topk_patch_indices(energy, k)
         valid = jnp.ones(idx.shape, bool)
+    if k_cap is not None:
+        # governor k-tier: selection indices are score-ranked, so shedding
+        # the trailing slots keeps exactly the top-k_cap tokens (data-only:
+        # same shapes, capped tokens flagged invalid and served as zero)
+        valid = valid & (jnp.arange(k) < k_cap[..., None])
 
+    n_pixels = float(cfg.image_h * cfg.image_w)
+    n_selected = jnp.sum(valid, axis=-1).astype(jnp.float32)
     scale, zero = feature_scale_zero(params, cfg)
     if cache is None:
         active = sal_mod.gather_patches(patches, idx)                # (..., k, N)
         payload = project_wire(active, weights, params, cfg, project_fn, wire)
         gain = valid.astype(jnp.float32)
-        return CompactFeatures(payload, idx, valid, energy, scale, zero, gain)
+        # ungated compact path: every served token was projected AND
+        # converted this frame — n_selected·M real ADC conversions
+        events = power_mod.frontend_frame_events(
+            n_pixels, cfg.patch.pixels_per_patch, cfg.patch.n_vectors,
+            n_selected_patches=n_selected, n_converted_patches=n_selected,
+        )
+        return CompactFeatures(
+            payload, idx, valid, energy, scale, zero, gain, events)
 
     # temporal delta gate: recompute only the stale subset of the selection,
     # scatter-merge into the held-charge cache, serve the selection from it
@@ -364,7 +426,8 @@ def apply_frontend(
         )
     tspec = cfg.temporal
     stale_idx, needed, n_stale = temporal_mod.select_stale(
-        energy, idx, cache, tspec, cfg.patch.summer, cfg.adc
+        energy, idx, cache, tspec, cfg.patch.summer, cfg.adc,
+        sel_valid=valid, cap=stale_cap,
     )
     stale_patches = sal_mod.gather_patches(patches, stale_idx)       # (..., j, N)
     new_feats = project_wire(stale_patches, weights, params, cfg, project_fn, wire)
@@ -376,7 +439,14 @@ def apply_frontend(
         temporal_mod.held_gain(cache, idx, cfg.patch.summer)
         * valid.astype(jnp.float32)
     )
-    return CompactFeatures(payload, idx, valid, energy, scale, zero, gain), cache
+    # gated path: only the n_stale recomputed patches paid for projection
+    # and conversion — holds are free (non-destructive readout, §2.1.2)
+    events = temporal_mod.gated_frame_events(
+        n_pixels, cfg.patch.pixels_per_patch, cfg.patch.n_vectors,
+        n_selected=n_selected, n_stale=n_stale.astype(jnp.float32),
+    )
+    return CompactFeatures(
+        payload, idx, valid, energy, scale, zero, gain, events), cache
 
 
 def compact_features(

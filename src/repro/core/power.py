@@ -1,32 +1,51 @@
-"""Area (Table 1) and power (§2.1.3) models of the IP2 front-end.
+"""Area (Table 1) and energy/power (§2.1.3) models of the IP2 front-end.
 
 Area — Table 1 is reproduced exactly (65 nm, 8 µm pixel, 30 fF caps, one
 OpAmp per patch, wiring estimate): 485 µm² -> 22.0 µm pitch.
 
-Power — component energy model with 65 nm-plausible constants, calibrated
-to the paper's claims:
+Energy — the front-end's power is priced from *discrete events* (DESIGN.md
+§10). :class:`EventCounts` enumerates the things that cost energy — ADC
+conversions, DAC weight loads, cap charge events, CDS samples, photodiode
+dumps — plus the two static-current windows (PWM comparators, per-patch
+OpAmps) expressed in pixel-frames / patch-frames. :class:`EnergyMeter`
+prices any such bag of events with the calibrated 65 nm
+:class:`EnergyConstants`, so ONE pricing function serves two views:
 
-  * < 30 mW per Mpix at the imager front-end, ADC+DAC included;
-  * < 60 mW for a 2 Mpix sensor @ 30 Hz capture+processing;
-  * "the majority of the power is for the ADC conversion";
-  * assumes 25 % of the patches generate an output every frame.
+* **Analytical** — :func:`steady_state_events` writes down the paper's
+  closed-form per-frame event counts (sensor of X pixels, patch N², M
+  vectors/patch, active fraction f):
 
-Event counts per second (sensor of X pixels, patch N², M vectors/patch,
-active fraction f, frame rate R):
+      ADC conversions  = (X/N²)·f·M      (only active patches convert)
+      DAC weight loads = M·N²            (weights broadcast to all patches
+                                          over shared lines)
+      cap charge events= X·f·M           (each active pixel, each vector)
+      CDS samples      = 2·X             (global shutter, clamp+sample)
+      pixel dumps      = X·(1-f)         (deselected-patch photodiode clear)
+      PWM comparators  = X·f pixel-frames  (static during compute window)
+      OpAmp on-time    = (X/N²)·f patch-frames
 
-  ADC conversions  = (X/N²)·f·M·R              (only active patches convert)
-  DAC weight loads = M·N²·R                    (weights broadcast to all
-                                                patches over shared lines)
-  cap charge events= X·f·M·R                   (each active pixel, each vector)
-  PWM comparators  = X·f static during compute (inverter-threshold ramps)
-  CDS samples      = 2·X·R                     (global shutter, clamp+sample)
-  OpAmp static     = (X/N²)·f during compute window
+  and :func:`power_report` IS the meter evaluated on those counts — the
+  closed-form report and the runtime meter cannot drift apart because
+  they are the same arithmetic by construction.
+
+* **Measured** — the runtime (``frontend.apply_frontend`` compact path,
+  the temporal gate, the serving engine) emits the events it *actually
+  executed* each frame via :func:`frontend_frame_events` (temporal holds
+  are free: non-destructive readout, paper §2.1.2), and the same meter
+  turns them into mW. `serve/governor.py` closes the loop by steering
+  the recompute budget so measured power tracks a chip budget.
+
+Calibrated to the paper's claims: < 30 mW/Mpix at the imager front-end
+(ADC+DAC included); < 60 mW for 2 Mpix @ 30 Hz; "the majority of the
+power is for the ADC conversion"; 25 % of the patches generate an output
+every frame.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+from typing import NamedTuple
 
 
 # --------------------------------------------------------------------------
@@ -63,7 +82,7 @@ class AreaBudget:
 
 
 # --------------------------------------------------------------------------
-# Power model
+# Event-metered energy model (DESIGN.md §10)
 # --------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -91,39 +110,215 @@ class SensorConfig:
     active_fraction: float = 0.25
 
 
-def power_report(cfg: SensorConfig, k: EnergyConstants = EnergyConstants()) -> dict:
-    """Per-component power (W) + totals. Excludes the digital interface
-    (the paper's figure excludes it too)."""
+class EventCounts(NamedTuple):
+    """One frame's (or one accumulation window's) energy-costing events.
+
+    A pytree of scalars or arrays (leading dims = batch/slot axes), so it
+    jits, batches, shards and donates like any other runtime state. Plain
+    counts, no energies: pricing is the :class:`EnergyMeter`'s job, so
+    recalibrating :class:`EnergyConstants` never requires re-serving.
+
+    The two ``*_frames`` fields are static-current *windows*, not events:
+    pixel-frames of PWM-comparator on-time and patch-frames of OpAmp
+    on-time. The meter converts them to joules with ``compute_duty`` and
+    the frame period — the only place wall-clock time enters.
+    """
+
+    adc_conversions: object = 0.0   # feature samples converted at the edge ADC
+    dac_loads: object = 0.0         # weight-line DAC settles (M·N² per frame)
+    cap_charges: object = 0.0       # pixel-cap charge events (active px × vectors)
+    cds_samples: object = 0.0       # CDS clamp+sample events (2 per pixel per frame)
+    pixel_dumps: object = 0.0       # deselected-patch photodiode clears
+    pwm_pixel_frames: object = 0.0  # comparator on-window, pixel·frames
+    opamp_patch_frames: object = 0.0  # OTA on-window, patch·frames
+
+    def add(self, other: "EventCounts") -> "EventCounts":
+        return EventCounts(*(a + b for a, b in zip(self, other)))
+
+    def scale(self, s) -> "EventCounts":
+        return EventCounts(*(a * s for a in self))
+
+    @classmethod
+    def zeros(cls) -> "EventCounts":
+        return cls()
+
+
+def frontend_frame_events(
+    n_pixels: float,
+    pixels_per_patch: int,
+    n_vectors: int,
+    n_selected_patches,
+    n_converted_patches,
+) -> EventCounts:
+    """The events ONE compact frontend frame executes (DESIGN.md §10).
+
+    ``n_selected_patches`` is the size of the saccade selection (valid
+    tokens — deselected patches dump their photodiodes and power down);
+    ``n_converted_patches`` is how many of those were actually
+    re-projected AND ADC-converted this frame — equal to the selection on
+    the ungated path, ``n_stale`` under the temporal gate (held patches
+    are free: the readout is non-destructive, paper §2.1.2). Both may be
+    scalars or batched arrays; the counts broadcast accordingly.
+
+    Per-frame fixed costs (selection-independent): the DAC broadcasts all
+    M·N² weight values over shared lines once per frame, and every pixel
+    CDS-samples twice (global shutter) — the photodiodes integrate light
+    regardless of gating.
+    """
+    n2 = pixels_per_patch
+    m = n_vectors
+    converted_px = n_converted_patches * n2
+    # the "+ 0·count" terms broadcast the per-frame constants up to the
+    # batch shape of the gated counts (and stay plain floats unbatched)
+    return EventCounts(
+        adc_conversions=n_converted_patches * m,
+        dac_loads=0.0 * n_converted_patches + float(m * n2),
+        cap_charges=converted_px * m,
+        cds_samples=0.0 * n_converted_patches + 2.0 * n_pixels,
+        pixel_dumps=n_pixels - n_selected_patches * n2,
+        pwm_pixel_frames=converted_px,
+        opamp_patch_frames=1.0 * n_converted_patches,
+    )
+
+
+def steady_state_events(cfg: SensorConfig) -> EventCounts:
+    """The analytical per-frame event counts of the paper's steady state:
+    a fraction ``f`` of the patches is selected AND converted every frame
+    (no temporal reuse). :func:`power_report` is the meter on exactly
+    these counts."""
     n2 = cfg.patch_h * cfg.patch_w
     n_patches = cfg.n_pixels / n2
-    f, m, r = cfg.active_fraction, cfg.n_vectors, cfg.frame_hz
-
-    adc_rate = n_patches * f * m * r
-    dac_rate = m * n2 * r
-    cap_rate = cfg.n_pixels * f * m * r
-    cds_rate = 2.0 * cfg.n_pixels * r
-    dump_rate = cfg.n_pixels * (1.0 - f) * r
-
-    # charging a cap to mean_signal_v from the rail via a current source
-    e_cap = k.cap_f * k.mean_signal_v * k.v_dd
-    e_cds = 0.5 * k.cap_f * k.v_dd ** 2
-
-    p = {
-        "adc": adc_rate * k.e_adc_j,
-        "weight_dac": dac_rate * k.e_dac_j,
-        "cap_charging": cap_rate * e_cap,
-        "pwm_comparators": cfg.n_pixels * f * k.i_pwm_comparator_a * k.v_dd * k.compute_duty,
-        "opamps": n_patches * f * k.i_opamp_a * k.v_dd * k.compute_duty,
-        "cds_sampling": cds_rate * e_cds,
-        "pixel_dump": dump_rate * k.e_pixel_dump_j,
-    }
-    total = sum(p.values())
-    p["total"] = total
-    p["mw_per_mpix"] = total * 1e3 / (cfg.n_pixels / 1e6)
-    p["adc_dominated"] = p["adc"] == max(
-        v for kk, v in p.items() if kk not in ("total", "mw_per_mpix", "adc_dominated")
+    f = cfg.active_fraction
+    return frontend_frame_events(
+        n_pixels=cfg.n_pixels,
+        pixels_per_patch=n2,
+        n_vectors=cfg.n_vectors,
+        n_selected_patches=n_patches * f,
+        n_converted_patches=n_patches * f,
     )
-    return p
+
+
+class PowerBreakdown(NamedTuple):
+    """Priced events: per-component watts + their sum. ``components`` and
+    the total are SEPARATE structures (never mixed into one dict), so new
+    components can be added without any name-filtering at the consumers."""
+
+    components: dict            # name -> W (scalars or arrays, batched ok)
+    total_w: object             # sum of components
+
+    def share(self) -> dict:
+        return {k: v / self.total_w for k, v in self.components.items()}
+
+    @property
+    def dominant(self) -> str:
+        """Largest component by scalar value (reports/tests; call on
+        unbatched breakdowns)."""
+        return max(self.components, key=lambda k: float(self.components[k]))
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyMeter:
+    """Prices :class:`EventCounts` with :class:`EnergyConstants`.
+
+    Pure arithmetic over the event-count leaves — works identically on
+    python floats (analytical reports) and jnp arrays (runtime meters
+    inside a jitted serving step), so the closed-form and measured views
+    share one pricing function by construction.
+    """
+
+    k: EnergyConstants = EnergyConstants()
+
+    def energy_j(self, ev: EventCounts, frame_hz: float) -> dict:
+        """Per-component joules for one bag of events. ``frame_hz`` only
+        converts the static-current windows (pixel-frames / patch-frames)
+        into on-seconds; the discrete events are rate-independent."""
+        k = self.k
+        # charging a cap to mean_signal_v from the rail via a current source
+        e_cap = k.cap_f * k.mean_signal_v * k.v_dd
+        e_cds = 0.5 * k.cap_f * k.v_dd ** 2
+        window_s = k.compute_duty / frame_hz
+        return {
+            "adc": ev.adc_conversions * k.e_adc_j,
+            "weight_dac": ev.dac_loads * k.e_dac_j,
+            "cap_charging": ev.cap_charges * e_cap,
+            "pwm_comparators": ev.pwm_pixel_frames
+            * k.i_pwm_comparator_a * k.v_dd * window_s,
+            "opamps": ev.opamp_patch_frames * k.i_opamp_a * k.v_dd * window_s,
+            "cds_sampling": ev.cds_samples * e_cds,
+            "pixel_dump": ev.pixel_dumps * k.e_pixel_dump_j,
+        }
+
+    def power_w(
+        self, ev: EventCounts, frame_hz: float, n_frames: float = 1.0
+    ) -> PowerBreakdown:
+        """Average power of ``ev`` spread over ``n_frames`` frames at
+        ``frame_hz`` (per-frame events with the default ``n_frames=1``:
+        instantaneous frame power)."""
+        e = self.energy_j(ev, frame_hz)
+        scale = frame_hz / n_frames
+        comp = {name: v * scale for name, v in e.items()}
+        total = sum(comp.values())
+        return PowerBreakdown(comp, total)
+
+    def power_mw(self, ev: EventCounts, frame_hz: float, n_frames: float = 1.0):
+        """Total milliwatts only — the governor's hot-path quantity."""
+        return self.power_w(ev, frame_hz, n_frames).total_w * 1e3
+
+    def slot_recompute_power_w(
+        self, pixels_per_patch: int, n_vectors: int, frame_hz: float
+    ) -> float:
+        """Marginal power of re-projecting + converting ONE extra patch
+        every frame — the governor's control gain (budget / this = the
+        affordable per-frame recompute allocation)."""
+        ev = EventCounts(
+            adc_conversions=float(n_vectors),
+            cap_charges=float(pixels_per_patch * n_vectors),
+            pwm_pixel_frames=float(pixels_per_patch),
+            opamp_patch_frames=1.0,
+        )
+        return self.power_w(ev, frame_hz).total_w
+
+
+class PowerReport(NamedTuple):
+    """The analytical front-end power report (meter × steady-state
+    events): components and totals in separate structures. ``share`` and
+    ``dominant`` delegate to :class:`PowerBreakdown` so the two views
+    cannot drift."""
+
+    components: dict            # name -> W
+    total_w: float
+    mw_per_mpix: float
+
+    def _breakdown(self) -> PowerBreakdown:
+        return PowerBreakdown(self.components, self.total_w)
+
+    def share(self) -> dict:
+        return self._breakdown().share()
+
+    @property
+    def dominant(self) -> str:
+        return self._breakdown().dominant
+
+    @property
+    def adc_dominated(self) -> bool:
+        return self.dominant == "adc"
+
+
+def power_report(
+    cfg: SensorConfig, k: EnergyConstants = EnergyConstants()
+) -> PowerReport:
+    """Per-component front-end power + totals. DEFINED as the
+    :class:`EnergyMeter` evaluated on the analytical steady-state event
+    counts (:func:`steady_state_events`), so the closed-form report and
+    the runtime event meter agree exactly by construction (asserted in
+    tests/test_power.py). Excludes the digital interface (the paper's
+    figure excludes it too)."""
+    bd = EnergyMeter(k).power_w(steady_state_events(cfg), cfg.frame_hz)
+    return PowerReport(
+        components=bd.components,
+        total_w=bd.total_w,
+        mw_per_mpix=bd.total_w * 1e3 / (cfg.n_pixels / 1e6),
+    )
 
 
 def data_reduction(cfg: SensorConfig, vs_rgb: bool = False) -> float:

@@ -205,6 +205,8 @@ def select_stale(
     spec: TemporalSpec,
     summer: sc.SummerSpec,
     adc: adc_mod.ADCSpec,
+    sel_valid: jnp.ndarray | None = None,
+    cap: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """The gate: which of this frame's k selected patches to recompute.
 
@@ -213,6 +215,18 @@ def select_stale(
       indices: (..., k) the saccade selection (exactly-k patch indices).
       cache: held state from the previous frame.
       spec / summer / adc: static gate + droop configuration.
+      sel_valid: optional (..., k) bool — False marks selection slots
+        that will not be served (filler slots, or tokens shed by the
+        power governor's k-tier, DESIGN.md §10); they never claim a
+        recompute slot or an ADC conversion. All-True is a bitwise
+        no-op.
+      cap: optional (...,) int32 — the power governor's per-frame
+        recompute allocation (a DATA value, not a shape: the static j
+        slots are kept and the needed mask is truncated to the first
+        ``cap`` ranked slots, so governing never recompiles). Slots past
+        the cap behave exactly like budget-deferred overflow: they keep
+        serving held charge and age toward a future slot. ``cap >= j``
+        is a bitwise no-op.
 
     Returns:
       ``(stale_idx, needed, n_stale)``:
@@ -222,8 +236,9 @@ def select_stale(
         (False = idle spare slot: its projection output is never
         converted or merged — see :func:`refresh`);
       n_stale (..., ) int32 — how many of the j slots were genuinely
-        stale (the recompute-fraction numerator; overflow staleness
-        beyond j is deferred, not counted).
+        stale (the recompute-fraction numerator == real ADC conversions;
+        overflow staleness beyond j or past ``cap`` is deferred, not
+        counted).
     """
     k = indices.shape[-1]
     j = spec.budget(k)
@@ -236,6 +251,8 @@ def select_stale(
 
     delta = jnp.abs(e_now - e_ref)
     stale = (~valid) | (delta >= spec.delta_threshold) | (age >= max_hold)
+    if sel_valid is not None:
+        stale = stale & sel_valid
 
     # Rank: stale patches strictly first; among stale, hold age plus the
     # row-normalized delta — age must take part (and eventually dominate)
@@ -254,6 +271,10 @@ def select_stale(
     _, pos = jax.lax.top_k(score, j)                   # (..., j) positions in [0, k)
     stale_idx = _take(indices, pos)
     needed = _take(stale, pos)
+    if cap is not None:
+        # governed allocation: stale-first ranking means truncating to the
+        # first cap slots sheds exactly the lowest-priority staleness
+        needed = needed & (jnp.arange(j) < cap[..., None])
     n_stale = jnp.sum(needed, axis=-1).astype(jnp.int32)
     return stale_idx, needed, n_stale
 
@@ -313,6 +334,33 @@ def held_gain(
     age = _take(cache.age, indices).astype(jnp.float32)
     d = jnp.float32(summer.droop_factor())
     return jnp.power(d, age) * _take(cache.valid, indices).astype(jnp.float32)
+
+
+def gated_frame_events(
+    n_pixels: float,
+    pixels_per_patch: int,
+    n_vectors: int,
+    n_selected: jnp.ndarray,
+    n_stale: jnp.ndarray,
+):
+    """The energy-costing events ONE gated frame executes (DESIGN.md §10):
+    only the ``n_stale`` recomputed patches pay for projection (cap
+    charges, PWM/OpAmp windows) and conversion (ADC) — *holds are free*
+    by the paper's non-destructive-readout argument (§2.1.2): serving
+    held charge moves no charge and converts nothing. Spare idle slots
+    contribute nothing either (their output is never converted or
+    merged, see :func:`refresh`). The per-frame fixed costs (CDS, DAC
+    broadcast, deselected-patch dumps) are selection-scale, not
+    staleness-scale."""
+    from repro.core import power as power_mod
+
+    return power_mod.frontend_frame_events(
+        n_pixels=n_pixels,
+        pixels_per_patch=pixels_per_patch,
+        n_vectors=n_vectors,
+        n_selected_patches=n_selected,
+        n_converted_patches=n_stale,
+    )
 
 
 def held_features(

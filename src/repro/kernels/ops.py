@@ -11,6 +11,15 @@ Wire format (DESIGN.md §9): both projection wrappers accept
 directly from the fused epilogue — the int8 payload the hardware streams —
 instead of dequantized float32. The matching ``(scale, zero)`` metadata is
 static, from :func:`repro.core.adc.readout_scale_zero`.
+
+Energy accounting (DESIGN.md §10): the conversion count a wrapper's
+fused-ADC epilogue performs is :func:`fused_adc_conversions` — M per
+REAL input row. MXU padding rows (``block_p``/``block_r`` round-up) are a
+simulator artifact: their epilogue outputs are sliced off before the
+wrapper returns and the modeled hardware never converts them, so they are
+never priced. Adapters expose the same count via ``fn.frame_conversions``
+so the frontend's event ledger and the kernel's emitted payload cannot
+drift (asserted in tests/test_power.py).
 """
 
 from __future__ import annotations
@@ -42,6 +51,17 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0) -> jnp.ndarray:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths, constant_values=value)
+
+
+def fused_adc_conversions(n_rows, spec: proj_mod.PatchSpec, adc=None):
+    """ADC conversions one projection call performs for ``n_rows`` real
+    patch rows: M per row when a fused ADC epilogue runs (``adc`` given),
+    0 otherwise (the caller's own readout converts, and must count).
+    ``n_rows`` may be a traced array — the count is data, not shape.
+    Padding rows never count (see module docstring)."""
+    if adc is None:
+        return 0 * n_rows
+    return n_rows * spec.n_vectors
 
 
 def kernel_params_from_spec(
@@ -116,6 +136,8 @@ def ip2_project_fn(spec: proj_mod.PatchSpec, **kw):
     def fn(patches, weights, _spec):
         return ip2_project(patches, weights, _spec, adc=None, **kw)
 
+    # no fused ADC: conversions happen in the caller's readout, not here
+    fn.frame_conversions = lambda n_rows: fused_adc_conversions(n_rows, spec)
     return fn
 
 
@@ -130,6 +152,9 @@ def ip2_codes_fn(spec: proj_mod.PatchSpec, adc, **kw):
         return ip2_project(patches, weights, _spec, adc=adc, codes=True, **kw)
 
     fn.emits_codes = True
+    # the fused epilogue converts every real row's M outputs exactly once
+    fn.frame_conversions = lambda n_rows: fused_adc_conversions(
+        n_rows, spec, adc)
     return fn
 
 

@@ -214,6 +214,8 @@ def vit_forward_compact(
     precomputed=None,
     cache=None,
     wire: str | None = None,
+    k_cap: jnp.ndarray | None = None,
+    stale_cap: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, dict]:
     """Compact path: frontend projects only the k selected patches, the
     backend attends over exactly those k tokens (index-looked-up positional
@@ -235,9 +237,18 @@ def vit_forward_compact(
     temporal delta gate: only the stale subset of the selection is
     re-projected/converted, held codes serve the rest (DESIGN.md §6).
 
+    ``k_cap`` / ``stale_cap`` are the power governor's per-stream data
+    knobs (DESIGN.md §10), forwarded to the frontend: shed tokens past
+    ``k_cap`` (they leave attention via the valid mask) and truncate the
+    temporal recompute allocation to ``stale_cap`` slots. Data, not
+    shape — governed and ungoverned steps share one compilation.
+
     Returns (logits (B, n_classes), aux) with aux:
       ``indices`` (B, k)  — the patches that were ADC-converted;
       ``valid``   (B, k)  — False only on filler slots (< k active);
+      ``events``          — this frame's executed energy-event ledger
+        (:class:`repro.core.power.EventCounts`, (B,) leaves): what the
+        frontend actually spent — price with ``EnergyMeter`` (§10);
       ``saliency``(B, P)  — backend attention scattered back onto the patch
         grid (unobserved patches score 0): frame t+1's selection signal;
       ``energy``  (B, P)  — the in-pixel patch-energy proxy (free from the
@@ -251,6 +262,7 @@ def vit_forward_compact(
         params["ip2"], rgb, cfg.frontend,
         mask=mask, indices=indices, mode="compact", project_fn=project_fn,
         precomputed=precomputed, cache=cache, wire=wire,
+        k_cap=k_cap, stale_cap=stale_cap,
     )
     new_cache = None
     if cache is not None:
@@ -267,7 +279,7 @@ def vit_forward_compact(
     ).at[b, cf.indices].max(received)
     aux = {
         "indices": cf.indices, "valid": cf.valid,
-        "saliency": saliency, "energy": cf.energy,
+        "saliency": saliency, "energy": cf.energy, "events": cf.events,
     }
     if new_cache is not None:
         aux["cache"] = new_cache

@@ -33,6 +33,24 @@ jitted step:
   buffers are donated, so steady-state serving is allocation-free on
   accelerators that support donation.
 
+* **Energy metering** (DESIGN.md §10). Every step accumulates each
+  slot's executed energy events (``aux["events"]`` from the compact
+  forward: ADC conversions, cap charges, DAC loads, CDS, comparator and
+  OpAmp windows) into per-slot cumulative meters in
+  :class:`StreamState` — slot-major counts, donated and sharded like
+  the rest of the state. ``engine.power_mw(sid)`` /
+  ``engine.fleet_power_mw()`` price them with the calibrated
+  :class:`repro.core.power.EnergyMeter`, so serving reports MEASURED
+  frontend milliwatts, not the analytical steady-state assumption.
+
+* **Power governor** (``governor=GovernorSpec(...)``, requires
+  ``temporal=True``; `serve/governor.py`). Closes the loop on a chip
+  mW budget: per-slot data knobs (recompute cap ``j_cap``, token tier
+  ``k_eff``) are updated inside the jitted step from this frame's
+  measured events and applied to the next frame's gate. Data, not
+  shapes — a governed engine still compiles exactly once, and a slack
+  budget is a bitwise no-op.
+
 Use the engine when streams come and go or when one host serves many
 cameras; use bare ``make_saccade_step`` for a single fixed-batch stream
 (training-style evaluation, co-design sweeps).
@@ -49,7 +67,9 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.power import EnergyMeter, EventCounts
 from repro.core.temporal import FeatureCache, init_feature_cache
+from repro.serve import governor as gov_mod
 from repro.serve.serve_step import saccade_scores
 
 
@@ -63,6 +83,18 @@ class StreamState(NamedTuple):
     (DESIGN.md §9) — so per-slot held state is 4x smaller than a float32
     cache; every mutation (step / admit wipe / freeze) preserves that
     dtype.
+
+    ``events_last`` / ``events_mean`` are the per-slot energy meters
+    (DESIGN.md §10): the events the slot's frontend executed on its last
+    served frame, and the running per-frame MEAN since admit (inactive
+    slots accrue nothing). The cumulative meter is a mean, not a sum, on
+    purpose: counts stay at per-frame magnitude, so a week-long stream
+    cannot saturate the float32 accumulator the way a monotone total
+    would (increment < ulp ⇒ frozen meter); totals are derived as
+    mean × frames at read time. Counts only — pricing happens at read
+    time with the engine's :class:`EnergyMeter`, so recalibrating
+    constants never touches device state. ``controls`` is the per-slot
+    governor state (None unless the engine is governed).
     """
 
     indices: jnp.ndarray    # (S, k) int32 — next frame's patch selection
@@ -70,18 +102,32 @@ class StreamState(NamedTuple):
     frame_age: jnp.ndarray  # (S,) int32 — frames served since admit (0 = bootstrap)
     active: jnp.ndarray     # (S,) bool — slot occupied
     cache: FeatureCache | None = None   # per-slot temporal cache (temporal mode)
+    events_last: EventCounts = EventCounts()    # (S,) leaves — last frame
+    events_mean: EventCounts = EventCounts()    # (S,) leaves — mean/frame
+    controls: gov_mod.GovernorControls | None = None  # governed mode only
 
 
-def init_stream_state(cfg, capacity: int, temporal: bool = False) -> StreamState:
+def _zero_events(capacity: int) -> EventCounts:
+    return EventCounts(*(jnp.zeros((capacity,), jnp.float32)
+                         for _ in EventCounts._fields))
+
+
+def init_stream_state(
+    cfg, capacity: int, temporal: bool = False, governed: bool = False
+) -> StreamState:
     """All slots free; indices are a placeholder (age 0 bootstraps in-step)."""
     k = cfg.frontend.n_active
     p = cfg.frontend.n_patches
+    j_max = cfg.frontend.temporal.budget(k)
     return StreamState(
         indices=jnp.tile(jnp.arange(k, dtype=jnp.int32), (capacity, 1)),
         ema=jnp.zeros((capacity, p), jnp.float32),
         frame_age=jnp.zeros((capacity,), jnp.int32),
         active=jnp.zeros((capacity,), bool),
         cache=init_feature_cache(cfg.frontend, (capacity,)) if temporal else None,
+        events_last=_zero_events(capacity),
+        events_mean=_zero_events(capacity),
+        controls=gov_mod.init_controls(capacity, j_max) if governed else None,
     )
 
 
@@ -96,7 +142,10 @@ def _freeze_rows(act: jnp.ndarray, new, old):
 
 
 def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
-                     project_fn=None, temporal: bool = False):
+                     project_fn=None, temporal: bool = False,
+                     governor: "gov_mod.GovernorSpec | None" = None,
+                     meter: EnergyMeter = EnergyMeter(),
+                     frame_hz: float = 30.0):
     """Batched slot step: (params, frames (S,H,W,3), state) -> (logits, state).
 
     Per slot this is exactly one ``make_saccade_step`` frame — same compact
@@ -111,6 +160,13 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
     fresh slot's cache rows are invalidated in-step (belt to the admit
     reset, so a recycled slot can never serve its previous occupant's
     held features).
+
+    Always metered (DESIGN.md §10): each slot's executed events land in
+    ``state.events_last`` / fold into the running mean ``state.events_mean``
+    (inactive slots accrue nothing). With ``governor`` given, the
+    per-slot control knobs in ``state.controls`` are applied to this
+    frame's gate (``stale_cap`` / ``k_cap`` — data, not shapes) and
+    updated from this frame's measured events for the next.
     """
     from repro.core import frontend as fe
     from repro.core import saliency as sal
@@ -118,6 +174,8 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
 
     fcfg = cfg.frontend
     k = fcfg.n_active
+    j_max = fcfg.temporal.budget(k)
+    n_pixels = float(fcfg.image_h * fcfg.image_w)
 
     def step(params, frames, state: StreamState):
         # optics/mosaic/CDS once; forwarded to the compact forward below
@@ -131,10 +189,14 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
             cache = state.cache._replace(
                 valid=state.cache.valid & ~fresh[:, None]
             )
+        k_cap = stale_cap = None
+        if governor is not None:
+            k_cap = gov_mod.tier_k_eff(governor, state.controls.tier, k)
+            stale_cap = state.controls.j_cap
         logits, aux = vit_forward_compact(
             params, frames, cfg, indices=indices,
             project_fn=project_fn, precomputed=(patches, weights),
-            cache=cache,
+            cache=cache, k_cap=k_cap, stale_cap=stale_cap,
         )
         scores = saccade_scores(aux, explore)
         ema = jnp.where(
@@ -144,6 +206,24 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
         next_idx = sal.topk_patch_indices(ema, k)
 
         act = state.active
+        # energy meters: only occupied slots serve frames and spend events.
+        # the cumulative meter is a RUNNING MEAN (Welford step over the
+        # frames served since admit): per-frame magnitude, so long-lived
+        # streams never freeze a float32 accumulator (see StreamState)
+        actf = act.astype(jnp.float32)
+        ev_last = EventCounts(*(e * actf for e in aux["events"]))
+        n_served = (state.frame_age + 1).astype(jnp.float32)     # incl. this
+        ev_mean = EventCounts(*(
+            jnp.where(act, m + (e - m) / n_served, m)
+            for m, e in zip(state.events_mean, ev_last)
+        ))
+        controls = None
+        if governor is not None:
+            controls = gov_mod.control_update(
+                governor, state.controls, ev_last, act, meter, frame_hz,
+                n_pixels, fcfg.patch.pixels_per_patch, fcfg.patch.n_vectors,
+                j_max, k,
+            )
         new_state = StreamState(
             indices=jnp.where(act[:, None], next_idx, state.indices),
             ema=jnp.where(act[:, None], ema, state.ema),
@@ -151,6 +231,9 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
             active=act,
             cache=(_freeze_rows(act, aux["cache"], state.cache)
                    if temporal else None),
+            events_last=ev_last,
+            events_mean=ev_mean,
+            controls=controls,
         )
         logits = jnp.where(act[:, None], logits, 0.0)
         return logits, new_state
@@ -158,7 +241,7 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
     return step
 
 
-def _make_admit(capacity: int, k: int):
+def _make_admit(capacity: int, k: int, j_max: int):
     """Row reset with a *traced* slot scalar — one compile for any slot."""
 
     def admit(state: StreamState, slot) -> StreamState:
@@ -178,6 +261,13 @@ def _make_admit(capacity: int, k: int):
                 valid=cache.valid & ~hit[:, None],
                 n_stale=jnp.where(hit, 0, cache.n_stale),
             )
+        wiped = EventCounts(*(jnp.where(hit, 0.0, e)
+                              for e in state.events_last))
+        wiped_mean = EventCounts(*(jnp.where(hit, 0.0, e)
+                                   for e in state.events_mean))
+        controls = state.controls
+        if controls is not None:
+            controls = gov_mod.reset_rows(controls, hit, j_max)
         return StreamState(
             indices=jnp.where(hit[:, None],
                               jnp.arange(k, dtype=jnp.int32)[None], state.indices),
@@ -185,6 +275,9 @@ def _make_admit(capacity: int, k: int):
             frame_age=jnp.where(hit, 0, state.frame_age),
             active=state.active | hit,
             cache=cache,
+            events_last=wiped,
+            events_mean=wiped_mean,
+            controls=controls,
         )
 
     return admit
@@ -229,24 +322,47 @@ class SaccadeEngine:
         ``state.cache``; only the stale subset of each frame's selection
         is re-projected/ADC-converted (``cfg.frontend.temporal`` sets the
         threshold/budget), and admit wipes the recycled slot's cache row.
+      meter / frame_hz: the :class:`EnergyMeter` pricing the per-slot
+        event meters and the sensor frame rate it prices at (DESIGN.md
+        §10). Metering is always on; these only affect the readout.
+      governor: a :class:`repro.serve.governor.GovernorSpec` — closes
+        the loop on a chip mW budget (requires ``temporal=True``: the
+        recompute cap is a knob of the temporal gate). Budget shares are
+        priority-weighted over admitted streams (``admit(priority=...)``)
+        and reallocated on every admit/evict (data-only row writes).
     """
 
     def __init__(self, cfg, params, capacity: int = 8, *, mesh=None,
                  axis: str = "data", explore: float = 0.1,
                  ema_decay: float = 0.0, project_fn=None,
-                 temporal: bool = False):
+                 temporal: bool = False,
+                 meter: EnergyMeter = EnergyMeter(),
+                 frame_hz: float = 30.0,
+                 governor: "gov_mod.GovernorSpec | None" = None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if governor is not None and not temporal:
+            raise ValueError(
+                "governor requires temporal=True: the recompute cap "
+                "governs the temporal gate's per-frame allocation "
+                "(DESIGN.md §10)"
+            )
         self.cfg = cfg
         self.params = params
         self.capacity = capacity
         self.mesh = mesh
         self.temporal = temporal
+        self.meter = meter
+        self.frame_hz = frame_hz
+        self.governor = governor
+        self._priority: dict[Hashable, float] = {}
         self._slots: list[Hashable | None] = [None] * capacity
         self._n_traces = 0
 
         fn = make_engine_step(cfg, explore=explore, ema_decay=ema_decay,
-                              project_fn=project_fn, temporal=temporal)
+                              project_fn=project_fn, temporal=temporal,
+                              governor=governor, meter=meter,
+                              frame_hz=frame_hz)
 
         self._slot_spec = P()
         if mesh is not None:
@@ -270,12 +386,19 @@ class SaccadeEngine:
             self._n_traces += 1
             return fn(params, frames, state)
 
+        k = cfg.frontend.n_active
         self._step_fn = jax.jit(counted, donate_argnums=(2,))
         self._admit_fn = jax.jit(
-            _make_admit(capacity, cfg.frontend.n_active), donate_argnums=(0,))
+            _make_admit(capacity, k, cfg.frontend.temporal.budget(k)),
+            donate_argnums=(0,))
         self._evict_fn = jax.jit(_make_evict(capacity), donate_argnums=(0,))
+        self._set_budgets_fn = jax.jit(
+            lambda state, b: state._replace(
+                controls=state.controls._replace(budget_mw=b)),
+            donate_argnums=(0,))
 
-        state = init_stream_state(cfg, capacity, temporal=temporal)
+        state = init_stream_state(cfg, capacity, temporal=temporal,
+                                  governed=governor is not None)
         if mesh is not None and self._slot_spec != P():
             sh = NamedSharding(mesh, self._slot_spec)
             state = jax.tree.map(lambda x: jax.device_put(x, sh), state)
@@ -300,11 +423,15 @@ class SaccadeEngine:
         except ValueError:
             raise KeyError(f"stream {stream_id!r} not admitted") from None
 
-    def admit(self, stream_id: Hashable) -> int:
+    def admit(self, stream_id: Hashable, priority: float = 1.0) -> int:
         """Claim a free slot for a new stream; its first frame bootstraps
-        from the in-pixel energy proxy inside the next step() call."""
+        from the in-pixel energy proxy inside the next step() call.
+        ``priority`` weights the stream's share of a governed engine's
+        power budget (ignored ungoverned)."""
         if stream_id in self._slots:
             raise ValueError(f"stream {stream_id!r} already admitted")
+        if priority <= 0:
+            raise ValueError(f"priority must be > 0, got {priority}")
         try:
             slot = self._slots.index(None)
         except ValueError:
@@ -312,13 +439,30 @@ class SaccadeEngine:
                 f"engine at capacity ({self.capacity}); evict a stream first"
             ) from None
         self._slots[slot] = stream_id
+        self._priority[stream_id] = float(priority)
         self.state = self._admit_fn(self.state, jnp.int32(slot))
+        self._reallocate_budgets()
         return slot
 
     def evict(self, stream_id: Hashable) -> None:
         slot = self.slot_of(stream_id)
         self._slots[slot] = None
+        self._priority.pop(stream_id, None)
         self.state = self._evict_fn(self.state, jnp.int32(slot))
+        self._reallocate_budgets()
+
+    def _reallocate_budgets(self) -> None:
+        """Host-side priority-weighted budget split (DESIGN.md §10): a
+        data-only row rewrite on the governed controls — never a
+        recompile, never a shape change."""
+        if self.governor is None:
+            return
+        w = np.zeros((self.capacity,), np.float64)
+        for slot, sid in enumerate(self._slots):
+            if sid is not None:
+                w[slot] = self._priority[sid]
+        budgets = gov_mod.allocate_budgets(self.governor, w)
+        self.state = self._set_budgets_fn(self.state, jnp.asarray(budgets))
 
     # ---- serving -------------------------------------------------------
     def step(self, frames: Mapping[Hashable, Any]) -> dict[Hashable, np.ndarray]:
@@ -359,6 +503,80 @@ class SaccadeEngine:
                 f"stream {stream_id!r} has not served a frame yet"
             )
         return float(self.state.cache.n_stale[slot]) / self.cfg.frontend.n_active
+
+    # ---- energy metering (DESIGN.md §10) -------------------------------
+    def events(self, stream_id: Hashable, window: str = "last") -> EventCounts:
+        """This stream's executed energy events: ``window="last"`` — the
+        last served frame; ``"mean"`` — the per-frame mean since admit;
+        ``"total"`` — cumulative since admit (derived as mean × frames in
+        float64 at read time; the device meter stays at per-frame
+        magnitude so it cannot saturate, see :class:`StreamState`)."""
+        if window not in ("last", "mean", "total"):
+            raise ValueError(
+                f"window must be 'last', 'mean' or 'total', got {window!r}")
+        slot = self.slot_of(stream_id)
+        src = (self.state.events_last if window == "last"
+               else self.state.events_mean)
+        # one batched device->host fetch, not one sync per count leaf
+        host = jax.device_get(src)
+        ev = EventCounts(*(float(e[slot]) for e in host))
+        if window == "total":
+            return ev.scale(float(self.state.frame_age[slot]))
+        return ev
+
+    def power_mw(self, stream_id: Hashable, window: str = "last") -> float:
+        """MEASURED frontend power of this stream in mW, priced from its
+        executed events by the engine's meter: ``window="last"`` — the
+        last served frame's instantaneous power; ``"mean"`` — the average
+        over every frame served since admit."""
+        if window not in ("last", "mean"):
+            raise ValueError(f"window must be 'last' or 'mean', got {window!r}")
+        if window == "mean" and int(
+                self.state.frame_age[self.slot_of(stream_id)]) == 0:
+            raise RuntimeError(
+                f"stream {stream_id!r} has not served a frame yet")
+        return float(self.meter.power_mw(
+            self.events(stream_id, window), self.frame_hz))
+
+    def fleet_power_mw(self, window: str = "last") -> float:
+        """Measured frontend power summed over all admitted streams —
+        the quantity a governed engine holds against its chip budget.
+        Streams admitted but not yet served carry zero events and are
+        skipped (they have no frame to average)."""
+        if window not in ("last", "mean"):
+            raise ValueError(f"window must be 'last' or 'mean', got {window!r}")
+        src = (self.state.events_last if window == "last"
+               else self.state.events_mean)
+        # one batched fetch for the whole fleet, priced host-side
+        host, ages = jax.device_get((src, self.state.frame_age))
+        total = 0.0
+        for sid in self.stream_ids:
+            slot = self.slot_of(sid)
+            if ages[slot] == 0:
+                continue
+            total += float(self.meter.power_mw(
+                EventCounts(*(float(e[slot]) for e in host)), self.frame_hz))
+        return total
+
+    def energy_report(self, stream_id: Hashable) -> dict:
+        """Per-component joules this stream has spent since admit."""
+        return self.meter.energy_j(
+            self.events(stream_id, "total"), self.frame_hz)
+
+    def recompute_cap(self, stream_id: Hashable) -> int:
+        """The governor's current per-frame recompute allocation for this
+        stream (governed engines only)."""
+        if self.governor is None:
+            raise RuntimeError("engine was built without a governor")
+        return int(self.state.controls.j_cap[self.slot_of(stream_id)])
+
+    def k_tier(self, stream_id: Hashable) -> int:
+        """The governor's current active-token count for this stream
+        (k_eff of its tier; governed engines only)."""
+        if self.governor is None:
+            raise RuntimeError("engine was built without a governor")
+        tier = int(self.state.controls.tier[self.slot_of(stream_id)])
+        return self.governor.tier_tokens(self.cfg.frontend.n_active)[tier]
 
     def gaze(self, stream_id: Hashable) -> np.ndarray:
         """The (k,) patch indices this stream will ADC-convert next frame.

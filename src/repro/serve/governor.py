@@ -1,0 +1,257 @@
+"""Closed-loop power governor for the saccadic serving engine (DESIGN.md
+§10).
+
+The paper's <30 mW/MP figure assumes 25 % of the patches convert every
+frame — an *open-loop* assumption. Real scenes don't cooperate: a
+full-motion stream demands k conversions per frame, a static one almost
+none. This module closes the loop: given a chip power budget in mW, it
+steers each stream's per-frame recompute allocation (and, under severe
+budgets, its active-token tier) so the *measured* frontend power — priced
+from the events the runtime actually executed (`core/power.py`) — tracks
+the budget across motion regimes.
+
+Everything is STATIC-SHAPE: the two knobs are data, not shapes —
+
+* ``j_cap`` truncates the temporal gate's needed set to its first
+  ``j_cap`` ranked slots (`temporal.select_stale(cap=...)`); slots past
+  the cap behave exactly like budget-deferred overflow and age toward a
+  future slot (starvation-free by the gate's own ranking).
+* ``k_eff`` (a tier from ``GovernorSpec.k_tiers``) sheds the
+  lowest-scoring selection slots via the valid mask
+  (`apply_frontend(k_cap=...)`): shed tokens are not served, not
+  converted, and their patches dump like deselected ones.
+
+— so a governed engine compiles exactly once, same as an ungoverned one,
+and a slack budget is a bitwise no-op (asserted in tests/test_governor.py).
+
+**Control law** (`control_update`, runs inside the jitted engine step,
+once per slot — per-slot only, no cross-slot collectives, so the slot
+axis still shards cleanly):
+
+1. *Feedforward target.* The meter makes the plant model trivial:
+   measured power is ``fixed(k_eff) + n_stale · slot_mw`` where
+   ``slot_mw`` is the marginal power of one recompute slot
+   (`EnergyMeter.slot_recompute_power_w`) and ``fixed`` prices the
+   per-frame events that gating cannot avoid (CDS, DAC broadcast,
+   dumps). The affordable allocation is therefore
+   ``floor((budget_i - fixed) / slot_mw)``, clipped to
+   ``[floor, j_max]`` — the starvation floor beats the power budget:
+   a stream is degraded, never stalled.
+2. *Hysteresis.* The cap moves toward the target by at most ``slew``
+   slots per frame, and holds whenever measured power sits inside the
+   ``±deadband`` band around the budget with the cap already at or
+   below target — demand flicker around a tier boundary cannot make
+   the knobs oscillate.
+3. *k tier.* Served-token staleness is bounded by requiring every
+   served token a refresh slot within ``refresh_horizon`` frames:
+   the tier target is the largest tier with
+   ``tier_k <= j_cap · refresh_horizon``; tiers move one step per
+   frame, and tiering UP (more tokens) additionally requires the
+   stricter ``(1 - deadband)`` margin so a boundary demand cannot
+   flip the tier every frame.
+
+Per-stream budget shares are allocated HOST-side
+(:func:`allocate_budgets`, priority-weighted over the admitted streams)
+and written into the controls as data on admit/evict — fleet-level
+tracking is then the sum of per-slot tracking, with no collective inside
+the step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.power import EnergyMeter, EventCounts, frontend_frame_events
+
+
+@dataclasses.dataclass(frozen=True)
+class GovernorSpec:
+    """Static configuration of the power governor.
+
+    budget_mw: chip budget for the fleet's imager frontends, split over
+      admitted streams by :func:`allocate_budgets`.
+    floor: starvation-free minimum recompute slots per stream per frame
+      (a governed stream is degraded, never stalled — droop refresh and
+      novelty always make progress).
+    deadband: hysteresis band as a fraction of the per-stream budget;
+      inside it the cap holds.
+    slew: max recompute-cap slots moved per frame (rate limit).
+    k_tiers: active-token tiers as fractions of k, best first. Tier 0
+      must be 1.0 (the ungoverned token count — slack budgets are a
+      bitwise no-op).
+    refresh_horizon: bound on served-token staleness — the tier target
+      keeps ``k_eff <= j_cap · refresh_horizon`` so every served token
+      wins a refresh slot within that many frames.
+    """
+
+    budget_mw: float
+    floor: int = 1
+    deadband: float = 0.05
+    slew: int = 2
+    k_tiers: tuple[float, ...] = (1.0, 0.75, 0.5, 0.25)
+    refresh_horizon: int = 8
+
+    def __post_init__(self):
+        if self.budget_mw <= 0:
+            raise ValueError(f"budget_mw must be > 0, got {self.budget_mw}")
+        if self.floor < 1:
+            raise ValueError(f"floor must be >= 1, got {self.floor}")
+        if self.k_tiers[0] != 1.0:
+            raise ValueError(
+                f"k_tiers[0] must be 1.0 (the ungoverned tier), got "
+                f"{self.k_tiers}"
+            )
+        if list(self.k_tiers) != sorted(self.k_tiers, reverse=True):
+            raise ValueError(f"k_tiers must be descending, got {self.k_tiers}")
+
+    def tier_tokens(self, k: int) -> tuple[int, ...]:
+        """The k_eff value of each tier for a k-token selection."""
+        return tuple(max(1, int(round(t * k))) for t in self.k_tiers)
+
+
+class GovernorControls(NamedTuple):
+    """Per-slot governor state; slot-major, shards/donates with the rest
+    of ``StreamState`` (DESIGN.md §10). All DATA — no field ever changes
+    a compiled shape."""
+
+    j_cap: jnp.ndarray      # (S,) int32 — recompute slots allowed per frame
+    tier: jnp.ndarray       # (S,) int32 — index into GovernorSpec.k_tiers
+    budget_mw: jnp.ndarray  # (S,) float32 — host-allocated budget share
+
+
+def init_controls(capacity: int, j_max: int) -> GovernorControls:
+    """Fresh slots start ungoverned (cap = j_max, tier 0) and unbudgeted;
+    the host writes budget shares on admit (:func:`allocate_budgets`)."""
+    return GovernorControls(
+        j_cap=jnp.full((capacity,), j_max, jnp.int32),
+        tier=jnp.zeros((capacity,), jnp.int32),
+        budget_mw=jnp.zeros((capacity,), jnp.float32),
+    )
+
+
+def reset_rows(controls: GovernorControls, hit: jnp.ndarray,
+               j_max: int) -> GovernorControls:
+    """Admit-time row reset (``hit`` (S,) bool): back to the ungoverned
+    defaults; the budget share is rewritten by the host right after."""
+    return GovernorControls(
+        j_cap=jnp.where(hit, j_max, controls.j_cap),
+        tier=jnp.where(hit, 0, controls.tier),
+        budget_mw=jnp.where(hit, 0.0, controls.budget_mw),
+    )
+
+
+def tier_k_eff(spec: GovernorSpec, tier: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(S,) tier indices -> (S,) k_eff token counts."""
+    return jnp.take(jnp.asarray(spec.tier_tokens(k), jnp.int32), tier)
+
+
+def fixed_power_mw(
+    spec_meter: EnergyMeter,
+    n_pixels: float,
+    pixels_per_patch: int,
+    n_vectors: int,
+    k_eff: jnp.ndarray,
+    frame_hz: float,
+) -> jnp.ndarray:
+    """Per-frame power that gating cannot avoid at the current token
+    tier: CDS samples, the DAC weight broadcast, and the deselected-patch
+    dumps (which grow as the tier sheds tokens). Derived from the SAME
+    event arithmetic the runtime meters against (zero converted patches),
+    so the plant model can never drift from the measurement."""
+    ev = frontend_frame_events(
+        n_pixels, pixels_per_patch, n_vectors,
+        n_selected_patches=k_eff.astype(jnp.float32),
+        n_converted_patches=jnp.zeros_like(k_eff, jnp.float32),
+    )
+    return spec_meter.power_mw(ev, frame_hz)
+
+
+def control_update(
+    spec: GovernorSpec,
+    controls: GovernorControls,
+    events_last: EventCounts,
+    active: jnp.ndarray,
+    meter: EnergyMeter,
+    frame_hz: float,
+    n_pixels: float,
+    pixels_per_patch: int,
+    n_vectors: int,
+    j_max: int,
+    k: int,
+) -> GovernorControls:
+    """One governor tick — pure, per-slot, jit-inside-the-engine-step.
+
+    ``events_last`` are THIS frame's executed events (inactive slots
+    zeroed); the new controls apply from the NEXT frame (one frame of
+    control latency, like any sampled controller).
+    """
+    slot_mw = 1e3 * meter.slot_recompute_power_w(
+        pixels_per_patch, n_vectors, frame_hz
+    )
+    measured = meter.power_mw(events_last, frame_hz)              # (S,)
+    budget = controls.budget_mw
+
+    # 1. feedforward affordable allocation at the current tier
+    k_eff_now = tier_k_eff(spec, controls.tier, k)
+    fixed = fixed_power_mw(
+        meter, n_pixels, pixels_per_patch, n_vectors, k_eff_now, frame_hz
+    )
+    afford = jnp.floor((budget - fixed) / slot_mw).astype(jnp.int32)
+    target = jnp.clip(afford, spec.floor, j_max)
+
+    # 2. slew-limited move with a deadband hold (hysteresis): inside the
+    # band and not above target -> hold; above target always bleeds down
+    err = measured - budget
+    hold = (jnp.abs(err) <= spec.deadband * budget) & (controls.j_cap <= target)
+    step = jnp.clip(target - controls.j_cap, -spec.slew, spec.slew)
+    j_new = jnp.clip(
+        jnp.where(hold, controls.j_cap, controls.j_cap + step),
+        spec.floor, j_max,
+    )
+
+    # 3. token tier: largest tier whose k_eff is refreshable within the
+    # horizon at the new cap; one tier step per frame; tiering up needs
+    # the stricter (1 - deadband) margin (tier hysteresis)
+    tiers = jnp.asarray(spec.tier_tokens(k), jnp.int32)           # (T,)
+    room = (j_new * spec.refresh_horizon)[:, None]                # (S, 1)
+    fits = tiers[None, :] <= room                                 # (S, T)
+    fits = fits.at[:, -1].set(True)       # last tier is always available
+    t_target = jnp.argmax(fits, axis=-1).astype(jnp.int32)        # first fit
+    fits_up = tiers[None, :] <= (
+        room.astype(jnp.float32) * (1.0 - spec.deadband)
+    )
+    fits_up = fits_up.at[:, -1].set(True)
+    t_up = jnp.argmax(fits_up, axis=-1).astype(jnp.int32)
+    t_cur = controls.tier
+    t_new = jnp.where(
+        t_target > t_cur, t_cur + 1,                              # degrade
+        jnp.where(t_up < t_cur, t_cur - 1, t_cur),                # recover
+    )
+
+    frozen = ~active
+    return GovernorControls(
+        j_cap=jnp.where(frozen, controls.j_cap, j_new),
+        tier=jnp.where(frozen, controls.tier, t_new),
+        budget_mw=budget,
+    )
+
+
+def allocate_budgets(
+    spec: GovernorSpec,
+    slot_priority: np.ndarray,
+) -> np.ndarray:
+    """HOST-side budget split: ``slot_priority`` is (S,) with the priority
+    weight of each admitted stream and 0.0 on free slots; the chip budget
+    is divided proportionally over the admitted streams. Returns (S,)
+    float32 per-slot budget shares (0 on free slots). Called on
+    admit/evict — a data-only row rewrite, never a recompile."""
+    w = np.asarray(slot_priority, np.float64)
+    total = w.sum()
+    if total <= 0:
+        return np.zeros_like(w, dtype=np.float32)
+    return (spec.budget_mw * w / total).astype(np.float32)

@@ -235,9 +235,9 @@ class TestPowerThroughput:
 
     def test_power_claims(self):
         rep = c.power_report(c.SensorConfig())            # 2 Mpix @ 30 Hz
-        assert rep["total"] < 0.060                       # < 60 mW
-        assert rep["mw_per_mpix"] < 30.0                  # < 30 mW/Mpix
-        assert rep["adc_dominated"]                       # ADC is the majority
+        assert rep.total_w < 0.060                        # < 60 mW
+        assert rep.mw_per_mpix < 30.0                     # < 30 mW/Mpix
+        assert rep.adc_dominated                          # ADC is the majority
 
     def test_data_reduction_10x_30x(self):
         assert c.data_reduction(c.SensorConfig()) >= 10.0

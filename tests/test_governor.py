@@ -1,0 +1,262 @@
+"""Power governor + engine energy metering (DESIGN.md §10).
+
+The contracts the PR-5 acceptance pins:
+
+* a governed engine holds MEASURED frontend power (priced from executed
+  events, not assumed) within 10 % of a budget set below the ungoverned
+  demand on a full-motion scene;
+* with a slack budget the governed engine is BITWISE identical to the
+  ungoverned temporal engine (the knobs are data-only no-ops);
+* the starvation floor always leaves every stream making progress;
+* the knobs do not oscillate in steady state (hysteresis);
+* budget shares follow admit priorities;
+* governing never recompiles (``n_traces == 1`` across churn).
+
+Plus the always-on engine metering: per-slot cumulative meters, pricing
+accessors, admit resets.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.frontend import FrontendConfig
+from repro.core.power import EnergyMeter
+from repro.core.projection import PatchSpec
+from repro.core.temporal import TemporalSpec
+from repro.models.vit import ViTConfig, init_vit
+from repro.serve.engine import SaccadeEngine
+from repro.serve.governor import GovernorSpec, allocate_budgets
+
+KEY = jax.random.PRNGKey(0)
+FRAME_HZ = 30.0
+
+
+def make_cfg(**tkw):
+    """64x64 sensor, 8x8 patches: P=64, k=16, M=64 — big enough that the
+    variable (per-conversion) power dominates the fixed DAC/CDS floor, so
+    governing has real authority."""
+    fcfg = FrontendConfig(
+        image_h=64, image_w=64, aa_cutoff=None,
+        patch=PatchSpec(patch_h=8, patch_w=8, n_vectors=64),
+        active_fraction=0.25,
+        temporal=TemporalSpec(delta_threshold=1e-4, **tkw),
+    )
+    return ViTConfig(frontend=fcfg, n_layers=1, d_model=32, n_heads=2, d_ff=64)
+
+
+CFG = make_cfg()
+PARAMS = init_vit(KEY, CFG)
+FRAMES = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (24, 64, 64, 3)))
+
+# the engine's plant constants at this config (see GovernorSpec law)
+_METER = EnergyMeter()
+SLOT_MW = 1e3 * _METER.slot_recompute_power_w(64, 64, FRAME_HZ)
+K = CFG.frontend.n_active
+
+
+def full_motion(t):
+    return FRAMES[t % len(FRAMES)]
+
+
+class TestEngineMetering:
+    def test_per_slot_meters_and_accessors(self):
+        eng = SaccadeEngine(CFG, PARAMS, capacity=2, temporal=True,
+                            frame_hz=FRAME_HZ)
+        eng.admit("moving"); eng.admit("static")
+        powers = []
+        for t in range(5):
+            eng.step({"moving": full_motion(t), "static": FRAMES[0]})
+            powers.append((eng.power_mw("moving"), eng.power_mw("static")))
+        # static scene: after the bootstrap conversion burst, holds are
+        # free — measured power collapses to the fixed frame costs
+        assert powers[-1][1] < powers[0][1]
+        assert eng.recompute_fraction("static") == 0.0
+        # full motion keeps paying for conversions
+        assert powers[-1][0] > 2.0 * powers[-1][1]
+        # mean sits between the extremes, fleet is the sum
+        assert powers[-1][1] < eng.power_mw("static", "mean") <= powers[0][1]
+        assert eng.fleet_power_mw() == pytest.approx(sum(powers[-1]))
+        # the ledger prices the SAME events the gate reports
+        ev = eng.events("moving", "last")
+        frac = eng.recompute_fraction("moving")
+        assert ev.adc_conversions == frac * K * 64
+        rep = eng.energy_report("moving")
+        assert set(rep) == {"adc", "weight_dac", "cap_charging",
+                            "pwm_comparators", "opamps", "cds_sampling",
+                            "pixel_dump"}
+        assert all(v >= 0.0 for v in rep.values())
+
+    def test_totals_accumulate_and_admit_resets(self):
+        eng = SaccadeEngine(CFG, PARAMS, capacity=3, temporal=True,
+                            frame_hz=FRAME_HZ)
+        eng.admit("a")
+        seen = 0.0
+        for t in range(3):
+            eng.step({"a": full_motion(t)})
+            seen += eng.events("a", "last").adc_conversions
+        # the device meter is a running per-frame mean (never saturates);
+        # the total is derived as mean x frames — exact up to f32 rounding
+        assert eng.events("a", "mean").adc_conversions == pytest.approx(
+            seen / 3, rel=1e-6)
+        assert eng.events("a", "total").adc_conversions == pytest.approx(
+            seen, rel=1e-6)
+        eng.evict("a")
+        eng.admit("b")
+        assert eng.events("b", "total").adc_conversions == 0.0
+        assert eng.power_mw("b") == 0.0          # no frame served yet
+        with pytest.raises(RuntimeError):
+            eng.power_mw("b", "mean")
+        # fleet aggregation must not trip over the admitted-but-unserved
+        # stream (it has no frame to average — it is skipped, not raised)
+        eng.admit("c")
+        eng.step({"b": full_motion(0), "c": full_motion(1)})
+        eng.admit("d")                           # d never served yet
+        assert eng.fleet_power_mw("mean") > 0.0
+        assert eng.fleet_power_mw("last") > 0.0
+
+    def test_ungated_engine_meters_full_selection(self):
+        eng = SaccadeEngine(CFG, PARAMS, capacity=1, frame_hz=FRAME_HZ)
+        eng.admit("a")
+        for t in range(3):
+            eng.step({"a": full_motion(t)})
+            assert eng.events("a", "last").adc_conversions == K * 64
+
+
+class TestGovernor:
+    def test_slack_budget_is_bitwise_noop(self):
+        """Acceptance: static scene, budget far above demand — governed
+        and ungoverned engines produce bit-identical logits and held
+        state (the knobs never move off their no-op values)."""
+        gov = GovernorSpec(budget_mw=100.0)
+        plain = SaccadeEngine(CFG, PARAMS, capacity=1, temporal=True,
+                              frame_hz=FRAME_HZ)
+        gvd = SaccadeEngine(CFG, PARAMS, capacity=1, temporal=True,
+                            frame_hz=FRAME_HZ, governor=gov)
+        plain.admit("a"); gvd.admit("a")
+        for t in range(8):
+            frame = FRAMES[0] if t != 5 else FRAMES[1]   # mid-run scene change
+            lp = plain.step({"a": frame})["a"]
+            lg = gvd.step({"a": frame})["a"]
+            np.testing.assert_array_equal(lp, lg)
+        np.testing.assert_array_equal(
+            np.asarray(plain.state.cache.features),
+            np.asarray(gvd.state.cache.features))
+        np.testing.assert_array_equal(
+            np.asarray(plain.state.indices), np.asarray(gvd.state.indices))
+        assert gvd.recompute_cap("a") == K and gvd.k_tier("a") == K
+
+    def test_full_motion_tracks_budget_within_10pct(self):
+        """Acceptance: budget below the ungoverned full-motion demand —
+        steady-state measured power within 10 % of the budget."""
+        # ungoverned demand first
+        plain = SaccadeEngine(CFG, PARAMS, capacity=1, temporal=True,
+                              frame_hz=FRAME_HZ)
+        plain.admit("a")
+        for t in range(6):
+            plain.step({"a": full_motion(t)})
+        demand = plain.power_mw("a")
+
+        budget = 0.66 * demand
+        assert budget < demand / 1.1             # genuinely below demand
+        gov = GovernorSpec(budget_mw=budget)
+        eng = SaccadeEngine(CFG, PARAMS, capacity=1, temporal=True,
+                            frame_hz=FRAME_HZ, governor=gov)
+        eng.admit("a")
+        measured = []
+        for t in range(16):
+            eng.step({"a": full_motion(t)})
+            measured.append(eng.power_mw("a"))
+        steady = measured[-5:]
+        for mw in steady:
+            assert abs(mw - budget) / budget <= 0.10, (measured, budget)
+        # and the governor really is throttling, not just measuring
+        assert max(steady) < demand / 1.1
+        assert eng.recompute_cap("a") < K
+
+    def test_hysteresis_no_oscillation_in_steady_state(self):
+        gov = GovernorSpec(budget_mw=0.14)
+        eng = SaccadeEngine(CFG, PARAMS, capacity=1, temporal=True,
+                            frame_hz=FRAME_HZ, governor=gov)
+        eng.admit("a")
+        caps, tiers = [], []
+        for t in range(20):
+            eng.step({"a": full_motion(t)})
+            caps.append(eng.recompute_cap("a"))
+            tiers.append(eng.k_tier("a"))
+        assert len(set(caps[-8:])) == 1, caps     # converged, no flicker
+        assert len(set(tiers[-8:])) == 1, tiers
+
+    def test_starvation_floor_and_tier_degradation(self):
+        """A budget below even the fixed frame costs: the stream is
+        degraded (floor recompute slots, smaller token tier), never
+        stalled."""
+        gov = GovernorSpec(budget_mw=0.07, floor=1)
+        eng = SaccadeEngine(CFG, PARAMS, capacity=1, temporal=True,
+                            frame_hz=FRAME_HZ, governor=gov)
+        eng.admit("a")
+        for t in range(12):
+            logits = eng.step({"a": full_motion(t)})["a"]
+            assert np.isfinite(logits).all()
+        assert int(eng.state.frame_age[0]) == 12      # never stalled
+        assert eng.recompute_cap("a") == gov.floor
+        assert eng.k_tier("a") < K                    # tier degraded
+        # the floor keeps refresh progress: bounded staleness per token
+        assert eng.k_tier("a") <= gov.floor * gov.refresh_horizon
+        # still spending at least the floor's conversions
+        assert eng.events("a", "last").adc_conversions >= 64
+
+    def test_priority_weights_split_the_budget(self):
+        gov = GovernorSpec(budget_mw=0.25)
+        eng = SaccadeEngine(CFG, PARAMS, capacity=2, temporal=True,
+                            frame_hz=FRAME_HZ, governor=gov)
+        eng.admit("low", priority=1.0)
+        eng.admit("high", priority=3.0)
+        b = np.asarray(eng.state.controls.budget_mw)
+        assert b[eng.slot_of("high")] == pytest.approx(3 * b[eng.slot_of("low")])
+        assert b.sum() == pytest.approx(gov.budget_mw)
+        for t in range(12):
+            eng.step({"low": full_motion(t), "high": full_motion(t + 7)})
+        assert eng.recompute_cap("high") > eng.recompute_cap("low")
+        # eviction reallocates the whole budget to the survivor
+        eng.evict("low")
+        b = np.asarray(eng.state.controls.budget_mw)
+        assert b[eng.slot_of("high")] == pytest.approx(gov.budget_mw)
+
+    def test_governed_churn_zero_recompile(self):
+        gov = GovernorSpec(budget_mw=0.2)
+        eng = SaccadeEngine(CFG, PARAMS, capacity=2, temporal=True,
+                            frame_hz=FRAME_HZ, governor=gov)
+        eng.admit("a")
+        eng.step({"a": full_motion(0)})
+        eng.admit("b", priority=2.0)
+        eng.step({"a": full_motion(1), "b": full_motion(2)})
+        eng.evict("a")
+        eng.step({"b": full_motion(3)})
+        eng.admit("c")
+        eng.step({"b": full_motion(4), "c": full_motion(5)})
+        assert eng.n_traces == 1
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="temporal"):
+            SaccadeEngine(CFG, PARAMS, capacity=1,
+                          governor=GovernorSpec(budget_mw=1.0))
+        with pytest.raises(ValueError, match="budget_mw"):
+            GovernorSpec(budget_mw=0.0)
+        with pytest.raises(ValueError, match="floor"):
+            GovernorSpec(budget_mw=1.0, floor=0)
+        with pytest.raises(ValueError, match="k_tiers"):
+            GovernorSpec(budget_mw=1.0, k_tiers=(0.5, 1.0))
+        with pytest.raises(ValueError, match="priority"):
+            eng = SaccadeEngine(CFG, PARAMS, capacity=1, temporal=True)
+            eng.admit("a", priority=0.0)
+
+    def test_allocate_budgets_host_helper(self):
+        spec = GovernorSpec(budget_mw=1.0)
+        np.testing.assert_allclose(
+            allocate_budgets(spec, np.array([1.0, 0.0, 3.0])),
+            [0.25, 0.0, 0.75])
+        np.testing.assert_array_equal(
+            allocate_budgets(spec, np.zeros(3)), np.zeros(3))

@@ -46,27 +46,26 @@ class TestTable1Area:
 class TestPowerClaims:
     def test_2mpix_30hz_under_60mw(self):
         rep = power_report(SensorConfig())
-        assert rep["total"] * 1e3 < 60.0
+        assert rep.total_w * 1e3 < 60.0
         # and not vacuously small — the model is calibrated, not zeroed
-        assert rep["total"] * 1e3 > 20.0
+        assert rep.total_w * 1e3 > 20.0
 
     def test_under_30mw_per_mpix(self):
         rep = power_report(SensorConfig())
-        assert 10.0 < rep["mw_per_mpix"] < 30.0
+        assert 10.0 < rep.mw_per_mpix < 30.0
 
     def test_adc_is_majority_consumer(self):
         """Paper: 'the majority of the power is for the ADC conversion'."""
         rep = power_report(SensorConfig())
-        assert rep["adc_dominated"]
-        others = {k: v for k, v in rep.items()
-                  if k not in ("adc", "total", "mw_per_mpix", "adc_dominated")}
-        assert rep["adc"] > max(others.values())
+        assert rep.adc_dominated and rep.dominant == "adc"
+        others = {k: v for k, v in rep.components.items() if k != "adc"}
+        assert rep.components["adc"] > max(others.values())
 
     def test_active_fraction_gates_conversion_power(self):
         """The <30 mW/Mpix figure assumes 25 % active patches; converting
         every patch must blow through it (the claim depends on gating)."""
         full = power_report(SensorConfig(active_fraction=1.0))
-        assert full["mw_per_mpix"] > 30.0
+        assert full.mw_per_mpix > 30.0
 
 
 class TestDroopClaims:
