@@ -18,13 +18,17 @@ def main() -> None:
     ap.add_argument("--json-out", default="BENCH_throughput.json")
     args = ap.parse_args()
 
-    from benchmarks import bench_kernels, bench_leakage, bench_power, bench_throughput
+    from benchmarks import (
+        bench_kernels, bench_leakage, bench_power, bench_roofline,
+        bench_throughput,
+    )
 
     modules = [
         ("leakage(§2.1.2)", bench_leakage),
         ("power+area(Table1,§2.1.3)", bench_power),
         ("throughput(Fig.3,§2.1.4)", bench_throughput),
         ("kernels", bench_kernels),
+        ("roofline(§11)", bench_roofline),
     ]
     if not args.quick:
         from benchmarks import bench_accuracy

@@ -162,6 +162,18 @@ def init_frontend_params(key: jax.Array, cfg: FrontendConfig) -> dict:
 ProjectFn = Callable[[jnp.ndarray, jnp.ndarray, proj_mod.PatchSpec], jnp.ndarray]
 
 
+def _call_project_fn(fn, patches, weights, spec, row_counts):
+    """Invoke a ProjectFn, forwarding the ragged per-slot row counts only
+    to adapters that advertise ``supports_row_counts`` (DESIGN.md §11) —
+    plain callables keep the original 3-arg signature. ``row_counts`` is
+    DATA (no recompile); rows at positions >= their slot's count come back
+    ZERO from a ragged adapter, so callers must only pass counts when the
+    tail rows are discarded (temporal gate) or gained out (k_cap shed)."""
+    if row_counts is not None and getattr(fn, "supports_row_counts", False):
+        return fn(patches, weights, spec, row_counts=row_counts)
+    return fn(patches, weights, spec)
+
+
 def sensor_patches(
     params: dict, rgb: jnp.ndarray, cfg: FrontendConfig
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -199,12 +211,14 @@ def project_readout(
     params: dict,
     cfg: FrontendConfig,
     project_fn: ProjectFn | None,
+    row_counts=None,
 ) -> jnp.ndarray:
     """Analog projection + edge ADC (or the float simulation) over whatever
     set of patches it is handed — the full grid (dense) or the gathered
     active set (compact). Float view: ``digital_readout`` is the STE
     dequant of the ADC codes, bit-identical to the code wire by
-    construction (DESIGN.md §9)."""
+    construction (DESIGN.md §9). ``row_counts`` rides to ragged-capable
+    kernel adapters only (see :func:`_call_project_fn`)."""
     if project_fn is not None and getattr(project_fn, "emits_codes", False):
         raise ValueError(
             "project_fn emits wire-format codes (ops.ip2_codes_fn) but this "
@@ -214,7 +228,7 @@ def project_readout(
         )
     if cfg.analog:
         fn = project_fn or proj_mod.analog_project_patches
-        out_v = fn(patches, weights, cfg.patch)                      # (..., n, M)
+        out_v = _call_project_fn(fn, patches, weights, cfg.patch, row_counts)
         return adc_mod.digital_readout(out_v, cfg.patch.summer.v_ref, params["bias"], cfg.adc)
     n_in = patches.shape[-1]
     return jnp.einsum("...pi,vi->...pv", patches, weights) / n_in + params["bias"]
@@ -237,6 +251,7 @@ def project_wire(
     cfg: FrontendConfig,
     project_fn: ProjectFn | None,
     wire: str,
+    row_counts=None,
 ) -> jnp.ndarray:
     """Project a gathered patch set onto the requested wire format.
 
@@ -248,9 +263,15 @@ def project_wire(
 
     ``wire="float"``: the STE dequant view (differentiable; on the analog
     path, bit-identical values to dequantizing the codes).
+
+    ``row_counts`` (DESIGN.md §11): per-slot real-row counts forwarded to
+    ragged-capable kernel adapters so rows past the count cost zero
+    FLOPs/bytes instead of masked-but-computed work; other projectors
+    ignore it (they compute every handed row).
     """
     if wire == "float":
-        return project_readout(patches, weights, params, cfg, project_fn)
+        return project_readout(
+            patches, weights, params, cfg, project_fn, row_counts=row_counts)
     if not cfg.analog:
         raise ValueError(
             "wire='codes' requires analog=True: the float simulation has "
@@ -258,10 +279,76 @@ def project_wire(
             "(the default resolution for analog=False)"
         )
     if project_fn is not None and getattr(project_fn, "emits_codes", False):
-        return project_fn(patches, weights, cfg.patch)
+        return _call_project_fn(
+            project_fn, patches, weights, cfg.patch, row_counts)
     fn = project_fn or proj_mod.analog_project_patches
-    out_v = fn(patches, weights, cfg.patch)                          # (..., n, M)
+    out_v = _call_project_fn(fn, patches, weights, cfg.patch, row_counts)
     return adc_mod.encode(out_v, cfg.adc)
+
+
+class CompactSelection(NamedTuple):
+    """The resolved compact selection, before any projection is spent:
+    the dense CDS patch voltages and effective weights from
+    :func:`sensor_patches`, the exactly-k ranked patch indices, their
+    prefix validity mask (``valid[..., i]`` implies ``valid[..., i-1]`` —
+    fillers and governor-shed slots always trail), and the free
+    analog-domain patch-energy proxy. This is the input contract of both
+    the staged compact path (``apply_frontend(mode="compact")``) and the
+    fused megakernel path (``vit_forward_compact`` with
+    ``fused_embed=True``, DESIGN.md §11)."""
+
+    patches: jnp.ndarray    # (..., P, N) dense CDS patch voltages
+    weights: jnp.ndarray    # (M, N) effective projection weights
+    indices: jnp.ndarray    # (..., k) int32 ranked patch indices
+    valid: jnp.ndarray      # (..., k) bool prefix mask
+    energy: jnp.ndarray     # (..., P) float32 patch-energy proxy
+
+
+def select_compact(
+    params: dict,
+    rgb: jnp.ndarray,
+    cfg: FrontendConfig,
+    mask: jnp.ndarray | None = None,
+    indices: jnp.ndarray | None = None,
+    precomputed: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+    k_cap: jnp.ndarray | None = None,
+) -> CompactSelection:
+    """Resolve the compact selection (select, do not yet project): sensor
+    stage, patch energy, exactly-k indices with the same precedence as
+    :func:`apply_frontend` (``indices`` > ``mask`` > energy top-k), and
+    the governor's ``k_cap`` shed applied to the validity prefix.
+    Shared by the staged and fused compact paths so their selections are
+    identical by construction."""
+    if k_cap is not None and mask is not None and indices is None:
+        raise ValueError(
+            "k_cap sheds trailing selection slots and therefore needs a "
+            "selection ranked most-salient-first; mask-derived indices "
+            "come out in ascending patch order (indices_from_mask), so "
+            "the shed tokens would be arbitrary — pass ranked indices "
+            "instead (see topk_patch_indices)"
+        )
+    k = cfg.n_active
+    if precomputed is not None:
+        patches, weights = precomputed
+    else:
+        patches, weights = sensor_patches(params, rgb, cfg)
+    energy = sal_mod.patch_energy(patches)
+    if indices is not None:
+        idx = indices.astype(jnp.int32)
+        if idx.shape[-1] != k:
+            raise ValueError(f"indices last dim {idx.shape[-1]} != n_active {k}")
+        valid = jnp.ones(idx.shape, bool)
+    elif mask is not None:
+        idx, valid = sal_mod.indices_from_mask(mask, k)
+    else:
+        idx = sal_mod.topk_patch_indices(energy, k)
+        valid = jnp.ones(idx.shape, bool)
+    if k_cap is not None:
+        # governor k-tier: selection indices are score-ranked, so shedding
+        # the trailing slots keeps exactly the top-k_cap tokens (data-only:
+        # same shapes, capped tokens flagged invalid and served as zero)
+        valid = valid & (jnp.arange(k) < k_cap[..., None])
+    return CompactSelection(patches, weights, idx, valid, energy)
 
 
 def apply_frontend(
@@ -365,7 +452,6 @@ def apply_frontend(
             "the shed tokens would be arbitrary — pass ranked indices "
             "instead (see topk_patch_indices)"
         )
-    k = cfg.n_active
     if precomputed is not None:
         patches, weights = precomputed
     else:
@@ -383,29 +469,29 @@ def apply_frontend(
 
     # compact: resolve the selection to exactly-k indices, gather the active
     # patches, and only then spend analog compute / ADC conversions on them.
-    energy = sal_mod.patch_energy(patches)
-    if indices is not None:
-        idx = indices.astype(jnp.int32)
-        if idx.shape[-1] != k:
-            raise ValueError(f"indices last dim {idx.shape[-1]} != n_active {k}")
-        valid = jnp.ones(idx.shape, bool)
-    elif mask is not None:
-        idx, valid = sal_mod.indices_from_mask(mask, k)
-    else:
-        idx = sal_mod.topk_patch_indices(energy, k)
-        valid = jnp.ones(idx.shape, bool)
-    if k_cap is not None:
-        # governor k-tier: selection indices are score-ranked, so shedding
-        # the trailing slots keeps exactly the top-k_cap tokens (data-only:
-        # same shapes, capped tokens flagged invalid and served as zero)
-        valid = valid & (jnp.arange(k) < k_cap[..., None])
+    k = cfg.n_active
+    sel = select_compact(
+        params, rgb, cfg, mask=mask, indices=indices,
+        precomputed=(patches, weights), k_cap=k_cap,
+    )
+    idx, valid, energy = sel.indices, sel.valid, sel.energy
 
     n_pixels = float(cfg.image_h * cfg.image_w)
     n_selected = jnp.sum(valid, axis=-1).astype(jnp.float32)
     scale, zero = feature_scale_zero(params, cfg)
     if cache is None:
         active = sal_mod.gather_patches(patches, idx)                # (..., k, N)
-        payload = project_wire(active, weights, params, cfg, project_fn, wire)
+        # governed streams hand ragged-capable kernels the per-slot valid
+        # count (valid is a prefix): shed tokens then cost zero FLOPs and
+        # zero VMEM traffic instead of compute-then-gain-to-zero. Shed
+        # rows come back as zero payload — identical after gain either way.
+        row_counts = (
+            jnp.sum(valid, axis=-1).astype(jnp.int32)
+            if k_cap is not None else None
+        )
+        payload = project_wire(
+            active, weights, params, cfg, project_fn, wire,
+            row_counts=row_counts)
         gain = valid.astype(jnp.float32)
         # ungated compact path: every served token was projected AND
         # converted this frame — n_selected·M real ADC conversions
@@ -430,7 +516,12 @@ def apply_frontend(
         sel_valid=valid, cap=stale_cap,
     )
     stale_patches = sal_mod.gather_patches(patches, stale_idx)       # (..., j, N)
-    new_feats = project_wire(stale_patches, weights, params, cfg, project_fn, wire)
+    # the needed set is ranked stale-first, so n_stale is a prefix count:
+    # ragged-capable kernels skip the (j - n_stale) filler rows entirely
+    # (their zeroed outputs are discarded — refresh merges needed rows only)
+    new_feats = project_wire(
+        stale_patches, weights, params, cfg, project_fn, wire,
+        row_counts=n_stale.astype(jnp.int32))
     cache = temporal_mod.refresh(
         cache, stale_idx, needed, new_feats, energy, n_stale
     )

@@ -238,7 +238,11 @@ def select_stale(
       n_stale (..., ) int32 — how many of the j slots were genuinely
         stale (the recompute-fraction numerator == real ADC conversions;
         overflow staleness beyond j or past ``cap`` is deferred, not
-        counted).
+        counted). Because the ranking is stale-first, ``n_stale`` is a
+        PREFIX count of the slot axis — the gated frontend feeds it
+        straight to the ragged projection kernel as per-slot row counts
+        (DESIGN.md §11), so idle spare slots cost zero kernel work, not
+        projected-then-discarded work.
     """
     k = indices.shape[-1]
     j = spec.budget(k)

@@ -25,6 +25,7 @@ drift (asserted in tests/test_power.py).
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +33,10 @@ import jax.numpy as jnp
 from repro.core import projection as proj_mod
 from repro.core import pwm as pwm_mod
 from repro.kernels import ref
+from repro.kernels.ip2_megakernel import (
+    ip2_fused_embed_pallas,
+    ip2_ragged_pallas,
+)
 from repro.kernels.ip2_project import IP2KernelParams, ip2_project_pallas
 from repro.kernels.ip2_project_sparse import ip2_project_sparse_pallas
 from repro.kernels.quant_matmul import quant_matmul_pallas
@@ -51,6 +56,41 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0) -> jnp.ndarray:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths, constant_values=value)
+
+
+class ProgrammedWeights(NamedTuple):
+    """Offline DAC-programmed projection weights (satellite of DESIGN.md
+    §11): the output of :func:`repro.core.pwm.quantize_weights`, computed
+    once at deploy time — the hardware programs its weight DACs once, not
+    per exposure. Every projection wrapper accepts this in place of raw
+    float ``weights`` and skips the per-call re-quantization; the per-call
+    path stays as the fallback and is bitwise-equal (the STE grid is
+    deterministic)."""
+
+    w_q: jnp.ndarray     # (M, N2) float weights ON the DAC grid
+    scale: jnp.ndarray   # per-output scale (diagnostic; kernels ignore it)
+
+
+def program_weights(
+    weights: jnp.ndarray, spec: proj_mod.PatchSpec
+) -> ProgrammedWeights:
+    """Offline DAC programming entry, mirroring ``vit.prepare_quant_embed``
+    for the backend's embed weights: run the weight-DAC quantization once
+    and reuse the programmed array across every projection call.
+    Idempotent: already-programmed weights pass through unchanged (the DAC
+    grid is a fixed point of its own quantizer)."""
+    if isinstance(weights, ProgrammedWeights):
+        return weights
+    w_q, scale = pwm_mod.quantize_weights(weights, spec.quant)
+    return ProgrammedWeights(w_q=w_q, scale=scale)
+
+
+def _dac_weights(weights, spec: proj_mod.PatchSpec) -> jnp.ndarray:
+    """Resolve raw-or-programmed weights to the DAC-grid array."""
+    if isinstance(weights, ProgrammedWeights):
+        return weights.w_q
+    w_q, _ = pwm_mod.quantize_weights(weights, spec.quant)  # DAC programming
+    return w_q
 
 
 def fused_adc_conversions(n_rows, spec: proj_mod.PatchSpec, adc=None):
@@ -100,7 +140,8 @@ def ip2_project(
     (+ fused ADC readout when ``adc`` is given). Returns (..., P, M) —
     float32 readout, or the int code payload when ``codes=True`` (the bias
     then lives in the ``zero`` metadata, not the payload)."""
-    m, n2 = weights.shape
+    w_q = _dac_weights(weights, spec)
+    m, n2 = w_q.shape
     lead = patches.shape[:-1]
     flat = patches.reshape(-1, n2)
     # small row batches (the compact path's k rows, or the temporal gate's
@@ -108,7 +149,6 @@ def ip2_project(
     # 128-row MXU tile; clamp to the sublane-aligned row count instead.
     block_p = max(8, min(block_p, -(-flat.shape[0] // 8) * 8))
 
-    w_q, _ = pwm_mod.quantize_weights(weights, spec.quant)  # DAC programming
     w_t = w_q.T                                             # (N2, M)
     b = jnp.zeros((m,), jnp.float32) if bias is None else bias.astype(jnp.float32)
 
@@ -127,30 +167,61 @@ def ip2_project(
     return out.reshape(*lead, m)
 
 
-def ip2_project_fn(spec: proj_mod.PatchSpec, **kw):
+def _identity_indices(patches: jnp.ndarray) -> jnp.ndarray:
+    """(..., j, N2) gathered patches -> (..., j) identity row indices, the
+    ragged adapter path's selection (rows are already in slot order)."""
+    j = patches.shape[-2]
+    return jnp.broadcast_to(
+        jnp.arange(j, dtype=jnp.int32), patches.shape[:-2] + (j,)
+    )
+
+
+def ip2_project_fn(spec: proj_mod.PatchSpec, programmed=None, **kw):
     """Adapter matching core.frontend.ProjectFn (no fused ADC: the frontend
     applies its own readout; used to drop the kernel into apply_frontend).
     Works on both frontend modes — in compact mode the frontend hands it
-    the already-gathered (..., k, N2) active patches."""
+    the already-gathered (..., k, N2) active patches.
 
-    def fn(patches, weights, _spec):
-        return ip2_project(patches, weights, _spec, adc=None, **kw)
+    ``programmed``: optional :class:`ProgrammedWeights` to use instead of
+    DAC-quantizing the passed weights on every call (offline programming).
 
+    Ragged k (DESIGN.md §11): the frontend passes ``row_counts`` when it
+    knows how many leading rows per slot are real; the adapter then routes
+    through the ragged megakernel so shed rows cost zero FLOPs/bytes.
+    Rows at positions >= their slot's count come back ZERO."""
+
+    def fn(patches, weights, _spec, row_counts=None):
+        w = programmed if programmed is not None else weights
+        if row_counts is None:
+            return ip2_project(patches, w, _spec, adc=None, **kw)
+        return ip2_project_sparse(
+            patches, w, _identity_indices(patches), _spec, adc=None,
+            row_counts=row_counts, **kw)
+
+    fn.supports_row_counts = True
     # no fused ADC: conversions happen in the caller's readout, not here
     fn.frame_conversions = lambda n_rows: fused_adc_conversions(n_rows, spec)
     return fn
 
 
-def ip2_codes_fn(spec: proj_mod.PatchSpec, adc, **kw):
+def ip2_codes_fn(spec: proj_mod.PatchSpec, adc, programmed=None, **kw):
     """Adapter matching core.frontend.ProjectFn whose output is the wire
     format: int codes straight from the kernel's fused ADC epilogue
     (DESIGN.md §9). The frontend detects ``emits_codes`` and skips its own
     jnp re-quantization — the conversion happens exactly once, at the
-    array edge, inside the kernel."""
+    array edge, inside the kernel. ``programmed``/``row_counts`` as in
+    :func:`ip2_project_fn` (shed rows are ZERO codes; the ledger's
+    ``frame_conversions`` is priced on real rows by the caller)."""
 
-    def fn(patches, weights, _spec):
-        return ip2_project(patches, weights, _spec, adc=adc, codes=True, **kw)
+    def fn(patches, weights, _spec, row_counts=None):
+        w = programmed if programmed is not None else weights
+        if row_counts is None:
+            return ip2_project(patches, w, _spec, adc=adc, codes=True, **kw)
+        return ip2_project_sparse(
+            patches, w, _identity_indices(patches), _spec, adc=adc,
+            codes=True, row_counts=row_counts, **kw)
 
+    fn.supports_row_counts = True
     fn.emits_codes = True
     # the fused epilogue converts every real row's M outputs exactly once
     fn.frame_conversions = lambda n_rows: fused_adc_conversions(
@@ -158,14 +229,59 @@ def ip2_codes_fn(spec: proj_mod.PatchSpec, adc, **kw):
     return fn
 
 
+def _ragged_tables(
+    indices: jnp.ndarray,          # (..., k) active patch indices
+    n_patches: int,
+    row_counts,                    # scalar/broadcastable int counts, or None
+    block_r: int,
+):
+    """Slot-major tables for the ragged megakernel entries.
+
+    Returns ``(table, counts, n_banks)`` where ``table`` is
+    (slots * n_banks * block_r,) int32 dense row indices — slot s's k
+    indices (batch offset folded in), extended to a whole number of
+    ``block_r`` banks by repeating the slot's LAST index (the clamp the
+    kernel's row index_maps apply anyway, so the pipeliner sees unchanged
+    block indices on pad rows and elides their copies) — and ``counts`` is
+    (slots,) int32 real-row counts clipped to [0, k]. Counts are DATA:
+    block shapes and the table length depend only on k, so one compile
+    serves every governor tier."""
+    lead = indices.shape[:-1]
+    k = indices.shape[-1]
+    idx2 = indices.reshape(-1, k).astype(jnp.int32)
+    batch = idx2.shape[0]
+    offsets = jnp.arange(batch, dtype=jnp.int32) * n_patches
+    flat2 = jnp.clip(idx2 + offsets[:, None], 0, batch * n_patches - 1)
+    n_banks = -(-k // block_r)
+    rps = n_banks * block_r
+    pos = jnp.minimum(jnp.arange(rps), k - 1)
+    table = flat2[:, pos].reshape(-1)
+    if row_counts is None:
+        counts = jnp.full((batch,), k, jnp.int32)
+    else:
+        counts = jnp.broadcast_to(jnp.asarray(row_counts), lead)
+        counts = jnp.clip(counts.reshape(-1).astype(jnp.int32), 0, k)
+    return table, counts, n_banks
+
+
+def _mask_ragged_rows(out, counts, k):
+    """Zero rows at positions >= their slot's count. The kernel already
+    zeroes whole inactive banks; this masks the partial last active bank,
+    whose tail rows hold clamped duplicates of the slot's last real row —
+    making 'rows past counts are zero' exact per row."""
+    mask = jnp.arange(k, dtype=jnp.int32)[None, :] < counts[:, None]
+    return jnp.where(mask[..., None], out, jnp.zeros((), out.dtype))
+
+
 def ip2_project_sparse(
     patches: jnp.ndarray,          # (..., P, N2) dense patch grid in [0,1]
-    weights: jnp.ndarray,          # (M, N2) float (pre-DAC)
+    weights: jnp.ndarray,          # (M, N2) float (pre-DAC) or ProgrammedWeights
     indices: jnp.ndarray,          # (..., k) active patch indices
     spec: proj_mod.PatchSpec,
     adc=None,
     bias: jnp.ndarray | None = None,
     codes: bool = False,
+    row_counts=None,               # (...,) int real rows per slot, or None
     block_r: int | None = None,
     block_m: int = 128,
     block_k: int = 256,
@@ -178,12 +294,22 @@ def ip2_project_sparse(
     deselected patches cost no FLOPs and no VMEM traffic. Returns
     (..., k, M) in the order of ``indices``.
 
+    ``row_counts`` (DESIGN.md §11) switches to the ragged megakernel: per
+    batch slot, only the leading ``row_counts`` rows of ``indices`` are
+    computed — banks of ``block_r`` rows past a slot's count skip the MXU
+    and their DMAs are elided, so governor-shed tokens cost zero FLOPs and
+    zero VMEM traffic (not masked-but-computed work). Counts are data
+    (one compile across tiers); rows at positions >= the count return
+    ZERO. With ``row_counts=None`` the dense-k sparse kernel runs and
+    output is bitwise-identical to the ragged path at full counts.
+
     ``block_r`` rows are batched per grid step (arbitrary, non-contiguous
     rows — selection stays patch-granular); ``None`` picks the
     sublane-aligned row count, mirroring ``ip2_project``'s ``block_p``
     clamp, so multi-row batches don't serialize one matmul per row.
     """
-    m, n2 = weights.shape
+    w_q = _dac_weights(weights, spec)
+    m, n2 = w_q.shape
     lead = patches.shape[:-2]
     n_patches = patches.shape[-2]
     if indices.shape[:-1] != lead:
@@ -192,6 +318,26 @@ def ip2_project_sparse(
 
     flat_p = patches.reshape(-1, n2).astype(jnp.float32)   # (B*P, N2)
     batch = flat_p.shape[0] // n_patches
+
+    b = jnp.zeros((m,), jnp.float32) if bias is None else bias.astype(jnp.float32)
+    k_in = _pad_to(flat_p, 1, block_k)
+    w_pad = _pad_to(_pad_to(w_q.T.astype(jnp.float32), 0, block_k), 1, block_m)
+    b_pad = _pad_to(b, 0, block_m)
+    params = kernel_params_from_spec(spec, adc, codes)
+
+    if row_counts is not None:
+        br = 8 if block_r is None else block_r
+        br = max(1, min(br, k))
+        table, counts, n_banks = _ragged_tables(indices, n_patches, row_counts, br)
+        out = ip2_ragged_pallas(
+            table, counts, k_in, w_pad, b_pad, params, n_banks=n_banks,
+            block_r=br, block_m=block_m, block_k=block_k,
+            interpret=_auto_interpret(interpret),
+        )
+        out = out.reshape(batch, n_banks * br, -1)[:, :k, :m]
+        out = _mask_ragged_rows(out, counts, k)
+        return out.reshape(*lead, k, m)
+
     # fold the batch into the row index: row_idx addresses (B*P) dense rows
     offsets = jnp.arange(batch, dtype=jnp.int32) * n_patches
     flat_idx = (indices.reshape(batch, k).astype(jnp.int32) + offsets[:, None]).reshape(-1)
@@ -205,20 +351,96 @@ def ip2_project_sparse(
     # output rows are computed and discarded by the slice below)
     flat_idx = _pad_to(flat_idx, 0, block_r, value=0)
 
-    w_q, _ = pwm_mod.quantize_weights(weights, spec.quant)  # DAC programming
-    b = jnp.zeros((m,), jnp.float32) if bias is None else bias.astype(jnp.float32)
-
-    k_in = _pad_to(flat_p, 1, block_k)
-    w_pad = _pad_to(_pad_to(w_q.T.astype(jnp.float32), 0, block_k), 1, block_m)
-    b_pad = _pad_to(b, 0, block_m)
-
-    params = kernel_params_from_spec(spec, adc, codes)
     out = ip2_project_sparse_pallas(
         flat_idx, k_in, w_pad, b_pad, params,
         block_r=block_r, block_m=block_m, block_k=block_k,
         interpret=_auto_interpret(interpret),
     )
     return out[:n_rows, :m].reshape(*lead, k, m)
+
+
+def ip2_fused_embed(
+    patches: jnp.ndarray,          # (..., P, N2) dense patch grid in [0,1]
+    weights: jnp.ndarray,          # (M, N2) float (pre-DAC) or ProgrammedWeights
+    indices: jnp.ndarray,          # (..., k) active patch indices
+    spec: proj_mod.PatchSpec,
+    adc,                           # ADCSpec — the fused seam IS code space
+    w8: jnp.ndarray,               # (M, D) int8 embed weight codes
+    s_w: jnp.ndarray,              # (D,) float32 per-col embed scales
+    row_counts=None,               # (...,) int real rows per slot, or None
+    block_r: int = 8,
+    block_m: int | None = None,    # None = roofline pick: m_steps=1 up to 512
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Fused frontend megakernel (DESIGN.md §11): projection + fused ADC +
+    the backend's w8a8 first-layer embed matmul in ONE kernel — the int8
+    codes go straight from the epilogue's VMEM scratch into the MXU,
+    never round-tripping through HBM between frontend and backend.
+
+    Returns (..., k, D) float32 — the ``y = (codes @ w8) * lsb * s_w``
+    term of ``vit._embed_tokens``'s quant-embed affine, bitwise-equal the
+    staged ``ip2_project_sparse(codes=True)`` → ``quant_matmul_pre`` path
+    for the same selection (asserted in tests/test_megakernel.py). The
+    caller adds :func:`fused_embed_zero_term` and the per-token gain
+    exactly as the staged path does. ``row_counts`` behaves as in
+    :func:`ip2_project_sparse` (shed rows are zero).
+    """
+    if adc is None:
+        raise ValueError("ip2_fused_embed requires an ADCSpec: the fused "
+                         "seam only exists in ADC code space (DESIGN.md §9)")
+    w_q = _dac_weights(weights, spec)
+    m, n2 = w_q.shape
+    if w8.shape[0] != m:
+        raise ValueError(f"embed rows {w8.shape[0]} != n_vectors {m}")
+    d = w8.shape[1]
+    lead = patches.shape[:-2]
+    n_patches = patches.shape[-2]
+    if indices.shape[:-1] != lead:
+        raise ValueError(f"indices lead {indices.shape[:-1]} != patches lead {lead}")
+    k = indices.shape[-1]
+
+    flat_p = patches.reshape(-1, n2).astype(jnp.float32)
+    batch = flat_p.shape[0] // n_patches
+    br = max(1, min(block_r, k))
+    table, counts, n_banks = _ragged_tables(indices, n_patches, row_counts, br)
+
+    # roofline-picked default (benchmarks/bench_roofline.py): one vector-bank
+    # step per row bank (m_steps=1 up to a 512-lane block) minimizes grid
+    # steps — each extra m step re-gathers every patch-row block
+    if block_m is None:
+        block_m = min(512, -(-m // 128) * 128)
+
+    k_in = _pad_to(flat_p, 1, block_k)
+    w_pad = _pad_to(_pad_to(w_q.T.astype(jnp.float32), 0, block_k), 1, block_m)
+    # embed weight pad rows MUST be zero: projection pad columns carry junk
+    # codes (epilogue of an empty accumulator) and the zero rows annihilate
+    # them exactly in the int32 sum — the bitwise-parity keystone.
+    w8_pad = _pad_to(_pad_to(w8, 0, block_m, value=0), 1, 128, value=0)
+    sw_pad = _pad_to(s_w.astype(jnp.float32), 0, 128)
+
+    # per-row activation scale = the ADC's single static LSB, materialized
+    # as a buffer so the kernel epilogue multiplies in quant_matmul order
+    sa_rows = jnp.full((table.shape[0],), adc.lsb, jnp.float32)
+
+    params = kernel_params_from_spec(spec, adc, codes=True)
+    out = ip2_fused_embed_pallas(
+        table, counts, k_in, w_pad, w8_pad, sw_pad, sa_rows, params,
+        n_banks=n_banks, block_r=br, block_m=block_m, block_k=block_k,
+        interpret=_auto_interpret(interpret),
+    )
+    out = out.reshape(batch, n_banks * br, -1)[:, :k, :d]
+    if row_counts is not None:
+        out = _mask_ragged_rows(out, counts, k)
+    return out.reshape(*lead, k, d)
+
+
+def fused_embed_zero_term(zero, w8: jnp.ndarray, s_w: jnp.ndarray):
+    """The affine ``zero @ dequant(w8)`` term the fused kernel does NOT
+    compute (it is selection-independent): identical expression to
+    ``vit._embed_tokens``'s staged ``zero_term`` so fused = staged holds
+    bitwise. ``zero`` broadcasts over (..., M)."""
+    return zero @ (w8.astype(jnp.float32) * s_w[None, :])
 
 
 def quant_matmul_pre(
@@ -248,12 +470,15 @@ def quant_matmul_pre(
     w_pad = _pad_to(_pad_to(w8, 0, block_k), 1, block_m)
     sw_pad = _pad_to(s_w.astype(jnp.float32), 0, block_m)
 
+    # thread the requested out_dtype into the kernel: the epilogue casts
+    # from its f32 accumulator exactly once, so bf16 consumers don't pay a
+    # second materialization (accumulation itself stays int32 -> f32)
     out = quant_matmul_pallas(
         a_pad, sa_pad, w_pad, sw_pad,
         block_p=block_p, block_m=block_m, block_k=block_k,
-        out_dtype=jnp.float32, interpret=_auto_interpret(interpret),
+        out_dtype=out_dtype, interpret=_auto_interpret(interpret),
     )
-    out = out[: flat.shape[0], :m].astype(out_dtype)
+    out = out[: flat.shape[0], :m]
     return out.reshape(*lead, m)
 
 

@@ -39,6 +39,23 @@ def ip2_project_sparse_ref(
     return ip2_project_ref(patches[row_idx], w_q, bias, params)
 
 
+def ip2_fused_embed_ref(
+    row_idx: jnp.ndarray,
+    patches: jnp.ndarray,
+    w_q: jnp.ndarray,
+    w8: jnp.ndarray,
+    s_w: jnp.ndarray,
+    params: IP2KernelParams,
+) -> jnp.ndarray:
+    """Oracle for ip2_fused_embed_pallas (same padded shapes): the staged
+    composition — sparse projection to ADC codes, then the w8a8 embed
+    matmul with the ADC LSB as the (single, static) activation scale."""
+    bias = jnp.zeros((w_q.shape[1],), jnp.float32)
+    codes = ip2_project_sparse_ref(row_idx, patches, w_q, bias, params)
+    lsb = jnp.full((codes.shape[0],), params.adc_spec().lsb, jnp.float32)
+    return quant_matmul_ref(codes, lsb, w8, s_w, jnp.float32)
+
+
 def quant_matmul_ref(
     a8: jnp.ndarray, s_a: jnp.ndarray, w8: jnp.ndarray, s_w: jnp.ndarray, out_dtype=jnp.float32
 ) -> jnp.ndarray:

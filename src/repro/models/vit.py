@@ -34,12 +34,15 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import power as power_mod
 from repro.core.frontend import (
     CompactFeatures,
     FrontendConfig,
     apply_frontend,
     dequantize_features,
+    feature_scale_zero,
     init_frontend_params,
+    select_compact,
 )
 from repro.models.layers import DEFAULT_PLAN, apply_mlp, dense_init, init_mlp, rms_norm
 from repro.models.attention import init_attention
@@ -59,6 +62,9 @@ class ViTConfig:
     d_ff: int = 256
     qth: bool = False          # Fig. 4 power-of-2 attention in the backend
     quant_embed: bool = False  # consume ADC codes via the w8a8 kernel (§9)
+    fused_embed: bool = False  # frontend megakernel: project + ADC + embed
+                               # in one kernel, codes never leave VMEM (§11);
+                               # requires quant_embed and an analog frontend
     norm_eps: float = 1e-5
 
     def backbone_cfg(self) -> ModelConfig:
@@ -204,6 +210,96 @@ def _embed_tokens(params: dict, cf: CompactFeatures, cfg: ViTConfig) -> jnp.ndar
     return dequantize_features(cf) @ params["embed"]
 
 
+def _forward_compact_fused(
+    params: dict,
+    rgb: jnp.ndarray,
+    cfg: ViTConfig,
+    indices,
+    mask,
+    project_fn,
+    precomputed,
+    cache,
+    wire,
+    k_cap,
+    stale_cap,
+) -> tuple[jnp.ndarray, dict]:
+    """The megakernel compact path (DESIGN.md §11): one Pallas kernel
+    gathers the selected patches, projects, converts, and performs the
+    w8a8 embed matmul — the staged select -> project -> wire ->
+    ``_embed_tokens`` seam collapses and the int8 codes never leave VMEM.
+    Logits are bitwise-equal the staged code-wire path for the same
+    selection (tests/test_megakernel.py): the kernel's epilogue is the
+    exact ``quant_matmul`` arithmetic and the affine/gain algebra below is
+    the exact ``_embed_tokens`` expression."""
+    fe_cfg = cfg.frontend
+    if not cfg.quant_embed:
+        raise ValueError(
+            "fused_embed requires quant_embed=True: the megakernel's "
+            "embed stage IS the w8a8 code consumption (DESIGN.md §9/§11)")
+    if not fe_cfg.analog:
+        raise ValueError(
+            "fused_embed requires an analog frontend: the fused seam "
+            "exists in ADC code space; the float simulation has no codes")
+    if wire == "float":
+        raise ValueError(
+            "fused_embed has no float wire: codes are consumed in-kernel "
+            "and never materialized — use fused_embed=False for the STE "
+            "float view")
+    if project_fn is not None:
+        raise ValueError(
+            "fused_embed IS the projector (one megakernel); a project_fn "
+            "cannot be substituted into it — use fused_embed=False")
+    if cache is not None or stale_cap is not None:
+        raise ValueError(
+            "fused_embed does not thread the temporal cache (held codes "
+            "live outside the kernel); use fused_embed=False with a "
+            "FeatureCache — the gated path reuses the same ragged "
+            "machinery via row_counts=n_stale")
+    from repro.kernels import ops  # lazy: keep the model import-light
+
+    sel = select_compact(
+        params["ip2"], rgb, fe_cfg,
+        mask=mask, indices=indices, precomputed=precomputed, k_cap=k_cap,
+    )
+    # per-slot real-row count: valid is a prefix mask, so the ragged
+    # megakernel skips shed/filler rows entirely (zero FLOPs/bytes)
+    counts = jnp.sum(sel.valid, axis=-1).astype(jnp.int32)
+    w8, s_w = params.get("embed_q") or ops.quantize_weights_int8(params["embed"])
+    y = ops.ip2_fused_embed(
+        sel.patches, sel.weights, sel.indices, fe_cfg.patch, fe_cfg.adc,
+        w8, s_w, row_counts=counts,
+    )
+    scale, zero = feature_scale_zero(params["ip2"], fe_cfg)
+    gain = sel.valid.astype(jnp.float32)
+    # exactly _embed_tokens' affine: (y + zero @ dequant(W8)) * gain. Shed
+    # rows are zero in y AND zero in gain — gain multiplies BEFORE the pos
+    # add, so fused (never-computed) and staged (computed-then-gained-out)
+    # rows land on identical x.
+    x = (y + ops.fused_embed_zero_term(zero, w8, s_w)) * gain[..., None]
+    x = x + params["pos"][sel.indices]
+    logits, received = _encoder(params, x, cfg, sel.valid)
+
+    n_selected = jnp.sum(sel.valid, axis=-1).astype(jnp.float32)
+    # same ungated-compact ledger as apply_frontend: every served token
+    # was projected AND converted this frame, by the fused epilogue —
+    # n_selected·M conversions pinned to the emitted payload rows
+    events = power_mod.frontend_frame_events(
+        float(fe_cfg.image_h * fe_cfg.image_w),
+        fe_cfg.patch.pixels_per_patch, fe_cfg.patch.n_vectors,
+        n_selected_patches=n_selected, n_converted_patches=n_selected,
+    )
+    received = jnp.where(sel.valid, received, 0.0)
+    b = jnp.arange(received.shape[0])[:, None]
+    saliency = jnp.zeros(
+        (received.shape[0], fe_cfg.n_patches), jnp.float32
+    ).at[b, sel.indices].max(received)
+    aux = {
+        "indices": sel.indices, "valid": sel.valid,
+        "saliency": saliency, "energy": sel.energy, "events": events,
+    }
+    return logits, aux
+
+
 def vit_forward_compact(
     params: dict,
     rgb: jnp.ndarray,
@@ -257,7 +353,17 @@ def vit_forward_compact(
       with ``cache`` given, additionally ``cache`` (the refreshed
       FeatureCache to thread into the next frame) and ``n_stale`` (B,)
       — how many of the k patches were actually recomputed.
+
+    With ``cfg.fused_embed`` (requires ``quant_embed`` + analog frontend,
+    code wire, no cache/project_fn) the whole frontend-to-embed seam runs
+    as ONE Pallas megakernel with ragged per-slot k (DESIGN.md §11) —
+    same logits, bitwise, for the same selection.
     """
+    if cfg.fused_embed:
+        return _forward_compact_fused(
+            params, rgb, cfg, indices, mask, project_fn, precomputed,
+            cache, wire, k_cap, stale_cap,
+        )
     out = apply_frontend(
         params["ip2"], rgb, cfg.frontend,
         mask=mask, indices=indices, mode="compact", project_fn=project_fn,

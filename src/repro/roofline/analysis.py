@@ -40,9 +40,20 @@ _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
 def _line_result_bytes(line: str) -> int:
-    """Bytes of the result shape(s) on an HLO op line ('%x = TYPE op(...')."""
+    """Bytes of the result shape(s) on an HLO op line ('%x = TYPE op(...').
+
+    Results may be tuple-shaped — '%x = (f32[8,128], u32[]) all-reduce-start(…'
+    — where everything before the first '(' is empty; the result shapes
+    then live inside the leading parenthesized group, which must be kept
+    (only the operand list after the op name is excluded)."""
     lhs = line.split("=", 1)[1] if "=" in line else line
-    head = lhs.split("(", 1)[0]
+    lhs = lhs.lstrip()
+    if lhs.startswith("("):
+        # tuple result: scan up to its closing paren, not the first '('
+        close = lhs.find(")")
+        head = lhs[: close + 1] if close != -1 else lhs
+    else:
+        head = lhs.split("(", 1)[0]
     total = 0
     for dt, dims in _SHAPE_RE.findall(head):
         if dt not in _DTYPE_BYTES:
@@ -106,6 +117,15 @@ class RooflineTerms:
     def t_bound(self) -> float:
         return max(self.t_compute, self.t_memory, self.t_collective)
 
+    @property
+    def mxu_occupancy(self) -> float:
+        """Fraction of the bound time the MXU is doing useful math:
+        t_compute / t_bound — 1.0 when compute-bound, < 1 when memory or
+        collective traffic stalls the systolic array. The block-shape
+        sweep (benchmarks/bench_roofline.py) maximizes this."""
+        t = self.t_bound
+        return self.t_compute / t if t > 0 else 0.0
+
     def as_dict(self) -> dict:
         return {
             "flops_per_chip": self.flops_per_chip,
@@ -115,6 +135,7 @@ class RooflineTerms:
             "t_memory_s": self.t_memory,
             "t_collective_s": self.t_collective,
             "bottleneck": self.bottleneck,
+            "mxu_occupancy": self.mxu_occupancy,
         }
 
 
@@ -143,6 +164,58 @@ def cost_point(compiled) -> dict:
         "bytes": float(ca.get("bytes accessed", 0.0)),
         "coll_bytes": float(coll["total"]),
         "coll_detail": {k: v for k, v in coll.items() if k not in ("total",)},
+    }
+
+
+def megakernel_cost(
+    row_counts,
+    k: int,
+    n2: int,
+    m: int,
+    d: int | None = None,
+    block_r: int = 8,
+    block_m: int = 128,
+    block_k: int = 256,
+    out_bytes: int = 1,
+) -> dict:
+    """Analytic (flops, bytes) model of the ragged frontend megakernel
+    (DESIGN.md §11) at given per-slot ``row_counts``.
+
+    XLA's static cost analysis prices every grid step, so runtime
+    raggedness — banks whose MXU work is skipped by ``pl.when`` and whose
+    DMAs the pipeliner elides on unchanged block indices — is invisible to
+    :func:`cost_point`. This model prices what the kernel ACTUALLY does: a
+    row bank of ``block_r`` slots only computes/streams when its first row
+    position is below its slot's count, so FLOPs and bytes scale with
+    ``sum(ceil(count/block_r))`` active banks, not with slots·k. Output
+    writes cover every bank (inactive banks write zeros — the defined
+    shed-row payload). ``d`` prices the fused embed stage (codes @ W8)
+    on top; ``d=None`` is the ragged projection alone with ``out_bytes``
+    per emitted element (1 for the int8 code wire). Same keys as
+    :func:`cost_point` so :class:`RooflineTerms` consumes either.
+    """
+    k_pad = -(-n2 // block_k) * block_k
+    m_pad = -(-m // block_m) * block_m
+    n_banks = -(-k // block_r)
+    counts = [max(0, min(int(c), k)) for c in row_counts]
+    active_banks = sum(-(-c // block_r) for c in counts)
+    total_banks = len(counts) * n_banks
+
+    flops = active_banks * 2.0 * block_r * k_pad * m_pad
+    bytes_ = active_banks * block_r * k_pad * 4.0       # gathered patch rows
+    bytes_ += active_banks * k_pad * m_pad * 4.0        # weight stream/bank
+    if d is None:
+        bytes_ += total_banks * block_r * m_pad * float(out_bytes)
+    else:
+        d_pad = -(-d // 128) * 128
+        flops += active_banks * 2.0 * block_r * m_pad * d_pad
+        bytes_ += m_pad * d_pad * 1.0 + d_pad * 4.0     # embed w8 + scales
+        bytes_ += total_banks * block_r * d_pad * 4.0   # f32 embed output
+    return {
+        "flops": flops,
+        "bytes": bytes_,
+        "coll_bytes": 0.0,
+        "detail": {"active_banks": active_banks, "total_banks": total_banks},
     }
 
 

@@ -49,7 +49,10 @@ jitted step:
   ``k_eff``) are updated inside the jitted step from this frame's
   measured events and applied to the next frame's gate. Data, not
   shapes — a governed engine still compiles exactly once, and a slack
-  budget is a bitwise no-op.
+  budget is a bitwise no-op. Both knobs also bound the ragged kernels'
+  per-slot row counts (DESIGN.md §11), so what the governor sheds is
+  work the MXU never does and bytes VMEM never moves — not
+  computed-then-masked tokens.
 
 Use the engine when streams come and go or when one host serves many
 cameras; use bare ``make_saccade_step`` for a single fixed-batch stream

@@ -105,7 +105,10 @@ def make_saccade_step(cfg, explore: float = 0.1, project_fn=None,
       explore: see :func:`saccade_scores`.
       project_fn: optional kernel-backed projection (e.g.
         ``ops.ip2_project_fn(cfg.frontend.patch, interpret=...)``) applied
-        to the gathered active patches.
+        to the gathered active patches. Orthogonally,
+        ``cfg.fused_embed=True`` routes the whole frontend->embed seam
+        through the fused megakernel (DESIGN.md §11) — bitwise the staged
+        trajectory (tests/test_megakernel.py).
       temporal: enable the temporal delta gate (``cfg.frontend.temporal``;
         DESIGN.md §6). The step then takes and returns a
         :class:`repro.core.temporal.FeatureCache` — only the stale subset

@@ -234,6 +234,42 @@ class TestSparseProjection:
             np.asarray(jnp.take_along_axis(c_dense, idx[..., None], axis=-2)),
         )
 
+    @pytest.mark.parametrize("k", [1, 3, 9])     # single saccade .. k == P
+    @pytest.mark.parametrize("bp_r,bm,bk", [
+        (1, 128, 128),
+        (8, 128, 256),       # shipped defaults
+        (8, 256, 128),       # non-divisible M=50 and N2=576 pad both blocks
+        (16, 512, 256),      # the roofline-picked m_steps=1 shape
+    ])
+    def test_block_sweep_parity_battery_all_three_kernels(self, k, bp_r, bm, bk):
+        """Satellite battery (DESIGN.md §11): the dense kernel, the sparse
+        gather kernel, and the ragged megakernel path emit BITWISE-identical
+        int8 wire codes for the same selection at every block tiling —
+        including pad remainders (M=50, N2=576) and the k=1 / k=P edges.
+        ``bp_r`` doubles as block_p (dense) and block_r (sparse/ragged)."""
+        spec = proj.PatchSpec(patch_h=24, patch_w=24, n_vectors=50)
+        adc = adc_mod.ADCSpec(bits=8)
+        patches = jax.random.uniform(KEY, (2, 9, 576))
+        w = jax.random.normal(jax.random.PRNGKey(1), (50, 576)) * 2.0
+        idx = jnp.stack([
+            jax.random.permutation(jax.random.PRNGKey(2 + b),
+                                   jnp.arange(9))[:k]
+            for b in range(2)
+        ])
+        c_dense = ops.ip2_project(patches, w, spec, adc=adc, codes=True,
+                                  block_p=bp_r, block_m=bm, block_k=bk,
+                                  interpret=True)
+        want = jnp.take_along_axis(c_dense, idx[..., None], axis=-2)
+        c_sparse = ops.ip2_project_sparse(
+            patches, w, idx, spec, adc=adc, codes=True,
+            block_r=bp_r, block_m=bm, block_k=bk, interpret=True)
+        np.testing.assert_array_equal(np.asarray(c_sparse), np.asarray(want))
+        c_ragged = ops.ip2_project_sparse(
+            patches, w, idx, spec, adc=adc, codes=True,
+            row_counts=jnp.full((2,), k, jnp.int32),
+            block_r=bp_r, block_m=bm, block_k=bk, interpret=True)
+        np.testing.assert_array_equal(np.asarray(c_ragged), np.asarray(want))
+
     def test_codes_require_adc(self):
         spec = proj.PatchSpec(patch_h=8, patch_w=8, n_vectors=16)
         patches = jax.random.uniform(KEY, (1, 4, 64))

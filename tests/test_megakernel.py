@@ -1,0 +1,392 @@
+"""Fused frontend megakernel + ragged per-slot k (DESIGN.md §11).
+
+The contracts PR 6's acceptance pins:
+
+* the fused megakernel (projection + fused ADC + w8a8 embed in ONE
+  kernel) is BITWISE equal to the staged
+  ``ip2_project_sparse(codes=True)`` -> ``quant_matmul_pre`` seam for the
+  same selection, across block shapes, pad remainders, and k edges;
+* the closed saccade loop driven by the fused model reproduces the staged
+  trajectory exactly — identical logits AND identical next-frame
+  selections at every step;
+* ragged per-slot row counts are a pure data knob: the valid prefix is
+  bitwise the full computation, the shed tail is exactly zero, and no
+  count value triggers a retrace (one compile across governor tiers;
+  engine churn stays ``n_traces == 1``);
+* ``ops.program_weights`` (offline DAC programming) is bitwise the
+  per-call quantization it replaces;
+* ``quant_matmul_pre`` threads the requested ``out_dtype`` into the
+  kernel instead of casting after the fact;
+* the roofline extractor parses tuple-shaped HLO results and the analytic
+  ``megakernel_cost`` model prices ragged shedding (XLA's static cost
+  analysis cannot see it).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adc as adc_mod
+from repro.core import projection as proj
+from repro.core.frontend import FrontendConfig
+from repro.kernels import ops
+from repro.models import vit as vit_mod
+from repro.serve import serve_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _fused_operands(n2=64, n_vec=24, n_patches=16, k=6, batch=2, d=16,
+                    adc_bits=8, seed=0):
+    """Patches, DAC weights, a selection, and int8 embed weights — the
+    operand set both the staged seam and the fused megakernel consume."""
+    spec = proj.PatchSpec(
+        patch_h=int(n2 ** 0.5), patch_w=int(n2 ** 0.5), n_vectors=n_vec)
+    adc = adc_mod.ADCSpec(bits=adc_bits)
+    patches = jax.random.uniform(
+        jax.random.PRNGKey(seed), (batch, n_patches, n2))
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (n_vec, n2)) * 2.0
+    idx = jnp.stack([
+        jax.random.permutation(jax.random.PRNGKey(seed + 2 + b),
+                               jnp.arange(n_patches))[:k]
+        for b in range(batch)
+    ])
+    embed = jax.random.normal(
+        jax.random.PRNGKey(seed + 9), (n_vec, d)) * 0.1
+    w8, s_w = ops.quantize_weights_int8(embed)
+    return spec, adc, patches, w, idx, w8, s_w
+
+
+def _staged(patches, w, idx, spec, adc, w8, s_w, **kw):
+    codes = ops.ip2_project_sparse(
+        patches, w, idx, spec, adc=adc, codes=True, **kw)
+    return ops.quant_matmul_pre(codes, jnp.float32(adc.lsb), w8, s_w)
+
+
+class TestFusedKernelParity:
+    def test_fused_equals_staged_bitwise(self):
+        spec, adc, patches, w, idx, w8, s_w = _fused_operands()
+        want = _staged(patches, w, idx, spec, adc, w8, s_w)
+        got = ops.ip2_fused_embed(patches, w, idx, spec, adc, w8, s_w)
+        assert got.dtype == jnp.float32 and got.shape == want.shape
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("br,bm,bk", [
+        (1, 128, 128),       # k=1-sized row banks
+        (4, 128, 256),
+        (8, 256, 128),       # non-divisible M and N2 pad into both blocks
+        (8, 512, 256),       # the roofline-picked m_steps=1 shape
+        (16, 128, 128),      # bank wider than k: clamped to k rows
+    ])
+    def test_fused_block_shape_sweep_bitwise(self, br, bm, bk):
+        """Satellite battery: block shapes are pure perf knobs — every
+        tiling reproduces the staged seam bit for bit, including pad
+        remainders (M=24 -> 128/256-lane blocks, N2=64 -> 128/256 K)."""
+        spec, adc, patches, w, idx, w8, s_w = _fused_operands()
+        want = _staged(patches, w, idx, spec, adc, w8, s_w)
+        got = ops.ip2_fused_embed(patches, w, idx, spec, adc, w8, s_w,
+                                  block_r=br, block_m=bm, block_k=bk)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("k", [1, 16])
+    def test_fused_k_edges(self, k):
+        """k=1 (single saccade) and k=P (compact degenerates to dense)."""
+        spec, adc, patches, w, idx, w8, s_w = _fused_operands(
+            n_patches=16, k=k)
+        want = _staged(patches, w, idx, spec, adc, w8, s_w)
+        got = ops.ip2_fused_embed(patches, w, idx, spec, adc, w8, s_w)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_fused_codes_within_2lsb_of_float_readout(self):
+        """The ISSUE's accuracy gate: the code-space features the fused
+        kernel consumes stay within 2 ADC LSB of the un-quantized analog
+        float readout (they differ by one ADC rounding, <= 0.5 LSB away
+        from clip edges)."""
+        spec, adc, patches, w, idx, w8, s_w = _fused_operands()
+        codes = ops.ip2_project_sparse(
+            patches, w, idx, spec, adc=adc, codes=True)
+        scale, zero = adc_mod.readout_scale_zero(
+            spec.summer.v_ref, jnp.zeros(()), adc)
+        dequant = adc_mod.dequantize(codes.astype(jnp.float32), scale, zero)
+        float_feat = ops.ip2_project_sparse(patches, w, idx, spec)
+        err = np.max(np.abs(np.asarray(dequant) - np.asarray(float_feat)))
+        assert err <= 2.0 * adc.lsb, f"code wire {err} > 2 LSB ({2 * adc.lsb})"
+
+    def test_fused_requires_adc(self):
+        spec, adc, patches, w, idx, w8, s_w = _fused_operands()
+        with pytest.raises(ValueError, match="code space"):
+            ops.ip2_fused_embed(patches, w, idx, spec, None, w8, s_w)
+
+    def test_fused_rejects_mismatched_embed_rows(self):
+        spec, adc, patches, w, idx, w8, s_w = _fused_operands()
+        with pytest.raises(ValueError, match="embed rows"):
+            ops.ip2_fused_embed(patches, w, idx, spec, adc, w8[:-1], s_w)
+
+
+class TestProgramWeights:
+    def test_program_weights_bitwise_per_call(self):
+        """Satellite 2: offline DAC programming == per-call quantization,
+        on the dense, sparse, and fused entries."""
+        spec, adc, patches, w, idx, w8, s_w = _fused_operands()
+        pw = ops.program_weights(w, spec)
+        assert isinstance(pw, ops.ProgrammedWeights)
+        np.testing.assert_array_equal(
+            np.asarray(ops.ip2_project(patches, pw, spec)),
+            np.asarray(ops.ip2_project(patches, w, spec)))
+        np.testing.assert_array_equal(
+            np.asarray(ops.ip2_project_sparse(patches, pw, idx, spec,
+                                              adc=adc, codes=True)),
+            np.asarray(ops.ip2_project_sparse(patches, w, idx, spec,
+                                              adc=adc, codes=True)))
+        np.testing.assert_array_equal(
+            np.asarray(ops.ip2_fused_embed(patches, pw, idx, spec, adc,
+                                           w8, s_w)),
+            np.asarray(ops.ip2_fused_embed(patches, w, idx, spec, adc,
+                                           w8, s_w)))
+
+    def test_programmed_weights_are_on_the_dac_grid(self):
+        spec, _, _, w, _, _, _ = _fused_operands()
+        pw = ops.program_weights(w, spec)
+        again = ops.program_weights(pw, spec)    # idempotent resolve
+        np.testing.assert_array_equal(np.asarray(again.w_q),
+                                      np.asarray(pw.w_q))
+
+
+class TestOutDtypeThreading:
+    def test_quant_matmul_pre_threads_out_dtype(self):
+        """Satellite 6: the requested out_dtype reaches the kernel epilogue
+        (one rounding) instead of being cast after a float32 round trip."""
+        a8 = jnp.asarray(
+            jax.random.randint(KEY, (3, 40), -127, 128), jnp.int8)
+        s_a = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (3,))) + 0.1
+        w8, s_w = ops.quantize_weights_int8(
+            jax.random.normal(jax.random.PRNGKey(2), (40, 24)))
+        out = ops.quant_matmul_pre(a8, s_a, w8, s_w, out_dtype=jnp.bfloat16)
+        assert out.dtype == jnp.bfloat16
+        f32 = ops.quant_matmul_pre(a8, s_a, w8, s_w)
+        assert f32.dtype == jnp.float32
+        np.testing.assert_array_equal(
+            np.asarray(out, np.float32),
+            np.asarray(f32.astype(jnp.bfloat16), np.float32))
+
+
+class TestRaggedK:
+    def test_ragged_prefix_bitwise_tail_zero(self):
+        """row_counts is the ragged-k contract: rows < count are bitwise
+        the full computation, rows >= count are exactly zero."""
+        spec, adc, patches, w, idx, w8, s_w = _fused_operands(k=6)
+        counts = jnp.asarray([2, 5], jnp.int32)
+        full = ops.ip2_project_sparse(patches, w, idx, spec,
+                                      adc=adc, codes=True)
+        rag = ops.ip2_project_sparse(patches, w, idx, spec, adc=adc,
+                                     codes=True, row_counts=counts)
+        for b, c in enumerate([2, 5]):
+            np.testing.assert_array_equal(np.asarray(rag[b, :c]),
+                                          np.asarray(full[b, :c]))
+            assert not np.any(np.asarray(rag[b, c:]))
+
+    def test_fused_ragged_prefix_bitwise_tail_zero(self):
+        spec, adc, patches, w, idx, w8, s_w = _fused_operands(k=6)
+        counts = jnp.asarray([1, 4], jnp.int32)
+        full = ops.ip2_fused_embed(patches, w, idx, spec, adc, w8, s_w)
+        rag = ops.ip2_fused_embed(patches, w, idx, spec, adc, w8, s_w,
+                                  row_counts=counts)
+        for b, c in enumerate([1, 4]):
+            np.testing.assert_array_equal(np.asarray(rag[b, :c]),
+                                          np.asarray(full[b, :c]))
+            assert not np.any(np.asarray(rag[b, c:]))
+
+    def test_ragged_count_edges_clip(self):
+        """counts > k behave as full; counts <= 0 shed everything."""
+        spec, adc, patches, w, idx, w8, s_w = _fused_operands(k=4)
+        full = ops.ip2_fused_embed(patches, w, idx, spec, adc, w8, s_w)
+        over = ops.ip2_fused_embed(patches, w, idx, spec, adc, w8, s_w,
+                                   row_counts=jnp.asarray([99, 4]))
+        np.testing.assert_array_equal(np.asarray(over), np.asarray(full))
+        none = ops.ip2_fused_embed(patches, w, idx, spec, adc, w8, s_w,
+                                   row_counts=jnp.asarray([0, -3]))
+        assert not np.any(np.asarray(none))
+
+    def test_row_counts_are_data_one_trace_across_tiers(self):
+        """The governor's k_eff tiers change only the count VALUES: one
+        jit trace serves every tier (ragged k never retraces)."""
+        spec, adc, patches, w, idx, w8, s_w = _fused_operands(k=6)
+        traces = {"n": 0}
+
+        @jax.jit
+        def fwd(pp, ii, counts):
+            traces["n"] += 1
+            return ops.ip2_fused_embed(pp, w, ii, spec, adc, w8, s_w,
+                                       row_counts=counts)
+
+        outs = [fwd(patches, idx, jnp.asarray([c, 6 - c], jnp.int32))
+                for c in (6, 3, 1)]
+        assert traces["n"] == 1, f"tier changes retraced {traces['n']}x"
+        assert all(o.shape == outs[0].shape for o in outs)
+
+
+def _vit_cfgs(fused):
+    fe = FrontendConfig(
+        image_h=64, image_w=64,
+        patch=proj.PatchSpec(patch_h=16, patch_w=16, n_vectors=48),
+        analog=True, active_fraction=0.25,
+    )
+    return vit_mod.ViTConfig(
+        frontend=fe, n_layers=2, d_model=32, n_heads=2, d_ff=64,
+        quant_embed=True, fused_embed=fused)
+
+
+class TestFusedModel:
+    def _setup(self):
+        cfg_s, cfg_f = _vit_cfgs(False), _vit_cfgs(True)
+        params = vit_mod.prepare_quant_embed(
+            vit_mod.init_vit(jax.random.PRNGKey(0), cfg_s))
+        rgb = jax.random.uniform(jax.random.PRNGKey(1), (2, 64, 64, 3))
+        return cfg_s, cfg_f, params, rgb
+
+    def test_fused_model_bitwise_staged(self):
+        cfg_s, cfg_f, params, rgb = self._setup()
+        ls, as_ = vit_mod.vit_forward_compact(params, rgb, cfg_s)
+        lf, af = vit_mod.vit_forward_compact(params, rgb, cfg_f)
+        np.testing.assert_array_equal(np.asarray(ls), np.asarray(lf))
+        np.testing.assert_array_equal(np.asarray(as_["saliency"]),
+                                      np.asarray(af["saliency"]))
+
+    def test_fused_model_under_k_cap_bitwise_staged(self):
+        cfg_s, cfg_f, params, rgb = self._setup()
+        cap = jnp.asarray([1, 3], jnp.int32)
+        ls, as_ = vit_mod.vit_forward_compact(params, rgb, cfg_s, k_cap=cap)
+        lf, af = vit_mod.vit_forward_compact(params, rgb, cfg_f, k_cap=cap)
+        np.testing.assert_array_equal(np.asarray(ls), np.asarray(lf))
+        np.testing.assert_array_equal(np.asarray(as_["valid"]),
+                                      np.asarray(af["valid"]))
+        for (n1, v1), (n2, v2) in zip(
+                sorted(as_["events"]._asdict().items()),
+                sorted(af["events"]._asdict().items())):
+            np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2),
+                                          err_msg=n1)
+
+    def test_fused_saccade_trajectory_matches_staged(self):
+        """Closed loop, T frames: the fused model must not perturb the
+        saccade policy — identical logits AND identical next selections
+        every frame (a single flipped bit would fork the trajectory).
+        Op-by-op execution is bitwise; under whole-step jit XLA may lower
+        DOWNSTREAM transformer reductions differently for the two graphs
+        (a fusion-order property, not a kernel one), so the jitted loop
+        additionally pins the selection trajectory and logits to 1e-6."""
+        cfg_s, cfg_f, params, rgb0 = self._setup()
+        step_s = serve_step.make_saccade_step(cfg_s)
+        step_f = serve_step.make_saccade_step(cfg_f)
+        idx_s = idx_f = serve_step.make_bootstrap_indices(cfg_s)(params, rgb0)
+        for t in range(3):
+            rgb = jax.random.uniform(jax.random.PRNGKey(10 + t),
+                                     (2, 64, 64, 3))
+            ls, idx_s, _ = step_s(params, rgb, idx_s)
+            lf, idx_f, _ = step_f(params, rgb, idx_f)
+            np.testing.assert_array_equal(np.asarray(ls), np.asarray(lf),
+                                          err_msg=f"frame {t} logits")
+            np.testing.assert_array_equal(np.asarray(idx_s),
+                                          np.asarray(idx_f),
+                                          err_msg=f"frame {t} selection")
+
+        jit_s = jax.jit(step_s)
+        jit_f = jax.jit(step_f)
+        idx_s = idx_f = serve_step.make_bootstrap_indices(cfg_s)(params, rgb0)
+        for t in range(3):
+            rgb = jax.random.uniform(jax.random.PRNGKey(10 + t),
+                                     (2, 64, 64, 3))
+            ls, idx_s, _ = jit_s(params, rgb, idx_s)
+            lf, idx_f, _ = jit_f(params, rgb, idx_f)
+            np.testing.assert_array_equal(np.asarray(idx_s),
+                                          np.asarray(idx_f),
+                                          err_msg=f"jit frame {t} selection")
+            np.testing.assert_allclose(np.asarray(ls), np.asarray(lf),
+                                       atol=1e-6, rtol=1e-6)
+
+    def test_fused_engine_churn_single_trace(self):
+        """Admit/evict churn on a fused-model engine: still one compile."""
+        from repro.serve.engine import SaccadeEngine
+
+        cfg_f = _vit_cfgs(True)
+        params = vit_mod.prepare_quant_embed(
+            vit_mod.init_vit(jax.random.PRNGKey(0), cfg_f))
+        eng = SaccadeEngine(cfg_f, params, capacity=2)
+        frame = lambda s: np.asarray(jax.random.uniform(
+            jax.random.PRNGKey(s), (64, 64, 3)))
+        eng.admit("a")
+        eng.step({"a": frame(0)})
+        eng.admit("b")
+        eng.step({"a": frame(1), "b": frame(2)})
+        eng.evict("a")
+        eng.admit("c")
+        eng.step({"b": frame(3), "c": frame(4)})
+        assert eng.n_traces == 1, f"churn caused {eng.n_traces} compiles"
+
+    def test_fused_model_validation(self):
+        cfg_s, cfg_f, params, rgb = self._setup()
+        with pytest.raises(ValueError, match="quant_embed"):
+            vit_mod.vit_forward_compact(
+                params, rgb,
+                cfg_f._replace(quant_embed=False)
+                if hasattr(cfg_f, "_replace") else
+                __import__("dataclasses").replace(cfg_f, quant_embed=False))
+        with pytest.raises(ValueError, match="float"):
+            vit_mod.vit_forward_compact(params, rgb, cfg_f, wire="float")
+
+
+class TestRooflineExtractor:
+    def test_tuple_result_bytes(self):
+        """Satellite 1 regression: tuple-shaped HLO results — e.g. the
+        ``(payload, context) all-reduce-start`` pairs async collectives
+        emit — must be sized, not dropped."""
+        from repro.roofline.analysis import _line_result_bytes
+
+        line = ("  %ar = (f32[8,128]{1,0}, u32[]) "
+                "all-reduce-start(f32[8,128] %p), replica_groups={}")
+        assert _line_result_bytes(line) == 8 * 128 * 4 + 4
+        plain = "  %add.1 = f32[4,4]{1,0} add(f32[4,4] %a, f32[4,4] %b)"
+        assert _line_result_bytes(plain) == 4 * 4 * 4
+        scalar = "  %s = pred[] compare(s32[] %i, s32[] %n), direction=LT"
+        assert _line_result_bytes(scalar) == 1
+
+    def test_collective_bytes_counts_tuple_starts_once(self):
+        from repro.roofline.analysis import collective_bytes
+
+        hlo = "\n".join([
+            "ENTRY %main {",
+            "  %ar = (f32[16,128]{1,0}, u32[]) all-reduce-start(%p)",
+            "  %d = f32[16,128]{1,0} all-reduce-done(%ar)",
+            "  %ag = (bf16[4,256]{1,0}, bf16[8,256]{1,0}) "
+            "all-gather-start(%q)",
+            "}",
+        ])
+        got = collective_bytes(hlo)
+        assert got["all-reduce"] == 16 * 128 * 4 + 4     # start, not done
+        assert got["all-gather"] == 4 * 256 * 2 + 8 * 256 * 2
+        assert got["counts"] == {"all-reduce": 1, "all-gather": 1}
+
+    def test_megakernel_cost_prices_ragged_shedding(self):
+        """XLA's static cost analysis cannot see pl.when-skipped banks;
+        the analytic model must: FLOPs/bytes scale with active banks."""
+        from repro.roofline.analysis import RooflineTerms, megakernel_cost
+
+        full = megakernel_cost([64] * 4, 64, 256, 400, d=128)
+        tier = megakernel_cost([16] * 4, 64, 256, 400, d=128)
+        assert full["detail"]["active_banks"] == 32
+        assert tier["detail"]["active_banks"] == 8
+        assert full["flops"] / tier["flops"] == pytest.approx(4.0)
+        assert full["bytes"] > 2.0 * tier["bytes"]
+        zero = megakernel_cost([0] * 4, 64, 256, 400, d=128)
+        assert zero["flops"] == 0.0
+        # occupancy is well defined across the model's output range
+        occ = RooflineTerms(full["flops"], full["bytes"], 0.0).mxu_occupancy
+        assert 0.0 < occ <= 1.0
+
+    def test_megakernel_cost_projection_only_vs_fused(self):
+        from repro.roofline.analysis import megakernel_cost
+
+        proj_only = megakernel_cost([8] * 2, 8, 256, 400)
+        fused = megakernel_cost([8] * 2, 8, 256, 400, d=128)
+        assert fused["flops"] > proj_only["flops"]
+        assert fused["bytes"] > proj_only["bytes"]
