@@ -1,0 +1,126 @@
+"""Bench-smoke guard: the BENCH_throughput.json fleet row must be a real
+sustained-load measurement (DESIGN.md §12) — mirroring the §10 power
+guard (check_power_accounting.py) and §11 roofline guard
+(check_roofline_accounting.py).
+
+Three layers of defence:
+
+1. Schema: the sustained-load row carries a ``fleet`` record with
+   ``source == "perf_counter+EnergyMeter"``, raw per-tick latency
+   samples, per-engine compile counts, the churn ledger and the summed
+   mean event counts — no hand-typed percentiles or milliwatts can sneak
+   into the artifact. The acceptance shape is pinned: peak streams >= 64
+   over >= 2 hosts, >= 2 distinct frame periods, one compile per engine,
+   and admit/evict churn coalesced into fewer flushes than churn ops.
+2. Claims: the stored p50/p99 reproduce from the stored samples, the
+   stored streams/s reproduces from served_frames / wall_s, and the
+   sample count matches the tick count.
+3. Live re-derivation: the stored summed mean event counts are re-priced
+   here with a fresh :class:`EnergyMeter` — pricing is linear in the
+   counts, so the re-priced total must land on the stored fleet mW. The
+   per-frame event laws of DESIGN.md §10 are re-checked against the
+   bench's operating point: dac_loads, cds_samples and pixel_dumps are
+   per-frame constants per served slot, so each summed mean must be an
+   identical integer multiple (the number of metered slots) of its
+   per-frame constant.
+
+Run after ``benchmarks/run.py`` (needs src and the repo root on the
+path): ``PYTHONPATH=src:. python benchmarks/check_fleet_accounting.py``.
+"""
+
+import json
+import sys
+
+FLEET_SOURCE = "perf_counter+EnergyMeter"
+
+
+def main(path: str = "BENCH_throughput.json") -> None:
+    import numpy as np
+
+    with open(path) as f:
+        results = json.load(f)
+    ff = next(v for k, v in results.items() if k.startswith("fleet"))
+    rows = {r["name"]: r for r in ff if "name" in r}
+
+    name = next(n for n in rows if n.startswith("fleet_sustained_"))
+    rec = rows[name].get("fleet")
+
+    # --- layer 1: schema ---------------------------------------------------
+    assert isinstance(rec, dict), f"{name}: no fleet record"
+    assert rec.get("source") == FLEET_SOURCE, (
+        f"{name}: not a measured row (source={rec.get('source')!r})")
+    for key in ("latency_ms_samples", "p50_ms", "p99_ms", "served_frames",
+                "wall_s", "streams_per_s", "peak_streams", "churn_ops",
+                "flushes", "n_traces", "fleet_mw_mean", "events_mean_sum",
+                "ticks", "periods", "frame_hz", "n_hosts"):
+        assert key in rec, f"{name}: fleet record missing {key!r}"
+    assert rec["peak_streams"] >= 64, (
+        f"sustained load peaked at {rec['peak_streams']} streams < 64")
+    assert rec["n_hosts"] >= 2, f"fleet ran on {rec['n_hosts']} host(s)"
+    assert len(set(rec["periods"])) >= 2, (
+        f"frame rates not mixed: periods {rec['periods']}")
+    assert all(n == 1 for n in rec["n_traces"]), (
+        f"engines recompiled under churn: n_traces={rec['n_traces']}")
+    assert 0 < sum(rec["flushes"]) < rec["churn_ops"], (
+        f"churn not coalesced: {rec['churn_ops']} admit/evict ops "
+        f"-> {sum(rec['flushes'])} flushes")
+
+    # --- layer 2: claims ---------------------------------------------------
+    samples = np.asarray(rec["latency_ms_samples"], dtype=np.float64)
+    assert samples.size == rec["ticks"], (
+        f"{samples.size} latency samples for {rec['ticks']} ticks")
+    for q, key in ((50, "p50_ms"), (99, "p99_ms")):
+        have = float(np.percentile(samples, q))
+        assert abs(have - rec[key]) < 1e-9 * max(1.0, have), (
+            f"stored {key} {rec[key]} != samples percentile {have}")
+    sps = rec["served_frames"] / rec["wall_s"]
+    assert abs(sps - rec["streams_per_s"]) < 1e-9 * max(1.0, sps), (
+        f"stored streams/s {rec['streams_per_s']} != "
+        f"served/wall {sps}")
+
+    # --- layer 3: live re-derivation --------------------------------------
+    from benchmarks.bench_fleet import (
+        ACTIVE_FRACTION, IMAGE, N_VECTORS, PATCH)
+    from repro.core.power import EnergyMeter, EventCounts
+
+    ev = EventCounts(**rec["events_mean_sum"])
+    live_mw = float(EnergyMeter().power_mw(ev, rec["frame_hz"]))
+    assert abs(live_mw - rec["fleet_mw_mean"]) < 1e-5 * max(1.0, live_mw), (
+        f"re-priced fleet mW {live_mw} != artifact {rec['fleet_mw_mean']} — "
+        f"the EnergyMeter drifted from what the bench recorded")
+
+    # per-frame event laws at the bench operating point (DESIGN.md §10):
+    # the per-frame constants divide their summed means exactly, and all
+    # three agree on how many slots were metered
+    n_pixels = float(IMAGE * IMAGE)
+    n2 = float(PATCH * PATCH)
+    n_sel = (n_pixels / n2) * ACTIVE_FRACTION
+    per_frame = {
+        "dac_loads": N_VECTORS * n2,
+        "cds_samples": 2.0 * n_pixels,
+        "pixel_dumps": n_pixels - n_sel * n2,
+    }
+    slot_counts = set()
+    for field, const in per_frame.items():
+        n_slots = rec["events_mean_sum"][field] / const
+        assert abs(n_slots - round(n_slots)) < 1e-6, (
+            f"{field} sum {rec['events_mean_sum'][field]} is not a whole "
+            f"multiple of the per-frame constant {const}")
+        slot_counts.add(round(n_slots))
+    assert len(slot_counts) == 1, (
+        f"per-frame event laws disagree on the metered slot count: "
+        f"{sorted(slot_counts)}")
+    n_metered = slot_counts.pop()
+    assert 0 < n_metered <= rec["peak_streams"], n_metered
+
+    print(f"fleet accounting OK: {rec['peak_streams']} streams / "
+          f"{rec['n_hosts']} hosts, p50/p99 reproduce from "
+          f"{samples.size} samples ({rec['p50_ms']:.2f}/"
+          f"{rec['p99_ms']:.2f} ms), {rec['churn_ops']} churn ops -> "
+          f"{sum(rec['flushes'])} flushes, traces {rec['n_traces']}, "
+          f"re-priced {live_mw:.3f} mW == artifact, event laws hold over "
+          f"{n_metered} metered slots")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

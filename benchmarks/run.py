@@ -19,8 +19,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
-        bench_kernels, bench_leakage, bench_power, bench_roofline,
-        bench_throughput,
+        bench_fleet, bench_kernels, bench_leakage, bench_power,
+        bench_roofline, bench_throughput,
     )
 
     modules = [
@@ -29,6 +29,7 @@ def main() -> None:
         ("throughput(Fig.3,§2.1.4)", bench_throughput),
         ("kernels", bench_kernels),
         ("roofline(§11)", bench_roofline),
+        ("fleet(§12)", bench_fleet),
     ]
     if not args.quick:
         from benchmarks import bench_accuracy

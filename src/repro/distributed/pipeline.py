@@ -73,9 +73,14 @@ def pipeline_forward(
         # final-stage outputs live at ticks n_stages-1 .. ticks-1
         out = jax.lax.dynamic_slice_in_dim(ys, n_stages - 1, n_micro, axis=0)
         # broadcast the last stage's result to all stages so out_specs can
-        # be replicated (psum of masked contributions)
-        is_last = (stage == n_stages - 1).astype(out.dtype)
-        return jax.lax.psum(out * is_last, axis)
+        # be replicated (psum of masked contributions). Mask by SELECT, not
+        # multiply: non-final stages hold bubble-tick garbage here, and if
+        # a stage_fn turns the zero-carry bubble input into NaN/inf then
+        # `garbage * 0 = NaN` would poison the real output through the
+        # psum — where() never evaluates arithmetic on the untaken branch
+        is_last = stage == n_stages - 1
+        return jax.lax.psum(jnp.where(is_last, out, jnp.zeros_like(out)),
+                            axis)
 
     pspecs = jax.tree.map(lambda _: P(axis), stage_params)
     return shard_map(

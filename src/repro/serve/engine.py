@@ -9,11 +9,37 @@ jitted step:
 
 * **Slots, not streams.** The engine owns ``capacity`` fixed slots; every
   device tensor is slot-major with a static leading axis, so the batched
-  step is a pure function of ``(params, frames, state)`` and compiles
-  exactly once. Streams join/leave between frames via host-side
+  step is a pure function of ``(params, frames, fed, state)`` and
+  compiles exactly once. Streams join/leave between frames via host-side
   bookkeeping (``admit`` / ``evict``) that only rewrites state rows —
   never shapes — so an admit→evict→admit cycle causes ZERO recompiles
   (asserted in tests via the engine's trace counter).
+
+* **Partial-frame async steps** (DESIGN.md §12). ``step(frames)`` takes
+  any SUBSET of the admitted streams — streams at different frame rates
+  (a 30 Hz door camera next to a 7.5 Hz parking-lot camera) coexist in
+  one engine. Which slots are fed this tick is a ``fed`` (S,) bool DATA
+  argument of the same compiled program, so mixed-rate serving never
+  retraces. An admitted-but-un-fed slot is a *hold*: its gaze state,
+  frame age, temporal cache, and energy meters pass through bitwise
+  unchanged (events accrue zero — the stream spent nothing this tick;
+  the cache's droop clock advances once per SERVED frame, mirroring a
+  dedicated per-stream loop), and the fed slots' outputs are bitwise
+  identical to a full-cover step (per-slot independence; asserted in
+  tests/test_serve_engine.py).
+
+* **Double-buffered ingest + coalesced churn** (DESIGN.md §12). Frame
+  upload stages into one of two REUSED host buffers (alternating per
+  step) instead of a fresh ``np.zeros((capacity, H, W, 3))`` per call:
+  frame t+1's row-gather overwrites the buffer frame t-1 was uploaded
+  from, never the one frame t's still-running step may be reading —
+  allocation-free steady state with the gather overlapping the previous
+  step's device work. Admit/evict churn is continuously batched the
+  same way: ``admit``/``evict`` only record host-side bookkeeping, and
+  all pending row-writes (admit resets, evict flag-clears, governor
+  budget re-splits) coalesce into ONE jitted flush right before the
+  next step (or any state read) — k admits between two frames cost one
+  device dispatch, not k.
 
 * **Per-stream gaze state.** :class:`StreamState` carries each slot's
   current patch indices, an attention-score EMA (temporal smoothing of
@@ -149,14 +175,17 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
                      governor: "gov_mod.GovernorSpec | None" = None,
                      meter: EnergyMeter = EnergyMeter(),
                      frame_hz: float = 30.0):
-    """Batched slot step: (params, frames (S,H,W,3), state) -> (logits, state).
+    """Batched slot step:
+    (params, frames (S,H,W,3), fed (S,) bool, state) -> (logits, state).
 
     Per slot this is exactly one ``make_saccade_step`` frame — same compact
     forward, same :func:`saccade_scores` policy — plus the engine-only
     pieces: in-step bootstrap at age 0, EMA blending of the scores, and
-    freezing of inactive slots (their rows pass through unchanged and
-    their logits are zeroed). Pure and jit-stable: nothing here depends on
-    which slots are occupied except through ``state`` values.
+    freezing of inactive OR un-fed slots (their rows pass through
+    unchanged and their logits are zeroed; DESIGN.md §12 hold semantics).
+    ``fed`` is DATA: feeding any subset of the slots is the same compiled
+    program. Pure and jit-stable: nothing here depends on which slots are
+    occupied or fed except through ``state`` and ``fed`` values.
 
     With ``temporal=True`` the per-slot temporal cache (held-charge
     feature reuse, DESIGN.md §6) is threaded through ``state.cache``; a
@@ -180,7 +209,7 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
     j_max = fcfg.temporal.budget(k)
     n_pixels = float(fcfg.image_h * fcfg.image_w)
 
-    def step(params, frames, state: StreamState):
+    def step(params, frames, fed, state: StreamState):
         # optics/mosaic/CDS once; forwarded to the compact forward below
         patches, weights = fe.sensor_patches(params["ip2"], frames, fcfg)
         boot = sal.topk_patch_indices(sal.patch_energy(patches), k)
@@ -208,13 +237,19 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
         )
         next_idx = sal.topk_patch_indices(ema, k)
 
-        act = state.active
-        # energy meters: only occupied slots serve frames and spend events.
-        # the cumulative meter is a RUNNING MEAN (Welford step over the
-        # frames served since admit): per-frame magnitude, so long-lived
-        # streams never freeze a float32 accumulator (see StreamState)
-        actf = act.astype(jnp.float32)
-        ev_last = EventCounts(*(e * actf for e in aux["events"]))
+        # a slot advances only when it is occupied AND fed this tick —
+        # un-fed slots are a data-only hold (DESIGN.md §12): every row
+        # below passes through unchanged, exactly like an inactive slot
+        act = state.active & fed
+        # energy meters: only served slots spend events (held streams
+        # accrue zero — they converted nothing this tick). The cumulative
+        # meter is a RUNNING MEAN (Welford step over the frames served
+        # since admit): per-frame magnitude, so long-lived streams never
+        # freeze a float32 accumulator (see StreamState)
+        ev_last = EventCounts(*(
+            jnp.where(act, e, o)
+            for e, o in zip(aux["events"], state.events_last)
+        ))
         n_served = (state.frame_age + 1).astype(jnp.float32)     # incl. this
         ev_mean = EventCounts(*(
             jnp.where(act, m + (e - m) / n_served, m)
@@ -223,7 +258,10 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
         controls = None
         if governor is not None:
             controls = gov_mod.control_update(
-                governor, state.controls, ev_last, act, meter, frame_hz,
+                governor, state.controls,
+                EventCounts(*(e * act.astype(jnp.float32)
+                              for e in aux["events"])),
+                act, meter, frame_hz,
                 n_pixels, fcfg.patch.pixels_per_patch, fcfg.patch.n_vectors,
                 j_max, k,
             )
@@ -231,7 +269,7 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
             indices=jnp.where(act[:, None], next_idx, state.indices),
             ema=jnp.where(act[:, None], ema, state.ema),
             frame_age=jnp.where(act, state.frame_age + 1, state.frame_age),
-            active=act,
+            active=state.active,
             cache=(_freeze_rows(act, aux["cache"], state.cache)
                    if temporal else None),
             events_last=ev_last,
@@ -244,11 +282,23 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
     return step
 
 
-def _make_admit(capacity: int, k: int, j_max: int):
-    """Row reset with a *traced* slot scalar — one compile for any slot."""
+def _make_churn(k: int, j_max: int, governed: bool):
+    """ONE coalesced churn flush (DESIGN.md §12): every admit row-reset,
+    evict flag-clear, and governor budget re-split that accumulated since
+    the last step is applied in a single jitted call over *traced* (S,)
+    hit masks — continuous batching of slot churn, one device dispatch
+    per frame no matter how many streams joined or left between frames.
 
-    def admit(state: StreamState, slot) -> StreamState:
-        hit = jnp.arange(capacity) == slot
+    ``admit_hit`` rows are fully reset (a recycled slot can never serve
+    its previous occupant's state); ``evict_hit`` rows only drop the
+    active flag (their stale rows are garbage until the next admit resets
+    them, same as the old per-call evict). A slot admitted after an evict
+    in the same window is just an admit (the reset supersedes the clear —
+    host bookkeeping collapses the ops last-wins per slot)."""
+
+    def churn(state: StreamState, admit_hit, evict_hit,
+              budgets=None) -> StreamState:
+        hit = admit_hit
         cache = state.cache
         if cache is not None:
             # full row wipe: a recycled slot starts with no held charge.
@@ -271,44 +321,46 @@ def _make_admit(capacity: int, k: int, j_max: int):
         controls = state.controls
         if controls is not None:
             controls = gov_mod.reset_rows(controls, hit, j_max)
+            if governed:
+                controls = controls._replace(budget_mw=budgets)
         return StreamState(
             indices=jnp.where(hit[:, None],
                               jnp.arange(k, dtype=jnp.int32)[None], state.indices),
             ema=jnp.where(hit[:, None], 0.0, state.ema),
             frame_age=jnp.where(hit, 0, state.frame_age),
-            active=state.active | hit,
+            active=(state.active & ~evict_hit) | hit,
             cache=cache,
             events_last=wiped,
             events_mean=wiped_mean,
             controls=controls,
         )
 
-    return admit
-
-
-def _make_evict(capacity: int):
-    def evict(state: StreamState, slot) -> StreamState:
-        hit = jnp.arange(capacity) == slot
-        return state._replace(active=state.active & ~hit)
-
-    return evict
+    return churn
 
 
 class SaccadeEngine:
     """Slot-based multi-stream saccadic server.
 
     Host-side bookkeeping maps stream ids to slots; all device state lives
-    in :class:`StreamState` and is only ever rewritten by three jitted
-    pure functions (step / admit-row-reset / evict-flag-clear), each
+    in :class:`StreamState` and is only ever rewritten by two jitted pure
+    functions (the batched step, and ONE coalesced churn flush batching
+    every pending admit/evict/budget row-write — DESIGN.md §12), each
     compiled exactly once. ``n_traces`` counts retraces of the batched
     step — the zero-recompile contract is ``engine.n_traces == 1`` no
     matter how streams churn.
 
-    ``engine.state`` is the inspection surface, but its buffers are
-    DONATED to the next step/admit/evict call: always read through the
-    attribute (``engine.state.frame_age[...]``), never hold a
-    ``StreamState`` reference across a mutation — on backends that
-    implement donation (TPU/GPU) the held buffers are invalidated.
+    ``step(frames)`` serves any SUBSET of the admitted streams (partial-
+    frame async serving, DESIGN.md §12): streams at different frame rates
+    coexist — un-fed slots hold bitwise (state frozen, zero events), fed
+    slots are bitwise identical to a full-cover step. Which slots are fed
+    is data, so mixed-rate serving stays one compile.
+
+    ``engine.state`` is the inspection surface (reading it flushes any
+    pending churn first), but its buffers are DONATED to the next
+    step/churn call: always read through the attribute
+    (``engine.state.frame_age[...]``), never hold a ``StreamState``
+    reference across a mutation — on backends that implement donation
+    (TPU/GPU) the held buffers are invalidated.
 
     Args:
       cfg: ViTConfig for the backend.
@@ -361,6 +413,19 @@ class SaccadeEngine:
         self._priority: dict[Hashable, float] = {}
         self._slots: list[Hashable | None] = [None] * capacity
         self._n_traces = 0
+        # continuous batching of churn (DESIGN.md §12): slot -> "admit" |
+        # "evict", last-op-wins; flushed in ONE jitted call before the
+        # next step or state read
+        self._pending: dict[int, str] = {}
+        self._budgets_dirty = False
+        self._budget_mw = None if governor is None else governor.budget_mw
+        # double-buffered host->device ingest: two reused staging buffers,
+        # alternated per step — frame t+1's row-gather writes the buffer
+        # frame t's in-flight step is NOT reading (DESIGN.md §12)
+        self._ingest = np.zeros(
+            (2, capacity, cfg.frontend.image_h, cfg.frontend.image_w, 3),
+            np.float32)
+        self._ingest_i = 0
 
         fn = make_engine_step(cfg, explore=explore, ema_decay=ema_decay,
                               project_fn=project_fn, temporal=temporal,
@@ -379,25 +444,22 @@ class SaccadeEngine:
                 # per-slot parallel, params replicated — no collectives
                 fn = shard_map(
                     fn, mesh=mesh,
-                    in_specs=(P(), self._slot_spec, self._slot_spec),
+                    in_specs=(P(), self._slot_spec, self._slot_spec,
+                              self._slot_spec),
                     out_specs=(self._slot_spec, self._slot_spec),
                 )
 
-        def counted(params, frames, state):
+        def counted(params, frames, fed, state):
             # trace-time side effect: jit re-traces exactly once per compile,
             # so this counts compilations (the zero-recompile contract)
             self._n_traces += 1
-            return fn(params, frames, state)
+            return fn(params, frames, fed, state)
 
         k = cfg.frontend.n_active
-        self._step_fn = jax.jit(counted, donate_argnums=(2,))
-        self._admit_fn = jax.jit(
-            _make_admit(capacity, k, cfg.frontend.temporal.budget(k)),
-            donate_argnums=(0,))
-        self._evict_fn = jax.jit(_make_evict(capacity), donate_argnums=(0,))
-        self._set_budgets_fn = jax.jit(
-            lambda state, b: state._replace(
-                controls=state.controls._replace(budget_mw=b)),
+        self._step_fn = jax.jit(counted, donate_argnums=(3,))
+        self._churn_fn = jax.jit(
+            _make_churn(k, cfg.frontend.temporal.budget(k),
+                        governed=governor is not None),
             donate_argnums=(0,))
 
         state = init_stream_state(cfg, capacity, temporal=temporal,
@@ -405,9 +467,16 @@ class SaccadeEngine:
         if mesh is not None and self._slot_spec != P():
             sh = NamedSharding(mesh, self._slot_spec)
             state = jax.tree.map(lambda x: jax.device_put(x, sh), state)
-        self.state = state
+        self._state = state
 
     # ---- host-side slot bookkeeping ------------------------------------
+    @property
+    def state(self) -> StreamState:
+        """Device state with any pending churn flushed first — the
+        coalescing is invisible to readers."""
+        self._flush_churn()
+        return self._state
+
     @property
     def n_traces(self) -> int:
         return self._n_traces
@@ -430,7 +499,8 @@ class SaccadeEngine:
         """Claim a free slot for a new stream; its first frame bootstraps
         from the in-pixel energy proxy inside the next step() call.
         ``priority`` weights the stream's share of a governed engine's
-        power budget (ignored ungoverned)."""
+        power budget (ignored ungoverned). Host bookkeeping only — the
+        device row-reset coalesces into the next churn flush."""
         if stream_id in self._slots:
             raise ValueError(f"stream {stream_id!r} already admitted")
         if priority <= 0:
@@ -443,53 +513,91 @@ class SaccadeEngine:
             ) from None
         self._slots[slot] = stream_id
         self._priority[stream_id] = float(priority)
-        self.state = self._admit_fn(self.state, jnp.int32(slot))
-        self._reallocate_budgets()
+        self._pending[slot] = "admit"
+        self._budgets_dirty = True
         return slot
 
     def evict(self, stream_id: Hashable) -> None:
         slot = self.slot_of(stream_id)
         self._slots[slot] = None
         self._priority.pop(stream_id, None)
-        self.state = self._evict_fn(self.state, jnp.int32(slot))
-        self._reallocate_budgets()
+        self._pending[slot] = "evict"        # last-op-wins per slot
+        self._budgets_dirty = True
 
-    def _reallocate_budgets(self) -> None:
-        """Host-side priority-weighted budget split (DESIGN.md §10): a
-        data-only row rewrite on the governed controls — never a
-        recompile, never a shape change."""
+    def set_budget_mw(self, budget_mw: float) -> None:
+        """Rewrite this engine's total power budget (the fleet layer's
+        host-level knob, DESIGN.md §12): per-slot shares are re-split at
+        the next churn flush — data-only, never a recompile."""
         if self.governor is None:
+            raise RuntimeError("engine was built without a governor")
+        if budget_mw <= 0:
+            raise ValueError(f"budget_mw must be > 0, got {budget_mw}")
+        self._budget_mw = float(budget_mw)
+        self._budgets_dirty = True
+
+    @property
+    def budget_mw(self) -> float | None:
+        """The engine-total power budget currently being split over slots
+        (None when ungoverned)."""
+        return self._budget_mw
+
+    def _flush_churn(self) -> None:
+        """Apply every pending admit/evict row-write (plus the governed
+        budget re-split, DESIGN.md §10/§12) in ONE jitted call."""
+        dirty_budget = self.governor is not None and self._budgets_dirty
+        if not self._pending and not dirty_budget:
             return
-        w = np.zeros((self.capacity,), np.float64)
-        for slot, sid in enumerate(self._slots):
-            if sid is not None:
-                w[slot] = self._priority[sid]
-        budgets = gov_mod.allocate_budgets(self.governor, w)
-        self.state = self._set_budgets_fn(self.state, jnp.asarray(budgets))
+        admit_hit = np.zeros((self.capacity,), bool)
+        evict_hit = np.zeros((self.capacity,), bool)
+        for slot, op in self._pending.items():
+            (admit_hit if op == "admit" else evict_hit)[slot] = True
+        args = ()
+        if self.governor is not None:
+            w = np.zeros((self.capacity,), np.float64)
+            for slot, sid in enumerate(self._slots):
+                if sid is not None:
+                    w[slot] = self._priority[sid]
+            args = (jnp.asarray(gov_mod.allocate_budgets(
+                self.governor, w, total_mw=self._budget_mw)),)
+        self._state = self._churn_fn(
+            self._state, jnp.asarray(admit_hit), jnp.asarray(evict_hit),
+            *args)
+        self._pending.clear()
+        self._budgets_dirty = False
 
     # ---- serving -------------------------------------------------------
     def step(self, frames: Mapping[Hashable, Any]) -> dict[Hashable, np.ndarray]:
-        """Serve one frame for every admitted stream.
+        """Serve one frame for any subset of the admitted streams.
 
-        ``frames`` maps stream id -> (H, W, 3) RGB frame and must cover
-        exactly the admitted streams (the engine advances all per-stream
-        clocks together). Returns stream id -> (n_classes,) logits.
+        ``frames`` maps stream id -> (H, W, 3) RGB frame. Admitted
+        streams without a frame this tick HOLD (partial-frame async
+        serving, DESIGN.md §12): their per-stream clocks, gaze state,
+        temporal cache, and meters do not advance, and the fed streams
+        are served bitwise as if every stream had been fed. Unknown
+        stream ids raise. Returns stream id -> (n_classes,) logits for
+        exactly the fed streams.
         """
-        ids = set(self.stream_ids)
-        if not ids and not frames:
-            return {}                    # idle engine: nothing to serve
-        if set(frames) != ids:
-            missing, unknown = ids - set(frames), set(frames) - ids
+        unknown = set(frames) - set(self.stream_ids)
+        if unknown:
             raise ValueError(
-                f"frames must cover exactly the admitted streams; "
-                f"missing={sorted(map(str, missing))} "
+                f"frames for streams never admitted: "
                 f"unknown={sorted(map(str, unknown))}"
             )
-        f = self.cfg.frontend
-        buf = np.zeros((self.capacity, f.image_h, f.image_w, 3), np.float32)
+        if not frames:
+            return {}                    # nothing fed: all slots hold
+        self._flush_churn()
+        # double-buffered ingest: gather rows into the buffer the previous
+        # step is NOT reading; un-fed rows keep stale bytes (their slots
+        # are held — the payload never reaches state or logits)
+        buf = self._ingest[self._ingest_i]
+        self._ingest_i ^= 1
+        fed = np.zeros((self.capacity,), bool)
         for sid, frame in frames.items():
-            buf[self.slot_of(sid)] = np.asarray(frame, np.float32)
-        logits, self.state = self._step_fn(self.params, jnp.asarray(buf), self.state)
+            slot = self.slot_of(sid)
+            buf[slot] = np.asarray(frame, np.float32)
+            fed[slot] = True
+        logits, self._state = self._step_fn(
+            self.params, jnp.asarray(buf), jnp.asarray(fed), self._state)
         logits = np.asarray(logits)
         return {sid: logits[self.slot_of(sid)] for sid in frames}
 
@@ -505,9 +613,24 @@ class SaccadeEngine:
             raise RuntimeError(
                 f"stream {stream_id!r} has not served a frame yet"
             )
-        return float(self.state.cache.n_stale[slot]) / self.cfg.frontend.n_active
+        # a governed slot only selects its tier's k_eff tokens, not the
+        # static k — dividing by cfg n_active would understate recompute
+        # on shed slots (e.g. 8 stale of a 16-token tier is 0.5, not 0.25)
+        denom = (self.k_tier(stream_id) if self.governor is not None
+                 else self.cfg.frontend.n_active)
+        return float(self.state.cache.n_stale[slot]) / denom
 
     # ---- energy metering (DESIGN.md §10) -------------------------------
+    def _fetch_meters(self, window: str) -> tuple[EventCounts, np.ndarray]:
+        """ONE batched device->host fetch of (meter counts, frame ages) —
+        every metering read costs exactly one sync no matter the slot
+        count (asserted in tests/test_serve_engine.py)."""
+        st = self.state
+        src = st.events_last if window == "last" else st.events_mean
+        host, ages = jax.device_get((src, st.frame_age))
+        return (EventCounts(*(np.asarray(e) for e in host)),
+                np.asarray(ages))
+
     def events(self, stream_id: Hashable, window: str = "last") -> EventCounts:
         """This stream's executed energy events: ``window="last"`` — the
         last served frame; ``"mean"`` — the per-frame mean since admit;
@@ -518,13 +641,11 @@ class SaccadeEngine:
             raise ValueError(
                 f"window must be 'last', 'mean' or 'total', got {window!r}")
         slot = self.slot_of(stream_id)
-        src = (self.state.events_last if window == "last"
-               else self.state.events_mean)
-        # one batched device->host fetch, not one sync per count leaf
-        host = jax.device_get(src)
+        host, ages = self._fetch_meters(
+            "last" if window == "last" else "mean")
         ev = EventCounts(*(float(e[slot]) for e in host))
         if window == "total":
-            return ev.scale(float(self.state.frame_age[slot]))
+            return ev.scale(float(ages[slot]))
         return ev
 
     def power_mw(self, stream_id: Hashable, window: str = "last") -> float:
@@ -534,32 +655,30 @@ class SaccadeEngine:
         over every frame served since admit."""
         if window not in ("last", "mean"):
             raise ValueError(f"window must be 'last' or 'mean', got {window!r}")
-        if window == "mean" and int(
-                self.state.frame_age[self.slot_of(stream_id)]) == 0:
+        slot = self.slot_of(stream_id)
+        host, ages = self._fetch_meters(window)
+        if window == "mean" and ages[slot] == 0:
             raise RuntimeError(
                 f"stream {stream_id!r} has not served a frame yet")
         return float(self.meter.power_mw(
-            self.events(stream_id, window), self.frame_hz))
+            EventCounts(*(float(e[slot]) for e in host)), self.frame_hz))
 
     def fleet_power_mw(self, window: str = "last") -> float:
         """Measured frontend power summed over all admitted streams —
         the quantity a governed engine holds against its chip budget.
         Streams admitted but not yet served carry zero events and are
-        skipped (they have no frame to average)."""
+        skipped (they have no frame to average). Priced VECTORIZED over
+        the slot axis from one batched fetch — O(1) syncs and one
+        broadcast pricing pass regardless of capacity."""
         if window not in ("last", "mean"):
             raise ValueError(f"window must be 'last' or 'mean', got {window!r}")
-        src = (self.state.events_last if window == "last"
-               else self.state.events_mean)
-        # one batched fetch for the whole fleet, priced host-side
-        host, ages = jax.device_get((src, self.state.frame_age))
-        total = 0.0
-        for sid in self.stream_ids:
-            slot = self.slot_of(sid)
-            if ages[slot] == 0:
-                continue
-            total += float(self.meter.power_mw(
-                EventCounts(*(float(e[slot]) for e in host)), self.frame_hz))
-        return total
+        host, ages = self._fetch_meters(window)
+        served = np.array(
+            [s is not None for s in self._slots]) & (ages > 0)
+        # EnergyMeter.power_mw is pure leaf arithmetic — (S,) counts in,
+        # (S,) milliwatts out
+        per_slot = np.asarray(self.meter.power_mw(host, self.frame_hz))
+        return float(np.where(served, per_slot, 0.0).sum())
 
     def energy_report(self, stream_id: Hashable) -> dict:
         """Per-component joules this stream has spent since admit."""

@@ -1,0 +1,261 @@
+"""Multi-host fleet coordinator over per-host serving engines (DESIGN.md
+§12).
+
+One :class:`~repro.serve.engine.SaccadeEngine` scales to one mesh's
+slots; the paper's parallelism claim is thousands of cameras, which means
+MANY hosts each running their own engine. This module is the thin,
+host-side layer on top:
+
+* **Per-host engines.** Each host owns a :class:`SaccadeEngine` built on
+  its own device mesh (:func:`make_fleet_meshes` partitions the visible
+  devices into per-host meshes; in production each process sees only its
+  local devices and the coordinator runs on the controller). Engines
+  never talk to each other — streams are fully independent, so fleet
+  scaling is pure horizontal slot capacity and every engine keeps its
+  one-compile contract independently.
+
+* **Per-host admit queues with priority classes.** ``submit(sid,
+  priority_class=...)`` enqueues a stream on the least-loaded host;
+  ``drain()`` (implicit in every ``step``) admits queued streams into
+  free slots HIGHEST CLASS FIRST (FIFO within a class), so when churn
+  outruns capacity, realtime streams never wait behind background ones.
+  The class weight doubles as the stream's governor priority.
+
+* **Budget hierarchy fleet -> host -> slot.** A governed fleet splits the
+  fleet-level mW budget over hosts with the SAME proportional law the
+  engine uses over slots (:func:`repro.serve.governor.allocate_budgets`,
+  ``total_mw=`` override): host weight = the priority mass its admitted
+  streams carry, then each engine re-splits its host share over its slots
+  (DESIGN.md §10). Rebalancing happens on churn only, is data-only row
+  writes end to end, and a slack fleet budget stays a bitwise no-op per
+  the PR-5 governor contract (each engine's slack share is itself slack).
+
+* **Async end to end.** ``fleet.step(frames)`` takes any subset of the
+  admitted streams (the engines' partial-frame hold semantics, DESIGN.md
+  §12), routes each frame to its host, and only dispatches engines that
+  have fed slots this tick — an idle host costs nothing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Hashable, Mapping
+
+import numpy as np
+
+from repro.core.power import EnergyMeter
+from repro.serve import governor as gov_mod
+from repro.serve.engine import SaccadeEngine
+
+# Default priority classes: weight = share of a governed budget, and the
+# admit-queue rank. Matching the paper's deployment story: a few
+# latency-critical streams over a sea of best-effort ones.
+PRIORITY_CLASSES: dict[str, float] = {
+    "realtime": 4.0,
+    "interactive": 2.0,
+    "standard": 1.0,
+    "background": 0.25,
+}
+
+
+def make_fleet_meshes(n_hosts: int, axis: str = "data"):
+    """Partition the visible devices into ``n_hosts`` contiguous per-host
+    meshes (1-D, named ``axis``) — the test/bench stand-in for one process
+    per host, each seeing only its local devices. Returns a list of
+    ``n_hosts`` meshes (None entries when a host would get zero devices
+    is impossible: n_hosts must divide the device count)."""
+    import jax
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if n_hosts < 1:
+        raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+    if len(devs) % n_hosts != 0:
+        raise ValueError(
+            f"{len(devs)} devices do not split over {n_hosts} hosts")
+    per = len(devs) // n_hosts
+    return [Mesh(np.asarray(devs[h * per:(h + 1) * per]), (axis,))
+            for h in range(n_hosts)]
+
+
+@dataclasses.dataclass
+class _Queued:
+    """One waiting admit request."""
+    stream_id: Hashable
+    weight: float
+    seq: int            # FIFO tiebreak within a class
+
+
+class SaccadeFleet:
+    """Fleet of per-host :class:`SaccadeEngine`\\ s behind one API.
+
+    Args:
+      cfg / params: as for the engine (params are shared — replicated per
+        host mesh by the engines themselves).
+      n_hosts: number of per-host engines.
+      capacity: slots PER HOST (fleet capacity = n_hosts * capacity).
+      meshes: optional list of n_hosts meshes (``make_fleet_meshes``);
+        None runs every engine unsharded on the default device.
+      governor: a fleet-level :class:`GovernorSpec`; its ``budget_mw`` is
+        the FLEET budget, split over hosts by admitted priority mass and
+        re-split over slots inside each engine.
+      priority_classes: name -> weight map (default
+        :data:`PRIORITY_CLASSES`).
+      engine_kw: forwarded to every engine (temporal, meter, frame_hz,
+        explore, ...).
+    """
+
+    def __init__(self, cfg, params, *, n_hosts: int = 1, capacity: int = 8,
+                 meshes=None, governor: "gov_mod.GovernorSpec | None" = None,
+                 priority_classes: Mapping[str, float] | None = None,
+                 **engine_kw):
+        if n_hosts < 1:
+            raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+        if meshes is not None and len(meshes) != n_hosts:
+            raise ValueError(
+                f"got {len(meshes)} meshes for {n_hosts} hosts")
+        self.governor = governor
+        self.classes = dict(priority_classes or PRIORITY_CLASSES)
+        if any(w <= 0 for w in self.classes.values()):
+            raise ValueError(f"class weights must be > 0: {self.classes}")
+        self.engines: list[SaccadeEngine] = [
+            SaccadeEngine(cfg, params, capacity=capacity,
+                          mesh=None if meshes is None else meshes[h],
+                          governor=governor, **engine_kw)
+            for h in range(n_hosts)
+        ]
+        self._queues: list[list[_Queued]] = [[] for _ in range(n_hosts)]
+        self._host_of: dict[Hashable, int] = {}
+        self._queued_ids: set[Hashable] = set()
+        self._seq = 0
+
+    # ---- fleet shape ---------------------------------------------------
+    @property
+    def n_hosts(self) -> int:
+        return len(self.engines)
+
+    @property
+    def capacity(self) -> int:
+        return sum(e.capacity for e in self.engines)
+
+    @property
+    def stream_ids(self) -> list[Hashable]:
+        return [sid for e in self.engines for sid in e.stream_ids]
+
+    @property
+    def free_slots(self) -> int:
+        return sum(e.free_slots for e in self.engines)
+
+    @property
+    def queued(self) -> int:
+        return sum(len(q) for q in self._queues)
+
+    @property
+    def n_traces(self) -> list[int]:
+        """Per-engine compile counts — the fleet contract is all-ones."""
+        return [e.n_traces for e in self.engines]
+
+    def host_of(self, stream_id: Hashable) -> int:
+        try:
+            return self._host_of[stream_id]
+        except KeyError:
+            raise KeyError(f"stream {stream_id!r} not admitted") from None
+
+    # ---- admission -----------------------------------------------------
+    def submit(self, stream_id: Hashable,
+               priority_class: str = "standard") -> int:
+        """Enqueue a stream on the least-loaded host's admit queue; it is
+        admitted (highest class first) by the next ``drain``/``step``.
+        Returns the chosen host index."""
+        if stream_id in self._host_of or stream_id in self._queued_ids:
+            raise ValueError(f"stream {stream_id!r} already submitted")
+        if priority_class not in self.classes:
+            raise ValueError(
+                f"unknown priority class {priority_class!r}; "
+                f"have {sorted(self.classes)}")
+        # least-loaded: most free slots after the already-queued admits
+        host = max(
+            range(self.n_hosts),
+            key=lambda h: self.engines[h].free_slots - len(self._queues[h]),
+        )
+        self._queues[host].append(
+            _Queued(stream_id, self.classes[priority_class], self._seq))
+        self._queued_ids.add(stream_id)
+        self._seq += 1
+        return host
+
+    def drain(self) -> list[Hashable]:
+        """Admit queued streams into free slots, highest priority class
+        first (FIFO within a class); leftover requests stay queued.
+        Rebalances the fleet budget when anything changed. Returns the
+        stream ids admitted this call."""
+        admitted = []
+        for host, q in enumerate(self._queues):
+            eng = self.engines[host]
+            q.sort(key=lambda r: (-r.weight, r.seq))
+            while q and eng.free_slots > 0:
+                r = q.pop(0)
+                eng.admit(r.stream_id, priority=r.weight)
+                self._host_of[r.stream_id] = host
+                self._queued_ids.discard(r.stream_id)
+                admitted.append(r.stream_id)
+        if admitted:
+            self._rebalance_budgets()
+        return admitted
+
+    def evict(self, stream_id: Hashable) -> None:
+        """Evict an admitted stream (or cancel a queued one)."""
+        if stream_id in self._queued_ids:
+            for q in self._queues:
+                q[:] = [r for r in q if r.stream_id != stream_id]
+            self._queued_ids.discard(stream_id)
+            return
+        host = self.host_of(stream_id)
+        self.engines[host].evict(stream_id)
+        del self._host_of[stream_id]
+        self._rebalance_budgets()
+
+    def _rebalance_budgets(self) -> None:
+        """fleet -> host: same proportional law as host -> slot (DESIGN.md
+        §10/§12), reusing ``allocate_budgets`` with the fleet budget as
+        the pool and each host's admitted priority mass as its weight."""
+        if self.governor is None:
+            return
+        w = np.zeros((self.n_hosts,), np.float64)
+        for h, eng in enumerate(self.engines):
+            w[h] = sum(eng._priority[sid] for sid in eng.stream_ids)
+        shares = gov_mod.allocate_budgets(
+            self.governor, w, total_mw=self.governor.budget_mw)
+        for eng, share in zip(self.engines, shares):
+            if share > 0:
+                eng.set_budget_mw(float(share))
+
+    # ---- serving -------------------------------------------------------
+    def step(self, frames: Mapping[Hashable, Any]) -> dict[Hashable, np.ndarray]:
+        """Drain the admit queues, then serve one async tick: route each
+        frame to its stream's host engine and step only the engines with
+        fed slots (everyone else's streams hold). Returns stream id ->
+        logits for exactly the fed streams."""
+        self.drain()
+        per_host: list[dict] = [{} for _ in range(self.n_hosts)]
+        for sid, frame in frames.items():
+            per_host[self.host_of(sid)][sid] = frame
+        out: dict[Hashable, np.ndarray] = {}
+        for eng, fh in zip(self.engines, per_host):
+            if fh:
+                out.update(eng.step(fh))
+        return out
+
+    # ---- metering (DESIGN.md §10) --------------------------------------
+    def fleet_power_mw(self, window: str = "last") -> float:
+        """Measured frontend power summed over every host's admitted
+        streams — the fleet-budget tracking quantity."""
+        return sum(e.fleet_power_mw(window) for e in self.engines)
+
+    def power_mw(self, stream_id: Hashable, window: str = "last") -> float:
+        return self.engines[self.host_of(stream_id)].power_mw(
+            stream_id, window)
+
+    def events(self, stream_id: Hashable, window: str = "last"):
+        return self.engines[self.host_of(stream_id)].events(
+            stream_id, window)

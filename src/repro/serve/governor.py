@@ -244,14 +244,22 @@ def control_update(
 def allocate_budgets(
     spec: GovernorSpec,
     slot_priority: np.ndarray,
+    total_mw: float | None = None,
 ) -> np.ndarray:
     """HOST-side budget split: ``slot_priority`` is (S,) with the priority
-    weight of each admitted stream and 0.0 on free slots; the chip budget
-    is divided proportionally over the admitted streams. Returns (S,)
+    weight of each admitted stream and 0.0 on free slots; the budget is
+    divided proportionally over the admitted streams. Returns (S,)
     float32 per-slot budget shares (0 on free slots). Called on
-    admit/evict — a data-only row rewrite, never a recompile."""
+    admit/evict — a data-only row rewrite, never a recompile.
+
+    ``total_mw`` overrides ``spec.budget_mw`` as the pool being split —
+    the SAME proportional law then stacks into the fleet hierarchy
+    (DESIGN.md §12): the fleet coordinator splits the fleet budget over
+    hosts (weights = each host's admitted priority mass), and each
+    engine splits its host share over slots."""
     w = np.asarray(slot_priority, np.float64)
     total = w.sum()
     if total <= 0:
         return np.zeros_like(w, dtype=np.float32)
-    return (spec.budget_mw * w / total).astype(np.float32)
+    pool = spec.budget_mw if total_mw is None else float(total_mw)
+    return (pool * w / total).astype(np.float32)

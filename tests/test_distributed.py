@@ -175,6 +175,37 @@ def test_pipeline_fewer_microbatches_than_stages():
     assert res["fwd_err"] < 1e-6
 
 
+def test_pipeline_bubble_nan_does_not_poison_output():
+    """PR-7 satellite regression: bubble ticks feed a ZERO carry into
+    stage_fn; a stage_fn that divides by its input norm emits NaN there.
+    The final masking must select (jnp.where), not multiply — with the
+    old ``psum(out * is_last)``, ``NaN * 0 = NaN`` poisons every real
+    output through the psum."""
+    res = run_with_devices("""
+        import json, jax, jax.numpy as jnp
+        from repro.distributed.pipeline import pipeline_forward, split_layers_to_stages
+        mesh = jax.make_mesh((4,), ("pod",))
+        L, D = 4, 8
+        w = jax.random.normal(jax.random.PRNGKey(0), (L, D, D)) * 0.4
+        def body(c, p):
+            nrm = jnp.sqrt(jnp.sum(c * c))
+            return jnp.tanh((c / nrm) @ p), None  # NaN on the zero bubble carry
+        def stage_fn(params, x):
+            return jax.lax.scan(body, x, params)[0]
+        mbs = jax.random.normal(jax.random.PRNGKey(1), (6, 3, D))
+        out = pipeline_forward(split_layers_to_stages(w, 4), mbs, stage_fn, mesh)
+        def seq(x):
+            return jax.lax.scan(body, x, w)[0]
+        ref = jnp.stack([seq(mbs[i]) for i in range(6)])
+        print(json.dumps({
+            "finite": bool(jnp.isfinite(out).all()),
+            "fwd_err": float(jnp.abs(out - ref).max()),
+        }))
+    """, n=4)
+    assert res["finite"], "bubble-tick NaN poisoned the masked psum"
+    assert res["fwd_err"] < 1e-6
+
+
 def test_engine_sharded_slots_match_unsharded_zero_recompiles():
     """SaccadeEngine with the slot axis shard_map'd over 4 host devices:
     identical logits to the unsharded engine, state physically spread over

@@ -258,5 +258,77 @@ class TestGovernor:
         np.testing.assert_allclose(
             allocate_budgets(spec, np.array([1.0, 0.0, 3.0])),
             [0.25, 0.0, 0.75])
+        # total_mw overrides the spec pool: the same proportional law
+        # stacks into the fleet->host->slot hierarchy (DESIGN.md §12)
+        np.testing.assert_allclose(
+            allocate_budgets(spec, np.array([1.0, 0.0, 3.0]), total_mw=2.0),
+            [0.5, 0.0, 1.5])
         np.testing.assert_array_equal(
             allocate_budgets(spec, np.zeros(3)), np.zeros(3))
+
+
+class TestMeteringBugfixes:
+    """PR-7 satellite regressions: the governed recompute-fraction
+    denominator and the one-fetch vectorized pricing path."""
+
+    def test_recompute_fraction_uses_tier_tokens(self):
+        """Regression: on a shed slot (k_eff < k) the fraction must be
+        n_stale / k_tier, not n_stale / k — the old static denominator
+        understates recompute on governed streams by k_eff/k."""
+        # severe budget + tight refresh horizon: the floor cap (1 slot)
+        # only refreshes 4 tokens inside the horizon -> bottom tier
+        gov = GovernorSpec(budget_mw=0.07, floor=1, refresh_horizon=4)
+        eng = SaccadeEngine(CFG, PARAMS, capacity=1, temporal=True,
+                            frame_hz=FRAME_HZ, governor=gov)
+        eng.admit("a")
+        for t in range(12):                  # enough frames to reach bottom
+            eng.step({"a": full_motion(t)})
+        k_eff = eng.k_tier("a")
+        assert k_eff == gov.tier_tokens(K)[-1]          # finest tier
+        assert k_eff < K                                # genuinely shed
+        n_stale = int(eng.state.cache.n_stale[0])
+        assert n_stale > 0                   # full motion: always recomputes
+        frac = eng.recompute_fraction("a")
+        assert frac == pytest.approx(n_stale / k_eff)
+        # the pre-fix value (n_stale / K) is strictly smaller — the bug
+        # this pins made shed slots look lazier than they are
+        assert frac > n_stale / K
+
+    def test_metering_reads_are_one_fetch(self, monkeypatch):
+        """Regression: events/power_mw/fleet_power_mw must each cost
+        exactly ONE device_get (counts and frame ages batched together),
+        and the vectorized fleet pricing must equal the per-slot loop."""
+        eng = SaccadeEngine(CFG, PARAMS, capacity=4, temporal=True,
+                            frame_hz=FRAME_HZ)
+        eng.admit("a"); eng.admit("b"); eng.admit("c")
+        eng.step({"a": full_motion(0), "b": full_motion(1)})  # c holds: age 0
+        _ = eng.state                                  # settle pending churn
+
+        import repro.serve.engine as eng_mod
+        calls = []
+        real = jax.device_get
+        monkeypatch.setattr(
+            eng_mod.jax, "device_get",
+            lambda x: (calls.append(1), real(x))[1])
+
+        fleet = eng.fleet_power_mw("last")
+        assert len(calls) == 1, "fleet_power_mw must be one batched fetch"
+        calls.clear()
+        pa = eng.power_mw("a", "last")
+        assert len(calls) == 1
+        calls.clear()
+        ev = eng.events("a", "total")
+        assert len(calls) == 1
+        monkeypatch.undo()
+
+        # value-equality with the old per-slot loop (age-0 slots skipped)
+        want = sum(
+            eng.meter.power_mw(eng.events(sid, "last"), FRAME_HZ)
+            for sid in eng.stream_ids
+            if int(eng.state.frame_age[eng.slot_of(sid)]) > 0)
+        assert fleet == pytest.approx(want)
+        assert pa == pytest.approx(
+            eng.meter.power_mw(eng.events("a", "last"), FRAME_HZ))
+        assert ev.adc_conversions == pytest.approx(
+            eng.events("a", "mean").adc_conversions
+            * int(eng.state.frame_age[eng.slot_of("a")]))

@@ -55,15 +55,22 @@ class TestBookkeeping:
         with pytest.raises(KeyError):
             eng.evict("zzz")
 
-    def test_step_requires_exact_stream_cover(self, served):
+    def test_step_unknown_raises_partial_cover_holds(self, served):
+        """The async contract (DESIGN.md §12): frames for never-admitted
+        streams still raise, but a PARTIAL cover is legal — the un-fed
+        admitted streams simply hold this tick."""
         cfg, params = served
         eng = SaccadeEngine(cfg, params, capacity=2)
         eng.admit("a")
+        eng.admit("b")
         frame = np.zeros((64, 64, 3), np.float32)
         with pytest.raises(ValueError, match="unknown"):
-            eng.step({"a": frame, "b": frame})
-        with pytest.raises(ValueError, match="missing"):
-            eng.step({})
+            eng.step({"a": frame, "c": frame})
+        out = eng.step({"a": frame})         # "b" holds, no error
+        assert set(out) == {"a"}
+        assert int(eng.state.frame_age[eng.slot_of("a")]) == 1
+        assert int(eng.state.frame_age[eng.slot_of("b")]) == 0
+        assert eng.step({}) == {}            # everyone holds: no dispatch
 
     def test_idle_engine_step_is_a_noop(self, served):
         cfg, params = served
@@ -216,14 +223,153 @@ class TestBootstrapDeterminism:
         np.testing.assert_array_equal(full, flipped[::-1])
 
 
+class TestPartialFrames:
+    """Tentpole (DESIGN.md §12): partial-frame async steps. Fed slots are
+    BITWISE identical to a full-cover step; held slots are bitwise frozen
+    with zero event accrual; mixed-rate serving stays one compile."""
+
+    def test_fed_slots_bitwise_identical_to_full_cover(self, served):
+        """Acceptance criterion: serve {x} while y holds, vs serve {x, y}
+        on a twin engine — x's logits AND x's entire state row must be
+        bitwise equal (per-slot independence of the batched step)."""
+        cfg, params = served
+        stream = SceneStream(image=64)
+        rgb0, _ = stream.batch(0, 2)
+        rgb1, _ = stream.batch(1, 2)
+
+        part = SaccadeEngine(cfg, params, capacity=4, temporal=True)
+        full = SaccadeEngine(cfg, params, capacity=4, temporal=True)
+        for e in (part, full):
+            e.admit("x")
+            e.admit("y")
+            e.step({"x": rgb0[0], "y": rgb0[1]})
+        out_p = part.step({"x": rgb1[0]})                     # y holds
+        out_f = full.step({"x": rgb1[0], "y": rgb1[1]})       # full cover
+        np.testing.assert_array_equal(out_p["x"], out_f["x"])
+        sx = part.slot_of("x")
+        p_leaves = jax.tree.leaves(jax.device_get(part.state))
+        f_leaves = jax.tree.leaves(jax.device_get(full.state))
+        for lp, lf in zip(p_leaves, f_leaves):
+            np.testing.assert_array_equal(lp[sx], lf[sx])
+        assert part.n_traces == 1 and full.n_traces == 1
+
+    def test_held_slot_is_bitwise_frozen_with_zero_events(self, served):
+        """A held slot's ENTIRE state row — gaze, EMA, frame age, temporal
+        cache (droop clock included), and both event meters — passes
+        through the step bitwise unchanged."""
+        cfg, params = served
+        stream = SceneStream(image=64)
+        rgb0, _ = stream.batch(0, 2)
+        rgb1, _ = stream.batch(3, 2)
+        eng = SaccadeEngine(cfg, params, capacity=3, temporal=True)
+        eng.admit("x")
+        eng.admit("y")
+        eng.step({"x": rgb0[0], "y": rgb0[1]})
+        sy = eng.slot_of("y")
+        before = [np.array(l[sy]) for l in
+                  jax.tree.leaves(jax.device_get(eng.state))]
+        ev_before = eng.events("y", "last")
+        for t in range(3):                       # y holds for three ticks
+            eng.step({"x": rgb1[t % 2]})
+        after = [np.array(l[sy]) for l in
+                 jax.tree.leaves(jax.device_get(eng.state))]
+        for b, a in zip(before, after):
+            np.testing.assert_array_equal(b, a)
+        assert eng.events("y", "last") == ev_before
+        assert eng.power_mw("y", "mean") == eng.meter.power_mw(
+            ev_before, eng.frame_hz)
+        assert eng.n_traces == 1
+
+    def test_skewed_rates_match_dedicated_loops(self, served):
+        """A 1x-rate stream and a 1/3x-rate stream in one engine each
+        match their own dedicated batch-1 loop over exactly the frames
+        they were fed — frame-rate skew is invisible per stream."""
+        cfg, params = served
+        stream = SceneStream(image=64)
+        eng = SaccadeEngine(cfg, params, capacity=2)
+        eng.admit("fast")
+        eng.admit("slow")
+        boot = jax.jit(make_bootstrap_indices(cfg))
+        step1 = jax.jit(make_saccade_step(cfg))
+        refs = {"fast": None, "slow": None}
+        for t in range(6):
+            rgb, _ = stream.batch(t, 2)
+            frames = {"fast": rgb[0]}
+            if t % 3 == 0:
+                frames["slow"] = rgb[1]
+            out = eng.step(frames)
+            assert set(out) == set(frames)
+            for i, sid in enumerate(("fast", "slow")):
+                if sid not in frames:
+                    continue
+                r = jnp.asarray(rgb[i:i + 1])
+                if refs[sid] is None:
+                    refs[sid] = boot(params, r)
+                logits, refs[sid], _ = step1(params, r, refs[sid])
+                np.testing.assert_allclose(
+                    out[sid], np.asarray(logits[0]), atol=1e-5)
+        assert eng.n_traces == 1
+        assert int(eng.state.frame_age[eng.slot_of("fast")]) == 6
+        assert int(eng.state.frame_age[eng.slot_of("slow")]) == 2
+
+
+class TestIngestChurnCoalescing:
+    """Tentpole (DESIGN.md §12): double-buffered ingest reuses exactly two
+    staging buffers, and admit/evict churn coalesces into one flush."""
+
+    def test_ingest_buffers_are_reused_and_alternate(self, served):
+        cfg, params = served
+        eng = SaccadeEngine(cfg, params, capacity=2)
+        eng.admit("a")
+        stream = SceneStream(image=64)
+        rgb, _ = stream.batch(0, 1)
+        assert eng._ingest.shape[0] == 2
+        buf = eng._ingest
+        seen = []
+        for t in range(4):
+            i = eng._ingest_i
+            eng.step({"a": rgb[0]})
+            seen.append(i)
+        assert seen == [0, 1, 0, 1]              # strict alternation
+        assert eng._ingest is buf                # reused, never reallocated
+
+    def test_churn_coalesces_to_one_flush(self, served):
+        """k admits/evicts between two frames must cost ONE jitted churn
+        dispatch, not k — counted by wrapping the compiled churn fn."""
+        cfg, params = served
+        eng = SaccadeEngine(cfg, params, capacity=4)
+        calls = []
+        inner = eng._churn_fn
+        eng._churn_fn = lambda *a: (calls.append(1), inner(*a))[1]
+        eng.admit("a")
+        eng.admit("b")
+        eng.admit("c")
+        eng.evict("b")
+        eng.admit("d")                       # reuses b's slot, last-op-wins
+        assert calls == []                   # nothing dispatched yet
+        stream = SceneStream(image=64)
+        rgb, _ = stream.batch(0, 3)
+        out = eng.step({"a": rgb[0], "c": rgb[1], "d": rgb[2]})
+        assert len(calls) == 1               # one flush for 5 churn ops
+        assert set(out) == {"a", "c", "d"}
+        st = eng.state
+        assert len(calls) == 1               # nothing pending -> no flush
+        assert int(np.asarray(st.active).sum()) == 3
+        slot_c = eng.slot_of("c")
+        eng.evict("c")
+        assert not bool(eng.state.active[slot_c])  # state read flushes lazily
+        assert len(calls) == 2
+
+
 class TestStatefulFuzz:
-    """Satellite: random admit/evict/step sequences against a pure-Python
-    slot-bookkeeping oracle AND per-stream reference single-stream loops —
-    slot reuse, free_slots, one compile, and output isolation must all
-    survive arbitrary churn."""
+    """Satellite: random admit/evict/PARTIAL-step sequences against a
+    pure-Python slot-bookkeeping oracle AND per-stream reference
+    single-stream loops — slot reuse, free_slots, one compile, output
+    isolation, and per-slot meter correctness for held (un-fed) frames
+    must all survive arbitrary churn with frame-rate skew."""
 
     @pytest.mark.parametrize("seed", [0, 1])
-    def test_random_churn_against_oracle(self, served, seed):
+    def test_random_async_churn_against_oracle(self, served, seed):
         cfg, params = served
         capacity = 3
         eng = SaccadeEngine(cfg, params, capacity=capacity)
@@ -234,7 +380,7 @@ class TestStatefulFuzz:
 
         rng = np.random.default_rng(1000 + seed)
         slots: list = [None] * capacity                  # the oracle
-        refs: dict = {}                                  # sid -> (idx, age)
+        refs: dict = {}                      # sid -> [idx, age, last_events]
         next_id = 0
         stepped = False
 
@@ -249,7 +395,7 @@ class TestStatefulFuzz:
                 got = eng.admit(sid)
                 want = slots.index(None)                 # lowest free slot
                 slots[want] = sid
-                refs[sid] = [None, 0]
+                refs[sid] = [None, 0, None]
                 next_id += 1
                 assert got == want, f"op {op_i}: slot reuse broke"
             elif op == "evict":
@@ -264,17 +410,21 @@ class TestStatefulFuzz:
                 del refs[sid]
             else:
                 live = [s for s in slots if s is not None]
+                # frame-rate skew: each live stream is fed with p=0.6 —
+                # the rest HOLD this tick (async partial cover)
+                fed = [sid for sid in live if rng.random() < 0.6]
                 frames = {
                     sid: pool[(slots.index(sid) + 2 * refs[sid][1]) % len(pool)]
-                    for sid in live
+                    for sid in fed
                 }
                 out = eng.step(frames)
-                if live:
+                if fed:
                     stepped = True
-                assert set(out) == set(live)
-                # per-stream isolation: every live stream matches its own
-                # dedicated batch-1 loop, whatever its neighbours did
-                for sid in live:
+                assert set(out) == set(fed)
+                # per-stream isolation: every FED stream matches its own
+                # dedicated batch-1 loop over exactly the frames it was
+                # fed, whatever its neighbours did or held
+                for sid in fed:
                     r = jnp.asarray(frames[sid])[None]
                     if refs[sid][0] is None:
                         refs[sid][0] = boot(params, r)
@@ -283,6 +433,12 @@ class TestStatefulFuzz:
                         out[sid], np.asarray(logits[0]), atol=1e-5,
                         err_msg=f"op {op_i}: stream {sid} diverged")
                     refs[sid][1] += 1
+                    refs[sid][2] = eng.events(sid, "last")
+                # held streams' meters must not have moved (zero accrual)
+                for sid in live:
+                    if sid not in fed and refs[sid][2] is not None:
+                        assert eng.events(sid, "last") == refs[sid][2], (
+                            f"op {op_i}: held stream {sid} accrued events")
 
             # bookkeeping invariants after every op
             assert eng.free_slots == slots.count(None)
