@@ -15,6 +15,8 @@ from __future__ import annotations
 import dataclasses
 import time
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -24,14 +26,31 @@ from repro.core.projection import PatchSpec
 from repro.core.pwm import QuantSpec
 from repro.data.pipeline import SceneStream
 from repro.models.cnn import cnn_loss, init_cnn
-from repro.models.vit import ViTConfig, init_vit, vit_loss
+from repro.models.vit import ViTConfig, init_vit, vit_forward_compact, vit_loss
 
 STEPS = 220
 BATCH = 32
 EVAL_BATCHES = 6
 
 
-def _train_vit(cfg: ViTConfig, seed=0, steps=STEPS) -> float:
+def _eval_wire(params, cfg: ViTConfig, wire: str) -> float:
+    """Accuracy through the SERVED path: ``apply_frontend(mode="compact")``
+    via ``vit_forward_compact`` on an explicit wire format. The dense
+    float eval above is the oracle; this is what the chip actually ships
+    (int8 codes — or 1-bit comparator decisions on ``wire="sign"``)."""
+    stream = SceneStream(image=cfg.frontend.image_h)
+    accs = []
+    for j in range(EVAL_BATCHES):
+        rgb, labels = stream.batch(100_000 + j, BATCH)
+        logits, _ = vit_forward_compact(params, jnp.asarray(rgb), cfg,
+                                        wire=wire)
+        accs.append(float(np.mean(np.argmax(np.asarray(logits), -1)
+                                  == labels)))
+    return sum(accs) / len(accs)
+
+
+def _train_vit(cfg: ViTConfig, seed=0, steps=STEPS,
+               return_params: bool = False):
     params = init_vit(jax.random.PRNGKey(seed), cfg)
     opt = O.AdamWConfig(lr=2e-3, weight_decay=0.01)
     opt_state = O.init_opt_state(params, opt)
@@ -56,7 +75,10 @@ def _train_vit(cfg: ViTConfig, seed=0, steps=STEPS) -> float:
         rgb, labels = stream.batch(100_000 + j, BATCH)
         _, acc = vit_loss(params, jnp.asarray(rgb), jnp.asarray(labels), cfg)
         accs.append(float(acc))
-    return sum(accs) / len(accs)
+    acc = sum(accs) / len(accs)
+    if return_params:
+        return params, acc
+    return acc
 
 
 def _train_cnn(seed=0, steps=STEPS) -> float:
@@ -105,7 +127,26 @@ def run() -> list[dict]:
         return acc
 
     t0 = time.perf_counter_ns()
-    acc_ip2 = add("acc_ip2_25pct_6bit", t0, _train_vit(ViTConfig(frontend=_fcfg())))
+    cfg_b = ViTConfig(frontend=_fcfg())
+    params_b, acc_ip2 = _train_vit(cfg_b, return_params=True)
+    add("acc_ip2_25pct_6bit", t0, acc_ip2)
+    # arm B served: the SAME trained model, evaluated through the compact
+    # int8 code wire (the payload the chip ships) — the dense float eval
+    # above stays as the oracle it must match
+    t0 = time.perf_counter_ns()
+    acc_codes = add("acc_ip2_25pct_code_wire", t0,
+                    _eval_wire(params_b, cfg_b, wire="codes"),
+                    f" (dense oracle {acc_ip2:.3f})")
+    assert abs(acc_codes - acc_ip2) <= 0.05, (
+        f"compact code-wire eval {acc_codes:.3f} diverged from the dense "
+        f"oracle {acc_ip2:.3f}"
+    )
+    # the ADC-less sign wire: 1 bit per feature — the accuracy cost of
+    # the governor's last-resort tier, measured on the same model
+    t0 = time.perf_counter_ns()
+    add("acc_ip2_25pct_sign_wire", t0,
+        _eval_wire(params_b, cfg_b, wire="sign"),
+        f" (1-bit ADC-less; code wire {acc_codes:.3f})")
     t0 = time.perf_counter_ns()
     acc_cnn = add("acc_cnn_baseline_fullframe", t0, _train_cnn(), " (paper: patch≈CNN)")
     t0 = time.perf_counter_ns()
@@ -136,4 +177,34 @@ def run() -> list[dict]:
     t0 = time.perf_counter_ns()
     add("acc_ip2_qth_pow2_attention", t0,
         _train_vit(ViTConfig(frontend=_fcfg(), qth=True)))
+    return rows
+
+
+def run_quick() -> list[dict]:
+    """``--quick`` smoke arm (benchmarks/run.py): one short arm-B train
+    plus the served-wire evals, so the accuracy seams (dense oracle vs
+    int8 code wire vs 1-bit sign wire) stay exercised in the bench-smoke
+    CI lane without the full 10-model training sweep."""
+    rows = []
+    cfg = ViTConfig(frontend=_fcfg())
+    t0 = time.perf_counter_ns()
+    params, acc = _train_vit(cfg, steps=40, return_params=True)
+    rows.append({
+        "name": "acc_smoke_ip2_25pct_dense",
+        "us_per_call": (time.perf_counter_ns() - t0) / 1e3,
+        "derived": f"acc={acc:.3f} (40-step smoke, dense oracle)",
+    })
+    for wire in ("codes", "sign"):
+        t0 = time.perf_counter_ns()
+        a = _eval_wire(params, cfg, wire=wire)
+        rows.append({
+            "name": f"acc_smoke_ip2_25pct_{wire}_wire",
+            "us_per_call": (time.perf_counter_ns() - t0) / 1e3,
+            "derived": f"acc={a:.3f} ({wire} wire, same params)",
+        })
+        if wire == "codes":
+            assert abs(a - acc) <= 0.08, (
+                f"smoke: code-wire eval {a:.3f} diverged from dense "
+                f"oracle {acc:.3f}"
+            )
     return rows

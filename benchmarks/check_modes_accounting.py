@@ -1,0 +1,118 @@
+"""Bench-smoke guard for the reconfigurable-mode power rows (DESIGN.md
+§13) — mirroring ``check_power_accounting.py`` (§10): every per-mode
+milliwatt figure in ``BENCH_throughput.json`` must be priced by the event
+meter, the mode claims must hold, and the numbers are re-derived LIVE from
+the meter so the artifact can never drift from the pricing code.
+
+Three layers of defence:
+
+1. Schema: every mode row carries a ``power`` record with
+   ``source == "event-meter"``.
+2. Claims: the ADC-less sign readout lands WELL under the patch-bank+ADC
+   baseline (< half of it — the ADC is the majority consumer, deleting it
+   must show); conv kernel-cycling costs strictly more than a
+   program-once bank; the governed sign tier serves BELOW the finest
+   k tier's floor allocation.
+3. Live re-derivation: each mode's mW/MP is recomputed here from
+   ``steady_state_events`` / ``conv_frame_events`` + ``EnergyMeter`` and
+   compared to the artifact, and the conv reprogram delta is checked
+   against its closed form (C·K² DAC rewrites per frame).
+
+Run after ``benchmarks/run.py`` (needs src and the repo root on the
+path): ``PYTHONPATH=src:. python benchmarks/check_modes_accounting.py``.
+"""
+
+import json
+import sys
+
+MODE_ROWS = (
+    "power_mode_patchbank_adc",
+    "power_mode_sign_readout",
+    "power_mode_conv_program_once_vs_reprogram",
+    "power_governed_sign_tier",
+)
+
+
+def main(path: str = "BENCH_throughput.json") -> None:
+    with open(path) as f:
+        results = json.load(f)
+    pw = next(v for k, v in results.items() if k.startswith("power"))
+    rows = {r["name"]: r for r in pw if "name" in r}
+
+    missing = [n for n in MODE_ROWS if n not in rows]
+    assert not missing, f"mode rows missing from the artifact: {missing}"
+    for name in MODE_ROWS:
+        rec = rows[name].get("power")
+        assert isinstance(rec, dict), f"{name}: no power record"
+        assert rec.get("source") == "event-meter", (
+            f"{name}: power not priced by the event meter "
+            f"(source={rec.get('source')!r})"
+        )
+
+    # --- claims, re-checked against the record
+    adc = rows["power_mode_patchbank_adc"]["power"]["mw_per_mpix"]
+    sign = rows["power_mode_sign_readout"]["power"]["mw_per_mpix"]
+    assert sign < 0.5 * adc, (
+        f"ADC-less sign readout {sign:.1f} mW/MP is not well under the "
+        f"ADC baseline {adc:.1f} — the ADC majority should be gone"
+    )
+    conv = rows["power_mode_conv_program_once_vs_reprogram"]["power"]
+    assert conv["reprogram_mw_per_mpix"] > conv["mw_per_mpix"], (
+        "kernel-cycling conv does not cost more than a program-once bank"
+    )
+    gov = rows["power_governed_sign_tier"]["power"]
+    assert gov["measured_mw"] < gov["floor_mw"], (
+        f"governed sign tier {gov['measured_mw']:.4f} mW not under the "
+        f"finest-k-tier floor {gov['floor_mw']:.4f}"
+    )
+    assert gov["budget_mw"] < gov["floor_mw"], (
+        "sign-tier bench budget is servable by a k tier — it does not "
+        "exercise the ADC-less floor"
+    )
+
+    # --- live re-derivation from the meter (artifact can't drift)
+    from repro.core.power import (
+        EnergyMeter, SensorConfig, conv_frame_events, steady_state_events,
+    )
+
+    meter = EnergyMeter()
+    scfg = SensorConfig()
+    mpix = scfg.n_pixels / 1e6
+
+    def per_mpix(ev):
+        return meter.power_mw(ev, scfg.frame_hz) / mpix
+
+    live_adc = per_mpix(steady_state_events(scfg))
+    live_sign = per_mpix(steady_state_events(scfg, readout="sign"))
+    assert abs(adc - live_adc) < 1e-9 * live_adc, (
+        f"artifact says {adc} mW/MP for patch-bank+ADC but the live meter "
+        f"derives {live_adc}"
+    )
+    assert abs(sign - live_sign) < 1e-9 * live_sign, (
+        f"artifact says {sign} mW/MP for the sign readout but the live "
+        f"meter derives {live_sign}"
+    )
+
+    k2, ch = conv["pixels_per_window"], conv["n_channels"]
+    kw = dict(n_pixels=scfg.n_pixels, pixels_per_window=k2,
+              n_channels=ch, n_windows=scfg.n_pixels / k2)
+    live_once = per_mpix(conv_frame_events(**kw))
+    live_cyc = per_mpix(conv_frame_events(reprogram=True, **kw))
+    assert abs(conv["mw_per_mpix"] - live_once) < 1e-9 * live_once
+    assert abs(conv["reprogram_mw_per_mpix"] - live_cyc) < 1e-9 * live_cyc
+    delta_claim = (ch * k2 * meter.k.e_dac_reprogram_j * scfg.frame_hz
+                   * 1e3 / mpix)
+    assert abs((live_cyc - live_once) - delta_claim) \
+        < 1e-9 * max(delta_claim, 1.0), (
+        "conv reprogram delta is not C*K^2 DAC rewrites per frame"
+    )
+
+    print(f"mode accounting OK: {len(MODE_ROWS)} event-metered rows; "
+          f"sign {sign:.1f} mW/MP vs ADC baseline {adc:.1f} "
+          f"({sign / adc:.0%}); conv reprogram +{live_cyc - live_once:.4f} "
+          f"mW/MP == C*K^2 closed form; governed sign tier "
+          f"{gov['measured_mw']:.4f} < floor {gov['floor_mw']:.4f} mW")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

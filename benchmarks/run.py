@@ -2,14 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_throughput.json``
 (all rows, keyed by module) so successive PRs accumulate a perf trajectory.
-``--quick`` skips the training benches (bench_accuracy trains 10 small
-models and dominates wall time).
+``--quick`` swaps the full accuracy study (bench_accuracy trains 10 small
+models and dominates wall time) for its smoke arm: one short train plus
+the served-wire evals (dense oracle vs int8 code wire vs 1-bit sign wire).
 """
 
 import argparse
 import json
 import sys
 import traceback
+import types
 
 
 def main() -> None:
@@ -31,9 +33,16 @@ def main() -> None:
         ("roofline(§11)", bench_roofline),
         ("fleet(§12)", bench_fleet),
     ]
-    if not args.quick:
-        from benchmarks import bench_accuracy
+    from benchmarks import bench_accuracy
 
+    if args.quick:
+        # smoke arm: one short train + served-wire evals (code/sign), so
+        # the accuracy seams stay covered in the bench-smoke CI lane
+        modules.append((
+            "accuracy-smoke(§13)",
+            types.SimpleNamespace(run=bench_accuracy.run_quick),
+        ))
+    else:
         modules.append(("accuracy(§1,§2.1.3,§2.1.5,Fig.4)", bench_accuracy))
 
     print("name,us_per_call,derived")

@@ -117,6 +117,62 @@ def digital_codes(
     return ADCCodes(encode(out_v, spec), scale, zero)
 
 
+# ---------------------------------------------------------------------------
+# ADC-less sign readout (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+# A single comparator against V_R replaces the full conversion: the wire
+# carries one BIT per vector (bool payload), and the readout is recovered
+# through the SAME dequantize affine as the code wire — scale = 2·v_mag,
+# zero = b - v_mag maps {0, 1} onto {-v_mag, +v_mag} + b, so the one
+# dequant site (models.vit._embed_tokens) needs no new arithmetic.
+
+#: representative reconstruction magnitude of a sign-only readout — matches
+#: the event meter's mean-signal calibration (EnergyConstants.mean_signal_v)
+SIGN_V_MAG = 0.1
+
+
+def sign_scale_zero(
+    bias: jnp.ndarray | float = 0.0, v_mag: float = SIGN_V_MAG
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(scale, zero) metadata of the sign wire: ``dequantize(bit, scale,
+    zero) = ±v_mag + bias`` for bit in {0, 1}. Static per (bias, v_mag),
+    recomputable anywhere — same contract as :func:`readout_scale_zero`."""
+    scale = jnp.float32(2.0 * v_mag)
+    zero = jnp.asarray(bias, jnp.float32) - jnp.float32(v_mag)
+    return scale, zero
+
+
+def sign_encode(out_v: jnp.ndarray, v_ref: float) -> jnp.ndarray:
+    """The comparator: one bit per vector, ``out_v >= V_R``. No ramp, no
+    SAR steps — the near-zero-energy readout the governor's ADC-less tier
+    prices as ``sign_comparisons`` instead of ``adc_conversions``."""
+    return out_v >= v_ref
+
+
+def sign_code_points(
+    v_ref: float, spec: ADCSpec = ADCSpec(), v_mag: float = SIGN_V_MAG
+) -> tuple[int, int, int]:
+    """The sign degradation expressed ON the int8 code grid — the engine's
+    data-only ADC-less tier (DESIGN.md §13) maps an already-converted code
+    wire onto two reconstruction points without changing dtype or shape:
+
+        c' = c_pos if c >= c_thresh else c_neg
+
+    ``c_thresh`` is the code of the comparator boundary ``out_v == V_R``;
+    ``c_pos``/``c_neg`` dequantize (through the wire's own ``(scale,
+    zero)``) to ±v_mag + bias. All three are bias-independent ints, static
+    per (ADCSpec, V_R, v_mag) — pure data for a compiled engine step."""
+    half = spec.levels // 2
+    lo, hi = -half, spec.levels - 1 - half
+    v_r = min(max(v_ref, spec.v_min), spec.v_max)
+    c_thresh = round((v_r - spec.v_min) / spec.lsb) - half
+    # code*lsb + (v_min + half*lsb - v_ref) = ±v_mag  (bias cancels)
+    off = spec.v_min + half * spec.lsb - v_ref
+    c_pos = min(max(round((v_mag - off) / spec.lsb), lo), hi)
+    c_neg = min(max(round((-v_mag - off) / spec.lsb), lo), hi)
+    return c_thresh, c_pos, c_neg
+
+
 def adc_quantize(v: jnp.ndarray, spec: ADCSpec = ADCSpec()) -> jnp.ndarray:
     """Uniform mid-rise ADC over [v_min, v_max] with STE gradients —
     the voltage-grid view (quantize-then-hold, no V_R - b subtraction),

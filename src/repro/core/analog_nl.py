@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 
 
@@ -29,5 +30,9 @@ def analog_nonlinearity(v: jnp.ndarray, spec: AnalogNLSpec = AnalogNLSpec()) -> 
     if spec.kind == "relu":
         return jnp.clip(v, 0.0, spec.v_sat)
     if spec.kind == "sigmoid":
-        return spec.v_sat / (1.0 + jnp.exp(-spec.sigmoid_gain * v))
+        # jax.nn.sigmoid is the log-sum-exp-stable form: the naive
+        # v_sat / (1 + exp(-gain·v)) overflows the exp intermediate to inf
+        # once gain·|v| >= ~89 in f32, which NaNs the STE gradients of the
+        # differentiable frontend even though the forward value saturates.
+        return jax.nn.sigmoid(spec.sigmoid_gain * v) * spec.v_sat
     raise ValueError(f"unknown analog nonlinearity {spec.kind!r}")

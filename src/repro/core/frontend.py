@@ -226,6 +226,13 @@ def project_readout(
             "is not analog voltage. Use ops.ip2_project_fn here, or "
             "mode='compact' with wire='codes'."
         )
+    if project_fn is not None and getattr(project_fn, "emits_sign", False):
+        raise ValueError(
+            "project_fn emits the 1-bit sign wire (ops.ip2_sign_fn) but "
+            "this is a float path (dense mode or wire='float'): its bool "
+            "output is not analog voltage. Use ops.ip2_project_fn here, or "
+            "mode='compact' with wire='sign'."
+        )
     if cfg.analog:
         fn = project_fn or proj_mod.analog_project_patches
         out_v = _call_project_fn(fn, patches, weights, cfg.patch, row_counts)
@@ -264,6 +271,11 @@ def project_wire(
     ``wire="float"``: the STE dequant view (differentiable; on the analog
     path, bit-identical values to dequantizing the codes).
 
+    ``wire="sign"`` (analog only, DESIGN.md §13): the ADC-less 1-bit
+    comparator wire — bool payload, from the kernel's sign epilogue when
+    ``project_fn`` advertises ``emits_sign`` (``ops.ip2_sign_fn``), else
+    by comparing the analog output against V_R here.
+
     ``row_counts`` (DESIGN.md §11): per-slot real-row counts forwarded to
     ragged-capable kernel adapters so rows past the count cost zero
     FLOPs/bytes instead of masked-but-computed work; other projectors
@@ -274,9 +286,28 @@ def project_wire(
             patches, weights, params, cfg, project_fn, row_counts=row_counts)
     if not cfg.analog:
         raise ValueError(
-            "wire='codes' requires analog=True: the float simulation has "
-            "no edge ADC, so there is no code wire — use wire='float' "
-            "(the default resolution for analog=False)"
+            f"wire={wire!r} requires analog=True: the float simulation has "
+            "no edge ADC or comparator, so there is no digital wire — use "
+            "wire='float' (the default resolution for analog=False)"
+        )
+    if wire == "sign":
+        if project_fn is not None and getattr(project_fn, "emits_codes", False):
+            raise ValueError(
+                "project_fn emits wire-format ADC codes (ops.ip2_codes_fn) "
+                "but wire='sign' carries 1-bit comparator output — use "
+                "ops.ip2_sign_fn (or a plain projector) here"
+            )
+        if project_fn is not None and getattr(project_fn, "emits_sign", False):
+            return _call_project_fn(
+                project_fn, patches, weights, cfg.patch, row_counts)
+        fn = project_fn or proj_mod.analog_project_patches
+        out_v = _call_project_fn(fn, patches, weights, cfg.patch, row_counts)
+        return adc_mod.sign_encode(out_v, cfg.patch.summer.v_ref)
+    if project_fn is not None and getattr(project_fn, "emits_sign", False):
+        raise ValueError(
+            "project_fn emits the 1-bit sign wire (ops.ip2_sign_fn) but "
+            "wire='codes' carries int8 ADC codes — use ops.ip2_codes_fn "
+            "(or a plain projector) here"
         )
     if project_fn is not None and getattr(project_fn, "emits_codes", False):
         return _call_project_fn(
@@ -427,8 +458,9 @@ def apply_frontend(
         raise ValueError(f"mode must be 'dense' or 'compact', got {mode!r}")
     if wire is None:
         wire = "codes" if cfg.analog else "float"
-    if wire not in ("codes", "float"):
-        raise ValueError(f"wire must be 'codes' or 'float', got {wire!r}")
+    if wire not in ("codes", "float", "sign"):
+        raise ValueError(
+            f"wire must be 'codes', 'float' or 'sign', got {wire!r}")
     if cache is not None and mode != "compact":
         raise ValueError(
             "the temporal cache only applies to mode='compact'; dense "
@@ -478,7 +510,13 @@ def apply_frontend(
 
     n_pixels = float(cfg.image_h * cfg.image_w)
     n_selected = jnp.sum(valid, axis=-1).astype(jnp.float32)
-    scale, zero = feature_scale_zero(params, cfg)
+    # sign wire: 1-bit payload, ±v_mag reconstruction affine (DESIGN.md
+    # §13); its conversions are comparator firings, not ADC conversions
+    readout = "sign" if wire == "sign" else "adc"
+    if wire == "sign":
+        scale, zero = adc_mod.sign_scale_zero(params["bias"])
+    else:
+        scale, zero = feature_scale_zero(params, cfg)
     if cache is None:
         active = sal_mod.gather_patches(patches, idx)                # (..., k, N)
         # governed streams hand ragged-capable kernels the per-slot valid
@@ -498,6 +536,7 @@ def apply_frontend(
         events = power_mod.frontend_frame_events(
             n_pixels, cfg.patch.pixels_per_patch, cfg.patch.n_vectors,
             n_selected_patches=n_selected, n_converted_patches=n_selected,
+            readout=readout,
         )
         return CompactFeatures(
             payload, idx, valid, energy, scale, zero, gain, events)
@@ -505,9 +544,15 @@ def apply_frontend(
     # temporal delta gate: recompute only the stale subset of the selection,
     # scatter-merge into the held-charge cache, serve the selection from it
     # (raw payload + droop/charge gain; dequantize_features folds them).
-    if jnp.issubdtype(cache.features.dtype, jnp.floating) != (wire == "float"):
+    cdt = cache.features.dtype
+    cache_ok = (
+        jnp.issubdtype(cdt, jnp.floating) if wire == "float"
+        else cdt == jnp.bool_ if wire == "sign"
+        else jnp.issubdtype(cdt, jnp.signedinteger)
+    )
+    if not cache_ok:
         raise ValueError(
-            f"cache dtype {cache.features.dtype} does not match wire={wire!r}; "
+            f"cache dtype {cdt} does not match wire={wire!r}; "
             "build it with init_feature_cache(cfg, ..., dtype=...) to match"
         )
     tspec = cfg.temporal
@@ -535,6 +580,7 @@ def apply_frontend(
     events = temporal_mod.gated_frame_events(
         n_pixels, cfg.patch.pixels_per_patch, cfg.patch.n_vectors,
         n_selected=n_selected, n_stale=n_stale.astype(jnp.float32),
+        readout=readout,
     )
     return CompactFeatures(
         payload, idx, valid, energy, scale, zero, gain, events), cache

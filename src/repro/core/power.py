@@ -98,6 +98,12 @@ class EnergyConstants:
     i_opamp_a: float = 2e-6        # per-patch OTA quiescent
     compute_duty: float = 0.5      # fraction of frame the analog compute is live
     e_pixel_dump_j: float = 1e-15  # deselected-patch photodiode clear
+    # DESIGN.md §13 — reconfigurable-mode events
+    e_sign_cmp_j: float = 5e-14    # one ADC-less comparator decision (no ramp,
+                                   # no SAR steps: ~1e-5 of a full conversion)
+    e_dac_reprogram_j: float = 2e-9  # rewrite + settle one weight-DAC register
+                                     # (a register write on top of the settle,
+                                     # ~4x the broadcast-only e_dac_j)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +137,11 @@ class EventCounts(NamedTuple):
     pixel_dumps: object = 0.0       # deselected-patch photodiode clears
     pwm_pixel_frames: object = 0.0  # comparator on-window, pixel·frames
     opamp_patch_frames: object = 0.0  # OTA on-window, patch·frames
+    # DESIGN.md §13 — reconfigurable-mode events (defaults keep every
+    # 7-field producer/consumer — stored artifacts included — valid)
+    sign_comparisons: object = 0.0  # ADC-less 1-bit comparator decisions
+    dac_reprograms: object = 0.0    # weight-DAC register REWRITES (kernel-bank
+                                    # cycling); 0 for a statically programmed bank
 
     def add(self, other: "EventCounts") -> "EventCounts":
         return EventCounts(*(a + b for a, b in zip(self, other)))
@@ -149,6 +160,7 @@ def frontend_frame_events(
     n_vectors: int,
     n_selected_patches,
     n_converted_patches,
+    readout: str = "adc",
 ) -> EventCounts:
     """The events ONE compact frontend frame executes (DESIGN.md §10).
 
@@ -160,32 +172,88 @@ def frontend_frame_events(
     are free: the readout is non-destructive, paper §2.1.2). Both may be
     scalars or batched arrays; the counts broadcast accordingly.
 
+    ``readout`` selects the conversion epilogue (DESIGN.md §13): the
+    default ``"adc"`` converts every (patch, vector) output at the edge
+    ADC; ``"sign"`` fires one comparator instead — same count, priced as
+    ``sign_comparisons`` (near-zero energy), zero ``adc_conversions``.
+    Everything upstream of the conversion (caps, PWM, OpAmps, CDS, DAC
+    broadcast, dumps) is readout-independent.
+
     Per-frame fixed costs (selection-independent): the DAC broadcasts all
     M·N² weight values over shared lines once per frame, and every pixel
     CDS-samples twice (global shutter) — the photodiodes integrate light
     regardless of gating.
     """
+    if readout not in ("adc", "sign"):
+        raise ValueError(f"unknown readout mode {readout!r}")
     n2 = pixels_per_patch
     m = n_vectors
     converted_px = n_converted_patches * n2
+    conversions = n_converted_patches * m
     # the "+ 0·count" terms broadcast the per-frame constants up to the
     # batch shape of the gated counts (and stay plain floats unbatched)
     return EventCounts(
-        adc_conversions=n_converted_patches * m,
+        adc_conversions=conversions if readout == "adc" else 0.0 * conversions,
         dac_loads=0.0 * n_converted_patches + float(m * n2),
         cap_charges=converted_px * m,
         cds_samples=0.0 * n_converted_patches + 2.0 * n_pixels,
         pixel_dumps=n_pixels - n_selected_patches * n2,
         pwm_pixel_frames=converted_px,
         opamp_patch_frames=1.0 * n_converted_patches,
+        sign_comparisons=conversions if readout == "sign" else 0.0 * conversions,
+        dac_reprograms=0.0 * n_converted_patches,
     )
 
 
-def steady_state_events(cfg: SensorConfig) -> EventCounts:
+def conv_frame_events(
+    n_pixels: float,
+    pixels_per_window: int,
+    n_channels: int,
+    n_windows,
+    readout: str = "adc",
+    reprogram: bool = False,
+) -> EventCounts:
+    """The events ONE conv-in-pixel frame executes (DESIGN.md §13).
+
+    Conv is dense over the frame: every K×K window (``n_windows`` of them,
+    overlapping when stride < K) runs one charge-share cycle per output
+    channel, so a pixel under ``w`` windows is PWM-read and cap-charged
+    ``w`` times — the overlap cost is explicit in the counts, never
+    averaged away. No patches deselect, so no photodiode dumps.
+
+    The weight DAC is the mode's distinguishing cost: the bank holds ONE
+    K²×C kernel, broadcast like the projection weights every frame
+    (``dac_loads``). A static kernel is programmed once at deploy and
+    costs nothing per frame; ``reprogram=True`` models cycling kernel
+    banks through the one physical array — C·K² register REWRITES per
+    frame, priced as ``dac_reprograms`` (the meter must see the
+    difference between program-once and reprogram-per-frame).
+    """
+    if readout not in ("adc", "sign"):
+        raise ValueError(f"unknown readout mode {readout!r}")
+    k2 = pixels_per_window
+    c = n_channels
+    window_px = n_windows * k2
+    conversions = n_windows * c
+    return EventCounts(
+        adc_conversions=conversions if readout == "adc" else 0.0 * conversions,
+        dac_loads=0.0 * n_windows + float(c * k2),
+        cap_charges=window_px * c,
+        cds_samples=0.0 * n_windows + 2.0 * n_pixels,
+        pixel_dumps=0.0 * n_windows,
+        pwm_pixel_frames=window_px,
+        opamp_patch_frames=1.0 * n_windows,
+        sign_comparisons=conversions if readout == "sign" else 0.0 * conversions,
+        dac_reprograms=(0.0 * n_windows + float(c * k2)) if reprogram
+        else 0.0 * n_windows,
+    )
+
+
+def steady_state_events(cfg: SensorConfig, readout: str = "adc") -> EventCounts:
     """The analytical per-frame event counts of the paper's steady state:
     a fraction ``f`` of the patches is selected AND converted every frame
     (no temporal reuse). :func:`power_report` is the meter on exactly
-    these counts."""
+    these counts. ``readout`` as in :func:`frontend_frame_events`."""
     n2 = cfg.patch_h * cfg.patch_w
     n_patches = cfg.n_pixels / n2
     f = cfg.active_fraction
@@ -195,6 +263,7 @@ def steady_state_events(cfg: SensorConfig) -> EventCounts:
         n_vectors=cfg.n_vectors,
         n_selected_patches=n_patches * f,
         n_converted_patches=n_patches * f,
+        readout=readout,
     )
 
 
@@ -246,6 +315,8 @@ class EnergyMeter:
             "opamps": ev.opamp_patch_frames * k.i_opamp_a * k.v_dd * window_s,
             "cds_sampling": ev.cds_samples * e_cds,
             "pixel_dump": ev.pixel_dumps * k.e_pixel_dump_j,
+            "sign_comparators": ev.sign_comparisons * k.e_sign_cmp_j,
+            "weight_reprogram": ev.dac_reprograms * k.e_dac_reprogram_j,
         }
 
     def power_w(

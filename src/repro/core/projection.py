@@ -54,6 +54,50 @@ class PatchSpec:
         return self.patch_h * self.patch_w
 
 
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Geometry of the conv-in-pixel mode (DESIGN.md §13).
+
+    The same ganged-8×8-tile fabric as :class:`PatchSpec`, reprogrammed:
+    the DAC weight bank holds a K×K kernel per output channel, and the
+    patch selector walks the frame with ``stride`` instead of tiling it —
+    overlapping windows are separate charge-share cycles over the same
+    (non-destructively read) pixels. K inherits the OpAmp ganging
+    constraint (8/16/24/32 per axis); the stride is free."""
+
+    kernel: int = 8               # K — ganged 8x8 tiles, like patch dims
+    stride: int = 8               # window step in pixels (< K overlaps)
+    n_channels: int = 16          # output channels (the conv "M")
+    quant: pwm_mod.QuantSpec = pwm_mod.QuantSpec()
+    summer: sc.SummerSpec = sc.SummerSpec()
+    nl: AnalogNLSpec = AnalogNLSpec(kind="none")
+
+    def __post_init__(self):
+        if self.stride < 1:
+            raise ValueError(f"stride={self.stride}: must be >= 1")
+        # kernel geometry is validated by the PatchSpec view below
+        self.patch_spec()
+
+    def patch_spec(self) -> PatchSpec:
+        """The projection-array view of one conv window: a K×K 'patch'
+        with ``n_channels`` output vectors — the kernel wrappers and the
+        event meter consume conv through this view."""
+        return PatchSpec(
+            patch_h=self.kernel, patch_w=self.kernel,
+            n_vectors=self.n_channels, quant=self.quant,
+            summer=self.summer, nl=self.nl,
+        )
+
+    def out_grid(self, h: int, w: int) -> tuple[int, int]:
+        if (h - self.kernel) % self.stride or (w - self.kernel) % self.stride:
+            raise ValueError(
+                f"frame {h}x{w} not covered by K={self.kernel} "
+                f"stride={self.stride} windows"
+            )
+        return ((h - self.kernel) // self.stride + 1,
+                (w - self.kernel) // self.stride + 1)
+
+
 def extract_patches(frame: jnp.ndarray, patch_h: int, patch_w: int) -> jnp.ndarray:
     """(H, W) or (B, H, W) frame -> (..., n_patches, patch_h*patch_w).
 
@@ -69,6 +113,32 @@ def extract_patches(frame: jnp.ndarray, patch_h: int, patch_w: int) -> jnp.ndarr
     gh, gw = h // patch_h, w // patch_w
     x = frame.reshape(b, gh, patch_h, gw, patch_w)
     x = x.transpose(0, 1, 3, 2, 4).reshape(b, gh * gw, patch_h * patch_w)
+    return x if batched else x[0]
+
+
+def extract_windows(frame: jnp.ndarray, kernel: int, stride: int) -> jnp.ndarray:
+    """(H, W) or (B, H, W) frame -> (..., n_windows, kernel²) strided im2col.
+
+    The conv-in-pixel selector: every K×K window at ``stride`` steps, in
+    row-major window order with row-major pixels inside each window — the
+    same pixel layout as :func:`extract_patches`, so
+    ``extract_windows(f, k, k) == extract_patches(f, k, k)`` exactly
+    (non-overlapping conv IS the patch tiling)."""
+    batched = frame.ndim == 3
+    if not batched:
+        frame = frame[None]
+    b, h, w = frame.shape
+    if (h - kernel) % stride or (w - kernel) % stride:
+        raise ValueError(
+            f"frame {h}x{w} not covered by K={kernel} stride={stride} windows"
+        )
+    gh = (h - kernel) // stride + 1
+    gw = (w - kernel) // stride + 1
+    rows = (jnp.arange(gh) * stride)[:, None] + jnp.arange(kernel)[None, :]
+    cols = (jnp.arange(gw) * stride)[:, None] + jnp.arange(kernel)[None, :]
+    # (b, gh, kernel, w) -> (b, gh, kernel, gw, kernel)
+    x = frame[:, rows, :][:, :, :, cols]
+    x = x.transpose(0, 1, 3, 2, 4).reshape(b, gh * gw, kernel * kernel)
     return x if batched else x[0]
 
 

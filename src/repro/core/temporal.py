@@ -346,10 +346,12 @@ def gated_frame_events(
     n_vectors: int,
     n_selected: jnp.ndarray,
     n_stale: jnp.ndarray,
+    readout: str = "adc",
 ):
     """The energy-costing events ONE gated frame executes (DESIGN.md §10):
     only the ``n_stale`` recomputed patches pay for projection (cap
-    charges, PWM/OpAmp windows) and conversion (ADC) — *holds are free*
+    charges, PWM/OpAmp windows) and conversion (ADC — or one comparator
+    each under ``readout="sign"``, DESIGN.md §13) — *holds are free*
     by the paper's non-destructive-readout argument (§2.1.2): serving
     held charge moves no charge and converts nothing. Spare idle slots
     contribute nothing either (their output is never converted or
@@ -364,6 +366,7 @@ def gated_frame_events(
         n_vectors=n_vectors,
         n_selected_patches=n_selected,
         n_converted_patches=n_stale,
+        readout=readout,
     )
 
 

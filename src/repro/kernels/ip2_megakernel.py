@@ -275,10 +275,12 @@ def ip2_fused_embed_pallas(
     codes of padded projection columns are junk (the epilogue of an empty
     accumulator), and the zero rows annihilate them in the int32 sum.
     """
-    if not (params.adc_enable and params.adc_out_codes):
+    if not (params.readout == "adc" and params.adc_enable
+            and params.adc_out_codes):
         raise ValueError(
             "ip2_fused_embed_pallas consumes its own fused-ADC codes; "
-            "params must have adc_enable=True and adc_out_codes=True"
+            "params must have readout='adc', adc_enable=True and "
+            "adc_out_codes=True (the sign wire has no w8a8 embed seam)"
         )
     p_rows, K = patches.shape
     K2, M = w_q.shape

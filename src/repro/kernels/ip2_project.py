@@ -52,6 +52,11 @@ class IP2KernelParams:
     adc_vmax: float = 1.0
     adc_enable: bool = True
     adc_out_codes: bool = False  # emit int codes (the wire format, DESIGN.md §9)
+    readout: str = "adc"         # "adc" | "sign" — epilogue mode (DESIGN.md §13)
+
+    def __post_init__(self):
+        if self.readout not in ("adc", "sign"):
+            raise ValueError(f"unknown readout mode {self.readout!r}")
 
     def adc_spec(self) -> adc_mod.ADCSpec:
         return adc_mod.ADCSpec(
@@ -60,6 +65,8 @@ class IP2KernelParams:
 
     @property
     def out_dtype(self):
+        if self.readout == "sign":
+            return jnp.int8  # {0,1} sign bits; the wrapper re-types to bool
         if self.adc_enable and self.adc_out_codes:
             return self.adc_spec().code_dtype
         return jnp.float32
@@ -74,20 +81,31 @@ def pwm_quantize_tile(x: jnp.ndarray, p: IP2KernelParams) -> jnp.ndarray:
 
 def analog_epilogue_tile(acc: jnp.ndarray, b: jnp.ndarray, p: IP2KernelParams) -> jnp.ndarray:
     """The fused analog readout: charge-share /N2 + droop + VR, the 2T
-    nonlinearity, and the edge ADC. Shared by the dense and sparse
-    projection kernels.
+    nonlinearity, then one of the mode-selectable conversion epilogues
+    (DESIGN.md §13). Shared by the dense, sparse, ragged and fused kernels
+    — ``p.readout`` is static, so the default ``"adc"`` path lowers to
+    exactly the pre-mode pipeline (asserted bitwise in tests).
 
-    With ``adc_out_codes`` the tile leaves in wire format — centered
-    integer code values (cast to the code dtype by the caller); the bias
-    is NOT applied (it lives in the ``zero`` metadata of
-    :func:`repro.core.adc.readout_scale_zero`). Otherwise the dequantized
-    float readout including the VR-b digital subtraction is produced, on
-    exactly the grid of :func:`repro.core.adc.digital_readout` so kernel
-    and jnp paths stay bit-identical.
+    * ``readout="adc"`` (default) — the edge ADC. With ``adc_out_codes``
+      the tile leaves in wire format — centered integer code values (cast
+      to the code dtype by the caller); the bias is NOT applied (it lives
+      in the ``zero`` metadata of
+      :func:`repro.core.adc.readout_scale_zero`). Otherwise the
+      dequantized float readout including the VR-b digital subtraction is
+      produced, on exactly the grid of
+      :func:`repro.core.adc.digital_readout` so kernel and jnp paths stay
+      bit-identical.
+    * ``readout="sign"`` — ADC-less comparator readout: one bit per
+      vector, ``out >= V_R``, emitted as {0, 1} on the f32 grid (the
+      caller casts to int8; the ops wrapper re-types the wire to bool).
+      As on the code wire, the bias is metadata
+      (:func:`repro.core.adc.sign_scale_zero`), never payload.
     """
     out = acc * (p.droop / p.n2) + p.v_ref
     if p.nl_kind == "relu":
         out = jnp.clip(out, 0.0, p.v_sat)
+    if p.readout == "sign":
+        return jnp.where(out >= p.v_ref, 1.0, 0.0)
     if not p.adc_enable:
         return out - (p.v_ref - b)
     spec = p.adc_spec()

@@ -104,12 +104,27 @@ def fused_adc_conversions(n_rows, spec: proj_mod.PatchSpec, adc=None):
     return n_rows * spec.n_vectors
 
 
+def fused_sign_comparisons(n_rows, spec: proj_mod.PatchSpec):
+    """Comparator firings of one sign-readout projection call: one per
+    (real row, vector) — the ADC-less counterpart of
+    :func:`fused_adc_conversions` (priced as ``sign_comparisons``, not
+    ``adc_conversions``, DESIGN.md §13)."""
+    return n_rows * spec.n_vectors
+
+
 def kernel_params_from_spec(
-    spec: proj_mod.PatchSpec, adc=None, codes: bool = False
+    spec: proj_mod.PatchSpec, adc=None, codes: bool = False,
+    readout: str = "adc",
 ) -> IP2KernelParams:
     if codes and adc is None:
         raise ValueError("codes=True requires an ADCSpec (the codes ARE the ADC output)")
+    if readout == "sign" and codes:
+        raise ValueError(
+            "readout='sign' emits the 1-bit sign wire; the int code wire "
+            "(codes=True) only exists on the ADC readout"
+        )
     return IP2KernelParams(
+        readout=readout,
         n2=spec.pixels_per_patch,
         pwm_levels=spec.quant.pwm_levels,
         droop=spec.summer.droop_factor(),
@@ -131,6 +146,7 @@ def ip2_project(
     adc=None,
     bias: jnp.ndarray | None = None,
     codes: bool = False,
+    readout: str = "adc",
     block_p: int = 128,
     block_m: int = 128,
     block_k: int = 256,
@@ -139,7 +155,9 @@ def ip2_project(
     """Kernel-backed equivalent of core.projection.analog_project_patches
     (+ fused ADC readout when ``adc`` is given). Returns (..., P, M) —
     float32 readout, or the int code payload when ``codes=True`` (the bias
-    then lives in the ``zero`` metadata, not the payload)."""
+    then lives in the ``zero`` metadata, not the payload), or the bool
+    sign wire when ``readout="sign"`` (DESIGN.md §13; metadata from
+    :func:`repro.core.adc.sign_scale_zero`)."""
     w_q = _dac_weights(weights, spec)
     m, n2 = w_q.shape
     lead = patches.shape[:-1]
@@ -157,13 +175,15 @@ def ip2_project(
     w_pad = _pad_to(_pad_to(w_t.astype(jnp.float32), 0, block_k), 1, block_m)
     b_pad = _pad_to(b, 0, block_m)
 
-    params = kernel_params_from_spec(spec, adc, codes)
+    params = kernel_params_from_spec(spec, adc, codes, readout)
     out = ip2_project_pallas(
         k_in, w_pad, b_pad, params,
         block_p=block_p, block_m=block_m, block_k=block_k,
         interpret=_auto_interpret(interpret),
     )
     out = out[: flat.shape[0], :m]
+    if readout == "sign":
+        out = out.astype(bool)     # kernels emit int8 {0,1}; the wire is 1-bit
     return out.reshape(*lead, m)
 
 
@@ -229,6 +249,63 @@ def ip2_codes_fn(spec: proj_mod.PatchSpec, adc, programmed=None, **kw):
     return fn
 
 
+def ip2_sign_fn(spec: proj_mod.PatchSpec, programmed=None, **kw):
+    """Adapter matching core.frontend.ProjectFn whose output is the 1-bit
+    sign wire (DESIGN.md §13): bool comparator bits straight from the
+    kernel's ADC-less epilogue. The frontend detects ``emits_sign`` and
+    attaches :func:`repro.core.adc.sign_scale_zero` metadata instead of the
+    ADC affine. ``programmed``/``row_counts`` as in :func:`ip2_project_fn`
+    (shed rows come back as bit 0 with gain 0)."""
+
+    def fn(patches, weights, _spec, row_counts=None):
+        w = programmed if programmed is not None else weights
+        if row_counts is None:
+            return ip2_project(patches, w, _spec, readout="sign", **kw)
+        return ip2_project_sparse(
+            patches, w, _identity_indices(patches), _spec,
+            readout="sign", row_counts=row_counts, **kw)
+
+    fn.supports_row_counts = True
+    fn.emits_sign = True
+    # no ADC ramp runs: the epilogue fires one comparator per (row, vector)
+    fn.frame_conversions = lambda n_rows: fused_adc_conversions(n_rows, spec)
+    fn.frame_sign_comparisons = lambda n_rows: fused_sign_comparisons(
+        n_rows, spec)
+    return fn
+
+
+def ip2_conv(
+    frame: jnp.ndarray,            # (H, W) or (B, H, W) pixel voltages [0,1]
+    weights: jnp.ndarray,          # (C, K²) float (pre-DAC) or ProgrammedWeights
+    conv: proj_mod.ConvSpec,
+    adc=None,
+    bias: jnp.ndarray | None = None,
+    codes: bool = False,
+    readout: str = "adc",
+    block_m: int = 128,
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Conv-in-pixel mode (DESIGN.md §13): strided K×K in-pixel convolution
+    reusing the PWM/charge-share projection fabric — the frame's windows
+    are the 'patches' (``extract_windows``), the C output channels are the
+    'vectors', and the whole mode-selectable epilogue (fused ADC, code
+    wire, sign readout) applies per window. Returns (..., gh·gw, C) in
+    row-major window order, dtype per the chosen epilogue.
+
+    The energy difference from patch-bank projection is the weight DAC:
+    conv holds ONE K²×C kernel bank, so a static kernel is programmed once
+    at deploy (``dac_reprograms`` ≈ 0 per frame) while cycling kernels
+    through the bank reprograms per frame — priced by
+    :func:`repro.core.power.conv_frame_events`, never by this wrapper."""
+    windows = proj_mod.extract_windows(frame, conv.kernel, conv.stride)
+    return ip2_project(
+        windows, weights, conv.patch_spec(), adc=adc, bias=bias,
+        codes=codes, readout=readout, block_m=block_m, block_k=block_k,
+        interpret=interpret,
+    )
+
+
 def _ragged_tables(
     indices: jnp.ndarray,          # (..., k) active patch indices
     n_patches: int,
@@ -281,6 +358,7 @@ def ip2_project_sparse(
     adc=None,
     bias: jnp.ndarray | None = None,
     codes: bool = False,
+    readout: str = "adc",
     row_counts=None,               # (...,) int real rows per slot, or None
     block_r: int | None = None,
     block_m: int = 128,
@@ -323,7 +401,7 @@ def ip2_project_sparse(
     k_in = _pad_to(flat_p, 1, block_k)
     w_pad = _pad_to(_pad_to(w_q.T.astype(jnp.float32), 0, block_k), 1, block_m)
     b_pad = _pad_to(b, 0, block_m)
-    params = kernel_params_from_spec(spec, adc, codes)
+    params = kernel_params_from_spec(spec, adc, codes, readout)
 
     if row_counts is not None:
         br = 8 if block_r is None else block_r
@@ -336,6 +414,8 @@ def ip2_project_sparse(
         )
         out = out.reshape(batch, n_banks * br, -1)[:, :k, :m]
         out = _mask_ragged_rows(out, counts, k)
+        if readout == "sign":
+            out = out.astype(bool)
         return out.reshape(*lead, k, m)
 
     # fold the batch into the row index: row_idx addresses (B*P) dense rows
@@ -356,7 +436,10 @@ def ip2_project_sparse(
         block_r=block_r, block_m=block_m, block_k=block_k,
         interpret=_auto_interpret(interpret),
     )
-    return out[:n_rows, :m].reshape(*lead, k, m)
+    out = out[:n_rows, :m]
+    if readout == "sign":
+        out = out.astype(bool)
+    return out.reshape(*lead, k, m)
 
 
 def ip2_fused_embed(

@@ -34,6 +34,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import adc as adc_mod
 from repro.core import power as power_mod
 from repro.core.frontend import (
     CompactFeatures,
@@ -200,6 +201,13 @@ def _embed_tokens(params: dict, cf: CompactFeatures, cfg: ViTConfig) -> jnp.ndar
         ((c·s + z) ⊙ g) @ W  =  g ⊙ (s·(c @ W8)·s_w + z @ dequant(W8))
     """
     feats = cf.features
+    if feats.dtype == jnp.bool_:
+        # ADC-less sign wire (DESIGN.md §13): a 1-bit payload with the
+        # sign affine, NOT int8 codes with the code affine — it must not
+        # enter the w8a8 kernel. Its dequant is the same one-site fold
+        # ({0,1}·2v_mag + (bias - v_mag) = ±v_mag + bias), so the generic
+        # route below is already exact.
+        return dequantize_features(cf) @ params["embed"]
     if cfg.quant_embed and not jnp.issubdtype(feats.dtype, jnp.floating):
         from repro.kernels import ops  # lazy: keep the model import-light
 
@@ -312,6 +320,7 @@ def vit_forward_compact(
     wire: str | None = None,
     k_cap: jnp.ndarray | None = None,
     stale_cap: jnp.ndarray | None = None,
+    sign_mode: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, dict]:
     """Compact path: frontend projects only the k selected patches, the
     backend attends over exactly those k tokens (index-looked-up positional
@@ -339,6 +348,16 @@ def vit_forward_compact(
     temporal recompute allocation to ``stale_cap`` slots. Data, not
     shape — governed and ungoverned steps share one compilation.
 
+    ``sign_mode`` ((B,) bool) is the governor's ADC-less tier knob
+    (DESIGN.md §13): flagged rows have their served int8 code wire
+    degraded to its 1-bit sign view (static code-grid points from
+    :func:`repro.core.adc.sign_code_points`) and this frame's ADC
+    conversions re-ledgered as sign comparisons. Data only — the payload
+    stays int8 and no shape changes, so governed readout switches never
+    retrace; the refreshed cache keeps the REAL codes (the comparator
+    readout is non-destructive), so a recovering slot resumes from
+    full-precision held charge. Requires the code wire.
+
     Returns (logits (B, n_classes), aux) with aux:
       ``indices`` (B, k)  — the patches that were ADC-converted;
       ``valid``   (B, k)  — False only on filler slots (< k active);
@@ -360,6 +379,11 @@ def vit_forward_compact(
     same logits, bitwise, for the same selection.
     """
     if cfg.fused_embed:
+        if sign_mode is not None:
+            raise ValueError(
+                "fused_embed consumes codes in-kernel (DESIGN.md §11); "
+                "the sign-tier degradation needs the staged code wire — "
+                "use fused_embed=False in a sign-tier governed engine")
         return _forward_compact_fused(
             params, rgb, cfg, indices, mask, project_fn, precomputed,
             cache, wire, k_cap, stale_cap,
@@ -374,6 +398,26 @@ def vit_forward_compact(
     if cache is not None:
         out, new_cache = out
     cf: CompactFeatures = out
+    if sign_mode is not None:
+        if jnp.issubdtype(cf.features.dtype, jnp.floating):
+            raise ValueError(
+                "sign_mode degrades the int8 code wire (DESIGN.md §13); "
+                "the float wire has no codes to degrade — it is the STE "
+                "training view, not a served payload")
+        c_thresh, c_pos, c_neg = adc_mod.sign_code_points(
+            cfg.frontend.patch.summer.v_ref, cfg.frontend.adc)
+        sm = sign_mode[:, None, None]
+        cf = cf._replace(features=jnp.where(
+            sm,
+            jnp.where(cf.features >= c_thresh, c_pos, c_neg)
+               .astype(cf.features.dtype),
+            cf.features))
+        ev = cf.events
+        cf = cf._replace(events=ev._replace(
+            adc_conversions=jnp.where(sign_mode, 0.0, ev.adc_conversions),
+            sign_comparisons=jnp.where(
+                sign_mode, ev.adc_conversions, ev.sign_comparisons),
+        ))
     # index-based positional embeddings: pos[idx], not pos broadcast over P
     x = _embed_tokens(params, cf, cfg) + params["pos"][cf.indices]
     logits, received = _encoder(params, x, cfg, cf.valid)

@@ -221,14 +221,21 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
             cache = state.cache._replace(
                 valid=state.cache.valid & ~fresh[:, None]
             )
-        k_cap = stale_cap = None
+        k_cap = stale_cap = sign_mode = None
         if governor is not None:
             k_cap = gov_mod.tier_k_eff(governor, state.controls.tier, k)
             stale_cap = state.controls.j_cap
+            if governor.sign_tier:
+                # ADC-less tier (DESIGN.md §13): a (S,) bool DATA knob —
+                # flagged slots serve the 1-bit sign view of the code
+                # wire and re-ledger conversions as sign comparisons;
+                # the cache keeps full-precision codes for recovery
+                sign_mode = gov_mod.tier_is_sign(governor, state.controls.tier)
         logits, aux = vit_forward_compact(
             params, frames, cfg, indices=indices,
             project_fn=project_fn, precomputed=(patches, weights),
             cache=cache, k_cap=k_cap, stale_cap=stale_cap,
+            sign_mode=sign_mode,
         )
         scores = saccade_scores(aux, explore)
         ema = jnp.where(
@@ -694,11 +701,23 @@ class SaccadeEngine:
 
     def k_tier(self, stream_id: Hashable) -> int:
         """The governor's current active-token count for this stream
-        (k_eff of its tier; governed engines only)."""
+        (k_eff of its tier; governed engines only). The sign tier keeps
+        the finest k tier's token count — it degrades the readout, not
+        the selection (DESIGN.md §13)."""
         if self.governor is None:
             raise RuntimeError("engine was built without a governor")
         tier = int(self.state.controls.tier[self.slot_of(stream_id)])
-        return self.governor.tier_tokens(self.cfg.frontend.n_active)[tier]
+        tokens = self.governor.tier_tokens(self.cfg.frontend.n_active)
+        return tokens[min(tier, len(tokens) - 1)]
+
+    def sign_readout(self, stream_id: Hashable) -> bool:
+        """True while the governor holds this stream in the ADC-less
+        sign-readout tier (DESIGN.md §13; governed engines only)."""
+        if self.governor is None:
+            raise RuntimeError("engine was built without a governor")
+        tier = int(self.state.controls.tier[self.slot_of(stream_id)])
+        return bool(self.governor.sign_tier
+                    and tier >= len(self.governor.k_tiers))
 
     def gaze(self, stream_id: Hashable) -> np.ndarray:
         """The (k,) patch indices this stream will ADC-convert next frame.

@@ -87,6 +87,16 @@ class GovernorSpec:
     refresh_horizon: bound on served-token staleness — the tier target
       keeps ``k_eff <= j_cap · refresh_horizon`` so every served token
       wins a refresh slot within that many frames.
+    sign_tier: enables one extra degradation tier BELOW the whole k
+      ladder (DESIGN.md §13): tier index ``len(k_tiers)`` keeps the
+      finest tier's token count but swaps the edge ADC for the ADC-less
+      sign readout — near-zero conversion energy, 1-bit features. A slot
+      degrades into it only when the budget cannot cover even the finest
+      k tier's floor allocation, and recovers out of it with the stricter
+      ``(1 - deadband)`` margin. Like every other knob it is DATA: the
+      per-slot tier index selects it, shapes never change, and the
+      engine applies the sign degradation to the already-converted code
+      wire (`adc.sign_code_points`) — zero recompiles.
     """
 
     budget_mw: float
@@ -95,6 +105,7 @@ class GovernorSpec:
     slew: int = 2
     k_tiers: tuple[float, ...] = (1.0, 0.75, 0.5, 0.25)
     refresh_horizon: int = 8
+    sign_tier: bool = False
 
     def __post_init__(self):
         if self.budget_mw <= 0:
@@ -146,8 +157,22 @@ def reset_rows(controls: GovernorControls, hit: jnp.ndarray,
 
 
 def tier_k_eff(spec: GovernorSpec, tier: jnp.ndarray, k: int) -> jnp.ndarray:
-    """(S,) tier indices -> (S,) k_eff token counts."""
-    return jnp.take(jnp.asarray(spec.tier_tokens(k), jnp.int32), tier)
+    """(S,) tier indices -> (S,) k_eff token counts.
+
+    With ``sign_tier`` enabled the tier index range grows by one; the
+    sign tier keeps the finest k tier's token count (it degrades the
+    readout, not the selection), so indices clamp to the last k entry."""
+    tokens = jnp.asarray(spec.tier_tokens(k), jnp.int32)
+    return jnp.take(tokens, jnp.minimum(tier, len(spec.k_tiers) - 1))
+
+
+def tier_is_sign(spec: GovernorSpec, tier: jnp.ndarray) -> jnp.ndarray:
+    """(S,) bool — slots currently degraded to the ADC-less sign readout
+    (tier index past the whole k ladder). Always False when the spec has
+    no sign tier."""
+    if not spec.sign_tier:
+        return jnp.zeros_like(tier, dtype=bool)
+    return tier >= len(spec.k_tiers)
 
 
 def fixed_power_mw(
@@ -227,6 +252,26 @@ def control_update(
     )
     fits_up = fits_up.at[:, -1].set(True)
     t_up = jnp.argmax(fits_up, axis=-1).astype(jnp.int32)
+
+    # 3b. ADC-less sign tier (DESIGN.md §13): one more rung below the
+    # whole k ladder. A slot falls into it only when the budget cannot
+    # cover even the finest k tier's floor allocation (fixed power at
+    # the minimum token count plus `floor` recompute slots), and climbs
+    # back out only with the stricter (1 - deadband) margin — the same
+    # hysteresis shape as the k ladder, so a boundary budget cannot
+    # flip the readout every frame.
+    if spec.sign_tier:
+        n_kt = jnp.int32(len(spec.k_tiers))
+        k_min = jnp.full_like(j_new, int(spec.tier_tokens(k)[-1]))
+        fixed_min = fixed_power_mw(
+            meter, n_pixels, pixels_per_patch, n_vectors, k_min, frame_hz
+        )
+        floor_mw = fixed_min + spec.floor * slot_mw
+        want_sign = budget < floor_mw
+        recover_ok = budget * (1.0 - spec.deadband) >= floor_mw
+        t_target = jnp.where(want_sign, n_kt, t_target)
+        t_up = jnp.where(recover_ok, t_up, n_kt)
+
     t_cur = controls.tier
     t_new = jnp.where(
         t_target > t_cur, t_cur + 1,                              # degrade

@@ -14,9 +14,11 @@ import math
 import numpy as np
 import pytest
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.adc import ADCSpec, adc_quantize, digital_readout
+from repro.core.analog_nl import AnalogNLSpec, analog_nonlinearity
 from repro.core.switched_cap import (
     SummerSpec,
     TAU_LEAK_65NM_S,
@@ -221,3 +223,102 @@ def test_opamp_droop_is_gain_error_not_leak():
     r1 = SummerSpec(mode="passive", hold_time_s=1e-6).droop_factor()
     r2 = SummerSpec(mode="passive", hold_time_s=10e-6).droop_factor()
     assert r1 > r2
+
+
+# ---------------------------------------------------------------------------
+# 2T analog nonlinearity (core/analog_nl.py) — DESIGN.md §13 satellite
+# ---------------------------------------------------------------------------
+
+def check_nl_clip_bounds(v: np.ndarray, spec) -> None:
+    """'none' clips to the ±v_sat rails, 'relu' rectifies to [0, v_sat] —
+    the supply rail is a hard bound whatever the input."""
+    out = np.asarray(analog_nonlinearity(jnp.asarray(v), spec))
+    lo = -spec.v_sat if spec.kind == "none" else 0.0
+    assert out.min() >= lo - 1e-7 and out.max() <= spec.v_sat + 1e-7
+    # inside the rails the transfer is the identity
+    inside = (v > lo) & (v < spec.v_sat)
+    np.testing.assert_allclose(out[inside], v[inside], rtol=1e-6)
+
+
+def check_nl_grad_finite(v: np.ndarray, spec) -> None:
+    g = np.asarray(jax.vmap(jax.grad(
+        lambda x: analog_nonlinearity(x, spec)))(jnp.asarray(v)))
+    assert np.isfinite(g).all(), f"{spec.kind}: non-finite grad"
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=50)
+    @given(
+        v=st.lists(st.floats(-500.0, 500.0, allow_nan=False), min_size=1,
+                   max_size=32),
+        kind=st.sampled_from(["none", "relu", "sigmoid"]),
+    )
+    def test_nl_bounded_and_differentiable_hypothesis(v, kind):
+        arr = np.asarray(v, np.float32)
+        spec = AnalogNLSpec(kind=kind)
+        if kind != "sigmoid":
+            check_nl_clip_bounds(arr, spec)
+        out = np.asarray(analog_nonlinearity(jnp.asarray(arr), spec))
+        assert np.isfinite(out).all()
+        assert np.abs(out).max() <= spec.v_sat + 1e-7
+        check_nl_grad_finite(arr, spec)
+
+
+@pytest.mark.parametrize("kind", ["none", "relu"])
+def test_nl_clip_battery(kind):
+    rng = np.random.default_rng(7)
+    v = np.concatenate([
+        rng.uniform(-3, 3, 64),
+        [-200.0, -1.0, -0.5, 0.0, 0.5, 1.0, 200.0],
+    ]).astype(np.float32)
+    check_nl_clip_bounds(v, AnalogNLSpec(kind=kind))
+    check_nl_grad_finite(v, AnalogNLSpec(kind=kind))
+
+
+def test_nl_sigmoid_shape():
+    """The S-curve: strictly monotone, open range (0, v_sat), gain sets
+    the slope at the bias point."""
+    spec = AnalogNLSpec(kind="sigmoid", v_sat=0.8)
+    # strict monotonicity holds where f32 can still resolve the slope
+    # (past gain·v ≈ ±17 the output rounds onto the rails — that flat
+    # tail is the saturation, not a monotonicity bug)
+    v = jnp.linspace(-2.0, 2.0, 201)
+    out = np.asarray(analog_nonlinearity(v, spec))
+    assert (np.diff(out) > 0).all()
+    assert out.min() > 0.0 and out.max() < spec.v_sat
+    wide = np.asarray(analog_nonlinearity(jnp.linspace(-300.0, 300.0, 201),
+                                          spec))
+    assert (np.diff(wide) >= 0).all()
+    assert wide.min() >= 0.0 and wide.max() <= spec.v_sat
+    assert analog_nonlinearity(jnp.float32(0.0), spec) == pytest.approx(
+        spec.v_sat / 2)
+    # slope at 0 is gain·v_sat/4 (d/dv sigmoid(g v)·v_sat at v=0)
+    g0 = float(jax.grad(lambda x: analog_nonlinearity(x, spec))(jnp.float32(0.0)))
+    assert g0 == pytest.approx(spec.sigmoid_gain * spec.v_sat / 4, rel=1e-5)
+
+
+def test_nl_sigmoid_saturated_inputs_regression():
+    """Regression for the overflow bug: the naive v_sat/(1+exp(-g·v))
+    form overflows exp() to inf at g·v <= -89 in f32 — value AND (via
+    inf/inf) STE gradient went NaN. The stable form must return a finite,
+    saturated value and an exactly-zero-or-finite gradient at ±200."""
+    spec = AnalogNLSpec(kind="sigmoid")
+    for v in (-200.0, 200.0):
+        out = float(analog_nonlinearity(jnp.float32(v), spec))
+        assert np.isfinite(out)
+        g = float(jax.grad(
+            lambda x: analog_nonlinearity(x, spec))(jnp.float32(v)))
+        assert np.isfinite(g)
+    assert float(analog_nonlinearity(jnp.float32(-200.0), spec)) == 0.0
+    assert float(analog_nonlinearity(jnp.float32(200.0), spec)) \
+        == pytest.approx(spec.v_sat)
+    # the naive form is genuinely the bug being guarded against
+    naive = 1.0 / (1.0 + np.exp(np.float32(200.0 * spec.sigmoid_gain)))
+    assert naive == 0.0 or not np.isfinite(
+        np.exp(np.float32(200.0 * spec.sigmoid_gain)))
+
+
+def test_nl_unknown_kind_raises():
+    with pytest.raises(ValueError, match="unknown analog nonlinearity"):
+        analog_nonlinearity(jnp.zeros(()), AnalogNLSpec(kind="tanh"))

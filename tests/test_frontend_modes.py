@@ -1,0 +1,567 @@
+"""Reconfigurable frontend modes (DESIGN.md §13): conv-in-pixel and the
+ADC-less sign readout, plus the default-mode bitwise guarantee.
+
+Contracts pinned here:
+
+* the default patch-bank + ADC epilogue is BITWISE unchanged by the mode
+  refactor (``readout="adc"`` explicit == default call, features and
+  event ledgers);
+* each new mode has a pure-jnp oracle and the kernels match it exactly
+  (interpret mode on CPU);
+* each mode emits the correct :class:`EventCounts` — sign readout swaps
+  ``adc_conversions`` for ``sign_comparisons``; conv prices DAC
+  reprogramming only when the kernel bank actually cycles per frame;
+* the governor's sign tier slots BELOW the whole k ladder, engages only
+  when the budget cannot cover the finest tier's floor allocation, and
+  switches readouts with ZERO recompiles (``n_traces == 1``);
+* the sign wire is a real wire format: bool payload, its own
+  (scale, zero) affine, cache dtype discipline, embed-side bypass of the
+  w8a8 kernel.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.core as c
+from repro.core import adc as adc_mod
+from repro.core import power as power_mod
+from repro.core import projection as proj
+from repro.core import pwm as pwm_mod
+from repro.core.frontend import (
+    FrontendConfig,
+    apply_frontend,
+    dequantize_features,
+)
+from repro.core.projection import ConvSpec, PatchSpec, extract_patches
+from repro.core.temporal import TemporalSpec, init_feature_cache
+from repro.kernels import ops, ref
+from repro.models.vit import ViTConfig, init_vit, vit_forward_compact
+from repro.serve.engine import SaccadeEngine
+from repro.serve import governor as gov_mod
+from repro.serve.governor import GovernorSpec
+
+KEY = jax.random.PRNGKey(0)
+FRAME_HZ = 30.0
+
+
+def _fcfg(**kw):
+    base = dict(
+        image_h=64, image_w=64,
+        patch=PatchSpec(patch_h=16, patch_w=16, n_vectors=32),
+        active_fraction=0.25,
+    )
+    base.update(kw)
+    return FrontendConfig(**base)
+
+
+def _vcfg(fcfg, **kw):
+    base = dict(frontend=fcfg, n_layers=1, d_model=32, n_heads=2, d_ff=64)
+    base.update(kw)
+    return ViTConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# sign readout: kernel epilogue vs oracle, default-mode bitwise guarantee
+# ---------------------------------------------------------------------------
+
+class TestSignReadoutKernel:
+    spec = PatchSpec(patch_h=8, patch_w=8, n_vectors=24)
+
+    def _data(self, n_patches=9, batch=2):
+        patches = jax.random.uniform(KEY, (batch, n_patches, 64))
+        w = jax.random.normal(jax.random.PRNGKey(1), (24, 64)) * 3.0
+        return patches, w
+
+    def test_default_readout_is_bitwise_unchanged(self):
+        """The tentpole's no-regression clause: the mode-selectable
+        epilogue with readout='adc' (the default) lowers to the exact
+        pre-refactor pipeline — explicit and default calls are bitwise
+        equal on every wire."""
+        patches, w = self._data()
+        adc = adc_mod.ADCSpec(bits=8)
+        bias = jax.random.normal(jax.random.PRNGKey(2), (24,)) * 0.1
+        for kw in (dict(), dict(adc=adc, bias=bias),
+                   dict(adc=adc, bias=bias, codes=True)):
+            base = ops.ip2_project(patches, w, self.spec, interpret=True, **kw)
+            expl = ops.ip2_project(patches, w, self.spec, readout="adc",
+                                   interpret=True, **kw)
+            np.testing.assert_array_equal(np.asarray(base), np.asarray(expl))
+            assert base.dtype == expl.dtype
+
+    def test_sign_dense_matches_oracle(self):
+        patches, w = self._data()
+        got = ops.ip2_project(patches, w, self.spec, readout="sign",
+                              interpret=True)
+        assert got.dtype == jnp.bool_
+        w_q, _ = pwm_mod.quantize_weights(w, self.spec.quant)
+        params = ops.kernel_params_from_spec(self.spec, readout="sign")
+        want = ref.ip2_project_ref(
+            patches.reshape(-1, 64), w_q.T, jnp.zeros((24,)), params)
+        assert want.dtype == jnp.int8          # kernel-grid {0,1}
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want.reshape(2, 9, 24).astype(bool)))
+
+    def test_sign_bit_is_comparator_of_analog_output(self):
+        """The sign epilogue IS the comparator: bit == (Out_v >= V_R) of
+        the same analog pipeline the float readout sees."""
+        patches, w = self._data()
+        bits = ops.ip2_project(patches, w, self.spec, readout="sign",
+                               interpret=True)
+        out_v = proj.analog_project_patches(patches, w, self.spec)
+        want = adc_mod.sign_encode(out_v, self.spec.summer.v_ref)
+        np.testing.assert_array_equal(np.asarray(bits), np.asarray(want))
+
+    def test_sign_sparse_matches_dense_gather(self):
+        patches, w = self._data()
+        idx = jnp.array([[0, 8, 4], [7, 1, 2]], jnp.int32)
+        dense = ops.ip2_project(patches, w, self.spec, readout="sign",
+                                interpret=True)
+        sparse = ops.ip2_project_sparse(patches, w, idx, self.spec,
+                                        readout="sign", interpret=True)
+        assert sparse.dtype == jnp.bool_
+        np.testing.assert_array_equal(
+            np.asarray(sparse),
+            np.asarray(jnp.take_along_axis(dense, idx[..., None], axis=-2)))
+        # ragged entry: shed rows come back as bit 0
+        ragged = ops.ip2_project_sparse(
+            patches, w, idx, self.spec, readout="sign",
+            row_counts=jnp.array([2, 3], jnp.int32), interpret=True)
+        np.testing.assert_array_equal(np.asarray(ragged[0, :2]),
+                                      np.asarray(sparse[0, :2]))
+        assert not np.asarray(ragged[0, 2]).any()
+
+    def test_sign_dequant_affine(self):
+        """dequantize(bit, *sign_scale_zero(bias)) == ±v_mag + bias — the
+        sign wire reuses the ONE dequant site unchanged (§9/§13)."""
+        bias = jnp.float32(0.03)
+        scale, zero = adc_mod.sign_scale_zero(bias)
+        bits = jnp.array([True, False])
+        got = adc_mod.dequantize(bits, scale, zero)
+        np.testing.assert_allclose(
+            np.asarray(got),
+            [adc_mod.SIGN_V_MAG + 0.03, -adc_mod.SIGN_V_MAG + 0.03],
+            rtol=1e-6)
+
+    def test_sign_code_points_degrade_like_the_comparator(self):
+        """The engine's data-only degradation (already-converted int8
+        codes -> two reconstruction points) agrees with the comparator on
+        every code of the grid, and dequantizes to the sign affine's
+        reconstruction levels through the CODE wire's own affine."""
+        spec = adc_mod.ADCSpec(bits=8)
+        v_ref, bias = 0.25, 0.05
+        c_thresh, c_pos, c_neg = adc_mod.sign_code_points(v_ref, spec)
+        out_v = jnp.linspace(spec.v_min, spec.v_max, 1001)
+        wire = adc_mod.digital_codes(out_v, v_ref, bias, spec)
+        got_bit = np.asarray(wire.codes) >= c_thresh
+        want_bit = np.asarray(adc_mod.sign_encode(out_v, v_ref))
+        # thresholding the converted code agrees with the real comparator
+        # everywhere except (at most) within half an LSB of the boundary —
+        # the code grid cannot resolve finer than that
+        disagree = got_bit != want_bit
+        if disagree.any():
+            assert np.abs(np.asarray(out_v)[disagree] - v_ref).max() \
+                <= spec.lsb
+        # degraded codes land on the ±v_mag reconstruction points (within
+        # one LSB — the sign levels are snapped onto the code grid), for
+        # ANY bias: the points are bias-independent, the affine carries it
+        for b in (0.0, bias):
+            scale, zero = adc_mod.readout_scale_zero(v_ref, b, spec)
+            recon = np.asarray(adc_mod.dequantize(
+                jnp.array([c_pos, c_neg], jnp.int8), scale, zero))
+            lvl = np.array([adc_mod.SIGN_V_MAG + b, -adc_mod.SIGN_V_MAG + b])
+            assert np.abs(recon - lvl).max() <= spec.lsb
+
+    def test_sign_rejects_code_wire(self):
+        patches, w = self._data()
+        with pytest.raises(ValueError, match="sign"):
+            ops.ip2_project(patches, w, self.spec, adc=adc_mod.ADCSpec(),
+                            codes=True, readout="sign", interpret=True)
+        with pytest.raises(ValueError, match="readout"):
+            ops.ip2_project(patches, w, self.spec, readout="bogus",
+                            interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# conv-in-pixel mode
+# ---------------------------------------------------------------------------
+
+class TestConvInPixel:
+    def _frame(self, h=32, w=32, batch=2):
+        return jax.random.uniform(KEY, (batch, h, w))
+
+    def test_extract_windows_nonoverlapping_is_patch_tiling(self):
+        frame = self._frame()
+        np.testing.assert_array_equal(
+            np.asarray(proj.extract_windows(frame, 8, 8)),
+            np.asarray(extract_patches(frame, 8, 8)))
+
+    def test_conv_spec_geometry(self):
+        conv = ConvSpec(kernel=8, stride=4, n_channels=16)
+        assert conv.out_grid(32, 32) == (7, 7)
+        ps = conv.patch_spec()
+        assert ps.pixels_per_patch == 64 and ps.n_vectors == 16
+        with pytest.raises(ValueError, match="not covered"):
+            ConvSpec(kernel=8, stride=5, n_channels=16).out_grid(32, 32)
+        with pytest.raises(ValueError, match="stride"):
+            ConvSpec(kernel=8, stride=0, n_channels=16)
+
+    @pytest.mark.parametrize("kernel,stride", [(8, 8), (8, 4), (16, 8)])
+    def test_conv_matches_python_loop_oracle(self, kernel, stride):
+        """ops.ip2_conv (im2col gather + projection kernel) vs the
+        explicit window-slicing python-loop oracle — exact, including the
+        overlapping-stride geometry."""
+        conv = ConvSpec(kernel=kernel, stride=stride, n_channels=16)
+        frame = self._frame()
+        w = jax.random.normal(jax.random.PRNGKey(1),
+                              (16, kernel * kernel)) * 3.0
+        got = ops.ip2_conv(frame, w, conv, interpret=True)
+        gh, gw = conv.out_grid(32, 32)
+        assert got.shape == (2, gh * gw, 16)
+        w_q, _ = pwm_mod.quantize_weights(w, conv.quant)
+        params = ops.kernel_params_from_spec(conv.patch_spec())
+        want = ref.ip2_conv_ref(frame, w_q.T, jnp.zeros((16,)), conv, params)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+
+    def test_conv_code_and_sign_epilogues(self):
+        """The whole mode-selectable epilogue applies per window: fused
+        int8 codes and the 1-bit sign wire both ride the conv path."""
+        conv = ConvSpec(kernel=8, stride=8, n_channels=16)
+        adc = adc_mod.ADCSpec(bits=8)
+        frame = self._frame()
+        w = jax.random.normal(jax.random.PRNGKey(1), (16, 64)) * 3.0
+        bias = jax.random.normal(jax.random.PRNGKey(2), (16,)) * 0.1
+        codes = ops.ip2_conv(frame, w, conv, adc=adc, bias=bias, codes=True,
+                             interpret=True)
+        assert codes.dtype == jnp.int8
+        w_q, _ = pwm_mod.quantize_weights(w, conv.quant)
+        params = ops.kernel_params_from_spec(conv.patch_spec(), adc,
+                                             codes=True)
+        want = ref.ip2_conv_ref(frame, w_q.T, bias, conv, params)
+        np.testing.assert_array_equal(np.asarray(codes), np.asarray(want))
+
+        bits = ops.ip2_conv(frame, w, conv, readout="sign", interpret=True)
+        assert bits.dtype == jnp.bool_
+        params_s = ops.kernel_params_from_spec(conv.patch_spec(),
+                                               readout="sign")
+        want_s = ref.ip2_conv_ref(frame, w_q.T, jnp.zeros((16,)), conv,
+                                  params_s)
+        np.testing.assert_array_equal(np.asarray(bits),
+                                      np.asarray(want_s.astype(bool)))
+
+
+# ---------------------------------------------------------------------------
+# event ledgers: what each mode spends
+# ---------------------------------------------------------------------------
+
+class TestModeEvents:
+    def test_frontend_events_sign_swaps_conversion_channel(self):
+        adc_ev = power_mod.frontend_frame_events(4096.0, 64, 32, 16.0, 16.0)
+        sgn_ev = power_mod.frontend_frame_events(4096.0, 64, 32, 16.0, 16.0,
+                                                 readout="sign")
+        assert adc_ev.adc_conversions == 16 * 32
+        assert adc_ev.sign_comparisons == 0.0
+        assert sgn_ev.adc_conversions == 0.0
+        assert sgn_ev.sign_comparisons == 16 * 32
+        # everything that is not the conversion channel is identical: the
+        # analog work (caps, PWM, CDS, dumps, DAC) does not care how the
+        # result is read out
+        for f in power_mod.EventCounts._fields:
+            if f in ("adc_conversions", "sign_comparisons"):
+                continue
+            assert getattr(adc_ev, f) == getattr(sgn_ev, f), f
+        with pytest.raises(ValueError, match="readout"):
+            power_mod.frontend_frame_events(4096.0, 64, 32, 16.0, 16.0,
+                                            readout="bogus")
+
+    def test_conv_events_program_once_vs_reprogram(self):
+        """The mode's defining cost asymmetry: a static kernel bank is
+        programmed once at deploy (dac_reprograms = 0 per frame); cycling
+        kernels through the bank reprograms C·K² DAC cells per frame —
+        and the meter must see the difference."""
+        kw = dict(n_pixels=1024.0, pixels_per_window=64, n_channels=16,
+                  n_windows=49.0)
+        once = power_mod.conv_frame_events(**kw)
+        cyc = power_mod.conv_frame_events(reprogram=True, **kw)
+        assert once.dac_reprograms == 0.0
+        assert cyc.dac_reprograms == 16 * 64
+        # overlap cost is explicit: every window charges its K² pixels
+        assert once.cap_charges == 49 * 64 * 16
+        assert once.pwm_pixel_frames == 49 * 64
+        assert once.adc_conversions == 49 * 16
+        m = power_mod.EnergyMeter()
+        assert (m.power_mw(cyc, FRAME_HZ) > m.power_mw(once, FRAME_HZ))
+        # sign readout composes with conv
+        sgn = power_mod.conv_frame_events(readout="sign", **kw)
+        assert sgn.adc_conversions == 0.0
+        assert sgn.sign_comparisons == 49 * 16
+        assert m.power_mw(sgn, FRAME_HZ) < m.power_mw(once, FRAME_HZ)
+
+    def test_meter_prices_new_components(self):
+        m = power_mod.EnergyMeter()
+        ev = power_mod.EventCounts(sign_comparisons=1e6, dac_reprograms=100.0)
+        rep = m.energy_j(ev, FRAME_HZ)
+        assert rep["sign_comparators"] == pytest.approx(
+            1e6 * m.k.e_sign_cmp_j)
+        assert rep["weight_reprogram"] == pytest.approx(
+            100.0 * m.k.e_dac_reprogram_j)
+        # a comparator firing is orders of magnitude under an ADC ramp —
+        # the whole point of the ADC-less tier
+        assert m.k.e_sign_cmp_j < m.k.e_adc_j / 10.0
+
+    def test_event_counts_arithmetic_covers_new_fields(self):
+        a = power_mod.EventCounts(sign_comparisons=3.0, dac_reprograms=2.0)
+        s = a.add(power_mod.EventCounts(sign_comparisons=1.0))
+        assert s.sign_comparisons == 4.0 and s.dac_reprograms == 2.0
+        assert a.scale(2.0).dac_reprograms == 4.0
+
+
+# ---------------------------------------------------------------------------
+# the sign wire through the frontend
+# ---------------------------------------------------------------------------
+
+class TestSignWireFrontend:
+    def test_sign_wire_payload_and_ledger(self):
+        fcfg = _fcfg()
+        params = c.init_frontend_params(KEY, fcfg)
+        rgb = jax.random.uniform(KEY, (2, 64, 64, 3))
+        cf = apply_frontend(params, rgb, fcfg, mode="compact", wire="sign")
+        assert cf.features.dtype == jnp.bool_
+        # payload is 1 byte/bit in jax, but the WIRE is 1 bit: the affine
+        # reconstructs ±v_mag + bias through the one dequant site
+        deq = np.asarray(dequantize_features(cf))
+        bias = np.asarray(params["bias"])
+        lv = np.where(np.asarray(cf.features),
+                      adc_mod.SIGN_V_MAG + bias[None, None, :],
+                      -adc_mod.SIGN_V_MAG + bias[None, None, :])
+        np.testing.assert_allclose(deq, lv, rtol=1e-6, atol=1e-7)
+        # ledger: comparator firings, not ADC conversions
+        ev = jax.tree.map(np.asarray, cf.events)
+        k, m = fcfg.n_active, fcfg.patch.n_vectors
+        np.testing.assert_array_equal(ev.sign_comparisons, k * m)
+        np.testing.assert_array_equal(ev.adc_conversions, 0.0)
+
+    def test_sign_kernel_adapter_matches_reference_path(self):
+        fcfg = _fcfg()
+        params = c.init_frontend_params(KEY, fcfg)
+        rgb = jax.random.uniform(KEY, (2, 64, 64, 3))
+        cf_ref = apply_frontend(params, rgb, fcfg, mode="compact",
+                                wire="sign")
+        fn = ops.ip2_sign_fn(fcfg.patch, interpret=True)
+        cf_k = apply_frontend(params, rgb, fcfg, mode="compact",
+                              wire="sign", project_fn=fn)
+        np.testing.assert_array_equal(np.asarray(cf_ref.features),
+                                      np.asarray(cf_k.features))
+        np.testing.assert_array_equal(np.asarray(cf_ref.indices),
+                                      np.asarray(cf_k.indices))
+
+    def test_sign_wire_temporal_cache_discipline(self):
+        fcfg = _fcfg(temporal=TemporalSpec(delta_threshold=1e-5))
+        params = c.init_frontend_params(KEY, fcfg)
+        rgb = jax.random.uniform(KEY, (2, 64, 64, 3))
+        cache = init_feature_cache(fcfg, (2,), dtype=bool)
+        for _ in range(3):
+            cf, cache = apply_frontend(params, rgb, fcfg, mode="compact",
+                                       wire="sign", cache=cache)
+            assert cf.features.dtype == jnp.bool_
+            assert cache.features.dtype == jnp.bool_
+        # a code cache cannot serve the sign wire (and vice versa)
+        with pytest.raises(ValueError, match="does not match wire"):
+            apply_frontend(params, rgb, fcfg, mode="compact", wire="sign",
+                           cache=init_feature_cache(fcfg, (2,)))
+        with pytest.raises(ValueError, match="does not match wire"):
+            apply_frontend(params, rgb, fcfg, mode="compact",
+                           cache=init_feature_cache(fcfg, (2,), dtype=bool))
+
+    def test_sign_wire_rejections(self):
+        fcfg = _fcfg()
+        params = c.init_frontend_params(KEY, fcfg)
+        rgb = jax.random.uniform(KEY, (1, 64, 64, 3))
+        with pytest.raises(ValueError, match="requires analog=True"):
+            apply_frontend(c.init_frontend_params(KEY, _fcfg(analog=False)),
+                           rgb, _fcfg(analog=False), mode="compact",
+                           wire="sign")
+        sign_fn = ops.ip2_sign_fn(fcfg.patch, interpret=True)
+        with pytest.raises(ValueError, match="sign"):
+            apply_frontend(params, rgb, fcfg, mode="dense",
+                           project_fn=sign_fn)
+        with pytest.raises(ValueError, match="sign"):
+            apply_frontend(params, rgb, fcfg, mode="compact", wire="codes",
+                           project_fn=sign_fn)
+        codes_fn = ops.ip2_codes_fn(fcfg.patch, fcfg.adc, interpret=True)
+        with pytest.raises(ValueError, match="sign"):
+            apply_frontend(params, rgb, fcfg, mode="compact", wire="sign",
+                           project_fn=codes_fn)
+
+    def test_sign_wire_embed_bypasses_w8a8(self):
+        """quant_embed must not push the bool payload into the int8 w8a8
+        kernel — the sign wire routes through the generic dequant, so
+        quant_embed on/off is bitwise-identical on this wire."""
+        fcfg = _fcfg()
+        cfg = _vcfg(fcfg)
+        cfg_q = dataclasses.replace(cfg, quant_embed=True)
+        params = init_vit(KEY, cfg)
+        rgb = jax.random.uniform(KEY, (2, 64, 64, 3))
+        lp, _ = vit_forward_compact(params, rgb, cfg, wire="sign")
+        lq, _ = vit_forward_compact(params, rgb, cfg_q, wire="sign")
+        np.testing.assert_array_equal(np.asarray(lp), np.asarray(lq))
+        assert np.isfinite(np.asarray(lp)).all()
+
+
+# ---------------------------------------------------------------------------
+# per-slot sign degradation in the compact forward (the engine's knob)
+# ---------------------------------------------------------------------------
+
+class TestVitSignMode:
+    def _setup(self):
+        fcfg = _fcfg()
+        cfg = _vcfg(fcfg)
+        params = init_vit(KEY, cfg)
+        rgb = jax.random.uniform(KEY, (3, 64, 64, 3))
+        return cfg, params, rgb
+
+    def test_all_false_mask_is_bitwise_noop(self):
+        cfg, params, rgb = self._setup()
+        base, aux_b = vit_forward_compact(params, rgb, cfg)
+        off, aux_o = vit_forward_compact(
+            params, rgb, cfg, sign_mode=jnp.zeros((3,), bool))
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(off))
+        for e_b, e_o in zip(aux_b["events"], aux_o["events"]):
+            np.testing.assert_array_equal(np.asarray(e_b), np.asarray(e_o))
+
+    def test_per_row_degradation_and_ledger_swap(self):
+        cfg, params, rgb = self._setup()
+        sm = jnp.array([True, False, True])
+        lm, aux = vit_forward_compact(params, rgb, cfg, sign_mode=sm)
+        l_all, _ = vit_forward_compact(params, rgb, cfg,
+                                       sign_mode=jnp.ones((3,), bool))
+        l_off, _ = vit_forward_compact(params, rgb, cfg,
+                                       sign_mode=jnp.zeros((3,), bool))
+        # flagged rows equal the all-flagged batch, unflagged the clean one
+        np.testing.assert_array_equal(np.asarray(lm[0]), np.asarray(l_all[0]))
+        np.testing.assert_array_equal(np.asarray(lm[2]), np.asarray(l_all[2]))
+        np.testing.assert_array_equal(np.asarray(lm[1]), np.asarray(l_off[1]))
+        assert np.abs(np.asarray(lm[0]) - np.asarray(l_off[0])).max() > 0
+        ev = jax.tree.map(np.asarray, aux["events"])
+        m = cfg.frontend.patch.n_vectors
+        k = cfg.frontend.n_active
+        np.testing.assert_array_equal(ev.adc_conversions, [0.0, k * m, 0.0])
+        np.testing.assert_array_equal(ev.sign_comparisons, [k * m, 0.0, k * m])
+
+    def test_sign_mode_needs_code_wire(self):
+        cfg, params, rgb = self._setup()
+        with pytest.raises(ValueError, match="code wire"):
+            vit_forward_compact(params, rgb, cfg, wire="float",
+                                sign_mode=jnp.ones((3,), bool))
+
+
+# ---------------------------------------------------------------------------
+# governor: the ADC-less tier below the k ladder
+# ---------------------------------------------------------------------------
+
+def make_gov_cfg():
+    fcfg = FrontendConfig(
+        image_h=64, image_w=64, aa_cutoff=None,
+        patch=PatchSpec(patch_h=8, patch_w=8, n_vectors=64),
+        active_fraction=0.25,
+        temporal=TemporalSpec(delta_threshold=1e-4),
+    )
+    return ViTConfig(frontend=fcfg, n_layers=1, d_model=32, n_heads=2, d_ff=64)
+
+
+GCFG = make_gov_cfg()
+GPARAMS = init_vit(KEY, GCFG)
+GFRAMES = np.asarray(jax.random.uniform(jax.random.PRNGKey(1),
+                                        (24, 64, 64, 3)))
+GK = GCFG.frontend.n_active
+
+
+def _floor_mw(spec: GovernorSpec) -> float:
+    """The finest-k-tier floor allocation the sign tier undercuts."""
+    meter = power_mod.EnergyMeter()
+    slot_mw = 1e3 * meter.slot_recompute_power_w(64, 64, FRAME_HZ)
+    k_min = spec.tier_tokens(GK)[-1]
+    fixed = gov_mod.fixed_power_mw(
+        meter, 64.0 * 64.0, 64, 64,
+        jnp.asarray([k_min], jnp.float32), FRAME_HZ)
+    return float(fixed[0]) + spec.floor * slot_mw
+
+
+class TestGovernorSignTier:
+    def test_spec_and_helpers(self):
+        spec = GovernorSpec(budget_mw=1.0)
+        assert spec.sign_tier is False
+        t = jnp.array([0, 3, 4, 9])
+        assert not np.asarray(gov_mod.tier_is_sign(spec, t)).any()
+        s2 = GovernorSpec(budget_mw=1.0, sign_tier=True)
+        np.testing.assert_array_equal(
+            np.asarray(gov_mod.tier_is_sign(s2, t)),
+            [False, False, True, True])
+        # tier_k_eff clamps: the sign tier keeps the finest tier's tokens
+        toks = s2.tier_tokens(GK)
+        np.testing.assert_array_equal(
+            np.asarray(gov_mod.tier_k_eff(s2, t, GK)),
+            [toks[0], toks[3], toks[3], toks[3]])
+
+    def test_engine_degrades_into_sign_tier_and_recovers(self):
+        spec0 = GovernorSpec(budget_mw=1.0, sign_tier=True)
+        budget = 0.8 * _floor_mw(spec0)
+        gov = GovernorSpec(budget_mw=budget, sign_tier=True)
+        eng = SaccadeEngine(GCFG, GPARAMS, capacity=1, temporal=True,
+                            frame_hz=FRAME_HZ, governor=gov)
+        eng.admit("a")
+        for t in range(12):
+            logits = eng.step({"a": GFRAMES[t % len(GFRAMES)]})["a"]
+            assert np.isfinite(logits).all()
+        assert eng.sign_readout("a")
+        assert int(eng.state.controls.tier[0]) == len(gov.k_tiers)
+        assert eng.k_tier("a") == gov.tier_tokens(GK)[-1]
+        # the ledger switched channels: comparators fire, the ADC is off
+        ev = eng.events("a", "last")
+        assert ev.adc_conversions == 0.0
+        assert ev.sign_comparisons > 0.0
+        # serving now costs less than even the finest k tier's floor —
+        # the whole reason the tier exists
+        assert eng.power_mw("a") < _floor_mw(gov)
+        assert int(eng.state.frame_age[0]) == 12      # degraded, not stalled
+
+        # budget relief: the slot climbs back out of the sign tier (with
+        # hysteresis, one tier per frame) and the ADC comes back
+        eng.set_budget_mw(100.0)
+        for t in range(12):
+            eng.step({"a": GFRAMES[t % len(GFRAMES)]})
+        assert not eng.sign_readout("a")
+        assert eng.events("a", "last").adc_conversions > 0.0
+        assert eng.k_tier("a") == GK
+        assert eng.n_traces == 1                      # zero recompiles
+
+    def test_sign_tier_flag_is_noop_under_slack_budget(self):
+        """Enabling sign_tier changes NOTHING while the budget is slack:
+        bitwise-identical logits and state vs the plain governed engine."""
+        a = SaccadeEngine(GCFG, GPARAMS, capacity=1, temporal=True,
+                          frame_hz=FRAME_HZ,
+                          governor=GovernorSpec(budget_mw=100.0))
+        b = SaccadeEngine(GCFG, GPARAMS, capacity=1, temporal=True,
+                          frame_hz=FRAME_HZ,
+                          governor=GovernorSpec(budget_mw=100.0,
+                                                sign_tier=True))
+        a.admit("s"); b.admit("s")
+        for t in range(6):
+            la = a.step({"s": GFRAMES[t]})["s"]
+            lb = b.step({"s": GFRAMES[t]})["s"]
+            np.testing.assert_array_equal(la, lb)
+        np.testing.assert_array_equal(
+            np.asarray(a.state.cache.features),
+            np.asarray(b.state.cache.features))
+        assert not b.sign_readout("s")
+
+    def test_sign_readout_accessor_requires_governor(self):
+        eng = SaccadeEngine(GCFG, GPARAMS, capacity=1, temporal=True)
+        eng.admit("a")
+        with pytest.raises(RuntimeError, match="governor"):
+            eng.sign_readout("a")

@@ -86,7 +86,8 @@ class TestEngineMetering:
         rep = eng.energy_report("moving")
         assert set(rep) == {"adc", "weight_dac", "cap_charging",
                             "pwm_comparators", "opamps", "cds_sampling",
-                            "pixel_dump"}
+                            "pixel_dump", "sign_comparators",
+                            "weight_reprogram"}
         assert all(v >= 0.0 for v in rep.values())
 
     def test_totals_accumulate_and_admit_resets(self):

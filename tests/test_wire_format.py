@@ -342,3 +342,56 @@ class TestSeamEquivalence:
         requant = adc_mod.dequantize(adc_mod.encode(volts, coarse), s, z)
         err = jnp.abs(requant - dequantize_features(cf))
         assert float(err.max()) <= coarse.lsb
+
+
+def _assert_sign_payloads(tree):
+    """Sign-wire variant of :func:`_assert_code_payloads`: every feature
+    payload leaf is the 1-bit comparator wire (bool, NOT int8 codes)."""
+    leaves = _payload_leaves(tree)
+    assert leaves, "pytree carries no feature payload leaf"
+    for name, leaf in leaves:
+        assert leaf.dtype == jnp.bool_, \
+            f"{name}: {leaf.dtype} leaked into the sign wire"
+
+
+class TestSignWireDtype:
+    """DESIGN.md §13: wire='sign' is a third wire format with its own
+    dtype discipline — the walks that pin the code wire pin it too."""
+
+    def test_apply_frontend_sign_payload_is_bool(self):
+        fcfg = _fcfg()
+        params = c.init_frontend_params(KEY, fcfg)
+        rgb = jax.random.uniform(KEY, (2, 64, 64, 3))
+        cf = apply_frontend(params, rgb, fcfg, mode="compact", wire="sign")
+        _assert_sign_payloads(cf)
+        # metadata carries the sign affine, not the ADC affine
+        scale, zero = adc_mod.sign_scale_zero(params["bias"])
+        np.testing.assert_allclose(np.asarray(cf.scale),
+                                   np.asarray(scale), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(cf.zero),
+                                   np.asarray(zero), rtol=1e-6)
+
+    def test_sign_cache_stays_bool_under_mutation(self):
+        fcfg = _fcfg(temporal=TemporalSpec(delta_threshold=1e-5))
+        params = c.init_frontend_params(KEY, fcfg)
+        cache = init_feature_cache(fcfg, (2,), dtype=bool)
+        _assert_sign_payloads(cache)
+        for t in range(3):
+            rgb = jax.random.uniform(jax.random.PRNGKey(t), (2, 64, 64, 3))
+            cf, cache = apply_frontend(params, rgb, fcfg, mode="compact",
+                                       wire="sign", cache=cache)
+            _assert_sign_payloads((cf, cache))
+
+    def test_sign_cache_wire_mismatch_raises_both_ways(self):
+        fcfg = _fcfg(temporal=TemporalSpec(delta_threshold=1e-5))
+        params = c.init_frontend_params(KEY, fcfg)
+        rgb = jax.random.uniform(KEY, (2, 64, 64, 3))
+        with pytest.raises(ValueError, match="does not match wire"):
+            apply_frontend(params, rgb, fcfg, mode="compact", wire="sign",
+                           cache=init_feature_cache(fcfg, (2,)))
+        with pytest.raises(ValueError, match="does not match wire"):
+            apply_frontend(params, rgb, fcfg, mode="compact", wire="codes",
+                           cache=init_feature_cache(fcfg, (2,), dtype=bool))
+        with pytest.raises(ValueError, match="does not match wire"):
+            apply_frontend(params, rgb, fcfg, mode="compact", wire="float",
+                           cache=init_feature_cache(fcfg, (2,), dtype=bool))
