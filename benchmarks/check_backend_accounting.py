@@ -1,0 +1,175 @@
+"""Bench-smoke guard: the delta-gated backend rows in
+BENCH_throughput.json (DESIGN.md §14) must be MAC-metered, internally
+consistent, and still true of the live code — mirroring the §9 bytes and
+§10 power guards (check_bytes_accounting.py / check_power_accounting.py).
+
+Three layers of defence:
+
+1. Schema: every ``backend_delta_*`` row carries a ``backend`` record
+   with ``source == "mac-meter"`` and the full eps grid — recompute
+   fractions and logit-error bounds come from the forward's MAC meter
+   and a live dense comparison, never hand math.
+2. Claims re-checked from the stored records: eps=0 is exact on every
+   scene (stored worst-case logit error exactly 0), a static scene's
+   steady-state recompute is exactly 0, a larger snap budget never
+   recomputes more, and the stored dense backend milliwatts re-price
+   from the stored MAC count with a FRESH ``EnergyMeter`` — if someone
+   edits the artifact or forks the pricing away from the meter, this
+   breaks loudly.
+3. Live re-derivation: a small standalone-programs harness (the
+   tests/test_backend_delta.py bitwise discipline: materialized wire
+   block, separately-jitted dense/delta encoders) re-runs cold + warm
+   frames — the cold frame's measured MACs must equal the
+   ``dense_backend_macs`` closed form, a warm static frame must skip to
+   exactly 0 MACs while serving BITWISE-identical logits, and the fused
+   claim chain (frac==0 <=> macs==0 <=> logits cached) stays closed.
+
+Run after ``benchmarks/run.py`` (needs src and the repo root on the
+path): ``PYTHONPATH=src:. python benchmarks/check_backend_accounting.py``.
+"""
+
+import json
+import sys
+
+EPS_GRID = ("0", "0.1", "0.5")
+KINDS = ("static", "drift", "panning", "full_motion")
+
+
+def main(path: str = "BENCH_throughput.json") -> None:
+    with open(path) as f:
+        results = json.load(f)
+    tp = next(v for k, v in results.items() if k.startswith("throughput"))
+    rows = {r["name"]: r for r in tp if "name" in r}
+
+    # --- 1. schema: MAC-metered records on every backend row
+    names = [f"backend_delta_{kind}" for kind in KINDS]
+    names.append("backend_walltime_breakdown_static")
+    missing = [n for n in names if n not in rows]
+    assert not missing, f"backend rows missing from the artifact: {missing}"
+    for name in names:
+        rec = rows[name].get("backend")
+        assert isinstance(rec, dict), f"{name}: no backend record"
+        assert rec.get("source") == "mac-meter", (
+            f"{name}: backend MACs not metered (source={rec.get('source')!r})"
+        )
+    for kind in KINDS:
+        rec = rows[f"backend_delta_{kind}"]["backend"]
+        for field in ("recompute_frac", "max_logit_err"):
+            got = set(rec[field])
+            assert got == set(EPS_GRID), (
+                f"backend_delta_{kind}.{field}: eps grid {sorted(got)} != "
+                f"{sorted(EPS_GRID)}"
+            )
+
+    # --- 2. stored claims reproduce from the records
+    for kind in KINDS:
+        rec = rows[f"backend_delta_{kind}"]["backend"]
+        assert rec["max_logit_err"]["0"] == 0.0, (
+            f"{kind}: eps=0 is not exact in the artifact "
+            f"(err={rec['max_logit_err']['0']})"
+        )
+        fr = rec["recompute_frac"]
+        assert fr["0.5"] <= fr["0.1"] + 1e-9 <= fr["0"] + 2e-9, (
+            f"{kind}: a larger snap budget recomputed more: {fr}"
+        )
+    st = rows["backend_delta_static"]["backend"]["recompute_frac"]
+    assert all(v == 0.0 for v in st.values()), (
+        f"static scene recompute fraction not 0: {st}"
+    )
+
+    from repro.core.power import EnergyMeter, dense_backend_macs
+
+    bd = rows["backend_walltime_breakdown_static"]["backend"]
+    meter = EnergyMeter()
+    repriced = bd["dense_macs_per_frame"] * meter.k.e_backend_mac_j * 30.0 * 1e3
+    assert abs(repriced - bd["dense_backend_mw_30hz"]) <= 1e-9 * max(
+        repriced, 1.0), (
+        f"artifact says {bd['dense_backend_mw_30hz']} mW but the stored "
+        f"MACs re-price to {repriced} with a fresh meter"
+    )
+    speedup = bd["speedup"]
+
+    # --- 3. live standalone-programs harness: closed form + bitwise gate
+    import numpy as np
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import saliency as sal  # noqa: F401  (import check)
+    import repro.core as c
+    from repro.core.frontend import FrontendConfig, apply_frontend
+    from repro.core.projection import PatchSpec
+    from repro.core.switched_cap import SummerSpec
+    from repro.core.temporal import TemporalSpec, init_feature_cache
+    from repro.models import vit as vit_mod
+    from repro.models.backend_delta import delta_forward, init_backend_cache
+    from repro.models.vit import ViTConfig, init_vit
+
+    fcfg = FrontendConfig(
+        image_h=64, image_w=64,
+        patch=PatchSpec(patch_h=16, patch_w=16, n_vectors=32,
+                        summer=SummerSpec(mode="passive", hold_time_s=0.0)),
+        aa_cutoff=None, active_fraction=0.5,
+        temporal=TemporalSpec(delta_threshold=1e-3),
+    )
+    cfg = ViTConfig(frontend=fcfg, n_layers=1, d_model=32, n_heads=2,
+                    d_ff=64)
+    params = init_vit(jax.random.PRNGKey(0), cfg)
+    k = fcfg.n_active
+
+    @jax.jit
+    def front_step(rgb, cache):
+        patches, weights = c.sensor_patches(params["ip2"], rgb, fcfg)
+        idx = c.topk_patch_indices(c.patch_energy(patches), k)
+        return apply_frontend(params["ip2"], None, fcfg, indices=idx,
+                              mode="compact", precomputed=(patches, weights),
+                              cache=cache)
+
+    def _embed(cf):
+        return (vit_mod._embed_tokens(params, cf, cfg)
+                + params["pos"][cf.indices])
+
+    @jax.jit
+    def dense_enc(cf):
+        return vit_mod._encoder(params, _embed(cf), cfg, cf.valid)
+
+    @jax.jit
+    def delta_enc(cf, bc, eps):
+        return delta_forward(params, cfg, cf, lambda: _embed(cf), bc, eps)
+
+    rgb = jax.random.uniform(jax.random.PRNGKey(1), (2, 64, 64, 3))
+    tcache = init_feature_cache(fcfg, (2,))
+    bc = init_backend_cache(cfg, k, (2,), dtype=fcfg.adc.code_dtype)
+    eps0 = jnp.zeros((2,), jnp.float32)
+    closed = float(dense_backend_macs(
+        k, cfg.n_layers, fcfg.patch.n_vectors, cfg.d_model, cfg.d_ff,
+        cfg.n_classes))
+    cold_macs = warm_macs = None
+    for t in range(3):
+        cf, tcache = front_step(rgb, tcache)
+        jax.block_until_ready(cf)
+        ld, _ = dense_enc(cf)
+        lb, _, bc, macs = delta_enc(cf, bc, eps0)
+        assert np.array_equal(np.asarray(ld), np.asarray(lb)), (
+            f"frame {t}: eps=0 delta logits are not bitwise dense logits"
+        )
+        if t == 0:
+            cold_macs = float(np.asarray(macs).mean())
+        warm_macs = float(np.asarray(macs).sum())
+    assert cold_macs == closed, (
+        f"cold-frame measured MACs {cold_macs} != dense_backend_macs "
+        f"closed form {closed}"
+    )
+    assert warm_macs == 0.0, (
+        f"warm static frame still executed {warm_macs} backend MACs"
+    )
+
+    print(f"backend accounting OK: {len(names)} mac-metered rows, eps=0 "
+          f"exact on {len(KINDS)} scenes, dense backend "
+          f"{bd['dense_backend_mw_30hz']:.3f} mW re-priced live, cold MACs "
+          f"== closed form ({closed:.0f}), warm skip bitwise + 0 MACs, "
+          f"static e2e speedup {speedup:.2f}x in artifact")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

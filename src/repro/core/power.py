@@ -104,6 +104,9 @@ class EnergyConstants:
     e_dac_reprogram_j: float = 2e-9  # rewrite + settle one weight-DAC register
                                      # (a register write on top of the settle,
                                      # ~4x the broadcast-only e_dac_j)
+    # DESIGN.md §14 — incremental backend events
+    e_backend_mac_j: float = 1e-12   # one digital int8/f32 MAC in the edge
+                                     # backend accelerator (~1 pJ at 65 nm)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,6 +145,10 @@ class EventCounts(NamedTuple):
     sign_comparisons: object = 0.0  # ADC-less 1-bit comparator decisions
     dac_reprograms: object = 0.0    # weight-DAC register REWRITES (kernel-bank
                                     # cycling); 0 for a statically programmed bank
+    # DESIGN.md §14 — incremental-backend events (default keeps every
+    # older producer/consumer — stored artifacts included — valid)
+    backend_macs: object = 0.0      # digital backend MACs actually executed
+                                    # (delta-gated encoder; 0 on cached frames)
 
     def add(self, other: "EventCounts") -> "EventCounts":
         return EventCounts(*(a + b for a, b in zip(self, other)))
@@ -202,6 +209,7 @@ def frontend_frame_events(
         opamp_patch_frames=1.0 * n_converted_patches,
         sign_comparisons=conversions if readout == "sign" else 0.0 * conversions,
         dac_reprograms=0.0 * n_converted_patches,
+        backend_macs=0.0 * n_converted_patches,
     )
 
 
@@ -246,6 +254,66 @@ def conv_frame_events(
         sign_comparisons=conversions if readout == "sign" else 0.0 * conversions,
         dac_reprograms=(0.0 * n_windows + float(c * k2)) if reprogram
         else 0.0 * n_windows,
+        backend_macs=0.0 * n_windows,
+    )
+
+
+def backend_frame_macs(
+    n_vectors: int,
+    d_model: int,
+    d_ff: int,
+    n_classes: int,
+    j_embed,
+    j_qkv,
+    q_attn,
+    n_keys,
+    computed=1.0,
+):
+    """Closed-form MAC count of one delta-gated backend frame (DESIGN.md §14).
+
+    The delta encoder's work splits into per-row terms, so the count is a
+    sum over the stale populations the gate actually touched:
+
+    - ``j_embed``    — rows whose wire code changed: re-embed (M·d MACs each).
+    - ``j_qkv[l]``   — rows whose layer-``l`` input changed: fresh Q/K/V
+      projections (3·d² MACs each).
+    - ``q_attn[l]``  — query rows re-attended + re-MLP'd at layer ``l``:
+      score+mix against ``n_keys`` valid keys (2·n_keys·d), output
+      projection (d²), and the two MLP matmuls (2·d·d_ff).
+    - ``computed``   — 1.0 when the frame ran at all, 0.0 when it was
+      served entirely from the cache; gates the pool+head term (C·d).
+
+    ``j_qkv``/``q_attn`` are length-``n_layers`` sequences of per-layer
+    counts; every count may be a scalar or a slot-major array (the counts
+    broadcast, same discipline as the frame-event builders above).
+    Passing the full token count for every term prices the dense backend
+    (the governor's feed-forward estimate — :func:`dense_backend_macs`).
+    """
+    d = d_model
+    per_attn = 2.0 * n_keys * d + float(d * d) + 2.0 * d * d_ff
+    layers = 0.0
+    for j_l, q_l in zip(j_qkv, q_attn):
+        layers = layers + j_l * (3.0 * d * d) + q_l * per_attn
+    return (
+        j_embed * (float(n_vectors) * d)
+        + layers
+        + computed * float(n_classes * d)
+    )
+
+
+def dense_backend_macs(
+    n_tokens, n_layers: int, n_vectors: int, d_model: int, d_ff: int,
+    n_classes: int,
+):
+    """MACs of the dense (ungated) backend on ``n_tokens`` valid rows —
+    :func:`backend_frame_macs` with every stale population at full k."""
+    return backend_frame_macs(
+        n_vectors, d_model, d_ff, n_classes,
+        j_embed=n_tokens,
+        j_qkv=[n_tokens] * n_layers,
+        q_attn=[n_tokens] * n_layers,
+        n_keys=n_tokens,
+        computed=1.0,
     )
 
 
@@ -317,6 +385,7 @@ class EnergyMeter:
             "pixel_dump": ev.pixel_dumps * k.e_pixel_dump_j,
             "sign_comparators": ev.sign_comparisons * k.e_sign_cmp_j,
             "weight_reprogram": ev.dac_reprograms * k.e_dac_reprogram_j,
+            "backend": ev.backend_macs * k.e_backend_mac_j,
         }
 
     def power_w(

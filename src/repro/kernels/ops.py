@@ -40,6 +40,7 @@ from repro.kernels.ip2_megakernel import (
 from repro.kernels.ip2_project import IP2KernelParams, ip2_project_pallas
 from repro.kernels.ip2_project_sparse import ip2_project_sparse_pallas
 from repro.kernels.quant_matmul import quant_matmul_pallas
+from repro.kernels.vit_delta_attention import delta_attention_pallas
 
 
 def _auto_interpret(interpret: bool | None) -> bool:
@@ -597,3 +598,29 @@ def quantize_weights_int8(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     scale = jnp.maximum(amax, 1e-12) / 127.0
     w8 = jnp.clip(jnp.round(w / scale[None, :]), -127, 127).astype(jnp.int8)
     return w8, scale.astype(jnp.float32)
+
+
+def delta_attention(
+    attn_params: dict,
+    h: jnp.ndarray,                # (B, S, d) normed layer input
+    token_valid: jnp.ndarray,      # (B, S) bool key mask
+    q_counts: jnp.ndarray,         # (B,) int32 stale prefix length (DATA)
+    n_heads: int,
+    block_q: int = 8,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Ragged stale-Q attention for the delta-gated backend (DESIGN.md
+    §14): Q/K/V projections in plain einsums (per-row work — XLA handles
+    it), then the Pallas kernel scores ONLY the ``q_counts`` stale query
+    rows per slot against the full key set, then the output projection.
+    Rows past a slot's count come back zero; the delta gate keeps their
+    cached values, so they never reach the residual stream."""
+    del n_heads  # shape-carried by the projection weights
+    q = jnp.einsum("bsd,dhk->bshk", h, attn_params["wq"]) + attn_params["bq"]
+    k = jnp.einsum("bsd,dhk->bshk", h, attn_params["wk"]) + attn_params["bk"]
+    v = jnp.einsum("bsd,dhk->bshk", h, attn_params["wv"]) + attn_params["bv"]
+    o = delta_attention_pallas(
+        q, k, v, token_valid, q_counts,
+        block_q=block_q, interpret=_auto_interpret(interpret),
+    )
+    return jnp.einsum("bshk,hkd->bsd", o, attn_params["wo"])

@@ -1,0 +1,247 @@
+"""Delta-gated incremental backend: cross-frame reuse of ViT work
+(DESIGN.md §14).
+
+The temporal frontend (§6) guarantees that a held token's served wire row
+is BITWISE unchanged across frames — same int8 codes, same droop gain,
+same patch index, same valid bit. Every per-token computation downstream
+of the wire is deterministic arithmetic on that row, so an unchanged row
+reproduces its layer-0 embedding (and Q/K/V projections) bitwise for
+free. Only attention MIXES rows: one changed key perturbs every query's
+output. That dichotomy fixes the minimal cache: per-layer block OUTPUTS
+(the next layer's inputs), plus the wire key to detect changes and the
+final logits/saliency to serve fully-cached frames.
+
+The delta encoder therefore runs one of three regimes per frame:
+
+* **Fully cached** — no valid wire row changed and the valid pattern is
+  intact: a whole-batch ``lax.cond`` skips the entire encoder and serves
+  the cached logits/saliency bitwise. Zero backend MACs; this is the
+  static-scene fast path.
+* **Exact (eps <= 0)** — some rows changed: layer inputs that are
+  bitwise-unchanged reuse cached outputs EXACTLY; the moment any valid
+  row at a layer changed, that layer's attention re-mixes everything
+  (``q_stale`` broadcasts to all rows), reproducing the dense encoder
+  bitwise over full trajectories — the same discipline as temporal
+  threshold 0 (§6).
+* **Budgeted (eps > 0)** — rows whose recomputed output moved by at most
+  ``eps`` (inf-norm) snap back to their cached value, so small drift
+  (droop, low-amplitude motion) stops propagating. The approximation is
+  measured, not assumed: tests assert the logit error against the dense
+  encoder and its growth in eps.
+
+``BackendCache`` follows the ``StreamState.cache`` playbook (§6): a
+slot-major NamedTuple pytree that jits/donates/shards with the slot
+axis, admit-wipes via :func:`wipe_rows`, and holds exactly one trace
+across churn because every leaf keeps a fixed shape/dtype.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import power as power_mod
+from repro.models.layers import apply_mlp, rms_norm
+
+
+class BackendCache(NamedTuple):
+    """Per-slot backend reuse state (leading dims = batch/slot axes).
+
+    ``feats``/``gain``/``indices``/``tvalid`` are the *reuse key*: a row
+    is unchanged iff all four match bitwise (gain matters — droop scales
+    the dequant, so a decayed hold is a different embedding; index
+    matters — the positional embedding rides on it). ``x_out[l]`` is
+    layer ``l``'s block output == layer ``l+1``'s input. ``logits`` /
+    ``received`` serve fully-cached frames; ``valid`` is False until the
+    slot's first computed frame (admit wipes it)."""
+
+    feats: jnp.ndarray     # (..., k, M) wire payload (int8 codes / bool signs)
+    gain: jnp.ndarray      # (..., k)    f32 held-charge gain
+    indices: jnp.ndarray   # (..., k)    i32 patch indices
+    tvalid: jnp.ndarray    # (..., k)    bool token-valid pattern
+    x_out: jnp.ndarray     # (..., L, k, d) f32 per-layer block outputs
+    logits: jnp.ndarray    # (..., C)    f32 cached class logits
+    received: jnp.ndarray  # (..., k)    f32 cached saliency (pre-mask)
+    valid: jnp.ndarray     # (...,)      bool slot has a computed frame
+
+
+def init_backend_cache(
+    cfg, k: int, batch_shape: tuple = (), dtype=jnp.int8
+) -> BackendCache:
+    """Empty cache for ``cfg`` (a ``ViTConfig``) serving ``k`` compact
+    tokens per frame. ``dtype`` must match the served wire payload
+    (int8 code wire / bool sign wire) — the engine builds it from its
+    FeatureCache dtype so the two caches cannot disagree."""
+    m = cfg.frontend.patch.n_vectors
+    return BackendCache(
+        feats=jnp.zeros(batch_shape + (k, m), dtype),
+        gain=jnp.zeros(batch_shape + (k,), jnp.float32),
+        indices=jnp.zeros(batch_shape + (k,), jnp.int32),
+        tvalid=jnp.zeros(batch_shape + (k,), bool),
+        x_out=jnp.zeros(batch_shape + (cfg.n_layers, k, cfg.d_model),
+                        jnp.float32),
+        logits=jnp.zeros(batch_shape + (cfg.n_classes,), jnp.float32),
+        received=jnp.zeros(batch_shape + (k,), jnp.float32),
+        valid=jnp.zeros(batch_shape, bool),
+    )
+
+
+def wipe_rows(bc: BackendCache, hit: jnp.ndarray) -> BackendCache:
+    """Zero every leaf of the slots flagged in ``hit`` (the admit wipe —
+    a newly admitted stream must not reuse its predecessor's
+    activations). Dtype-preserving broadcast-where, same idiom as the
+    engine's FeatureCache wipe, so churn never retraces."""
+
+    def wipe(leaf):
+        h = hit.reshape(hit.shape + (1,) * (leaf.ndim - hit.ndim))
+        return jnp.where(h, jnp.zeros((), leaf.dtype), leaf)
+
+    return BackendCache(*(wipe(leaf) for leaf in bc))
+
+
+def _stale_prefix_counts(q_stale: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot prefix length covering every stale query row: the ragged
+    kernel banks over ``[0, count)`` (§11 machinery), so staleness
+    anywhere costs up to its last stale position. Stale-first rankings
+    make this exactly the stale count; arbitrary patterns over-cover but
+    never under-cover."""
+    k = q_stale.shape[-1]
+    pos = jnp.arange(1, k + 1, dtype=jnp.int32)
+    return jnp.max(jnp.where(q_stale, pos, 0), axis=-1).astype(jnp.int32)
+
+
+def delta_forward(
+    params: dict,
+    cfg,
+    cf,
+    embed_fn,
+    bc: BackendCache,
+    eps: jnp.ndarray,
+    act: jnp.ndarray | None = None,
+):
+    """Delta-gated encoder over the compact wire ``cf`` (a
+    ``CompactFeatures``) against cache ``bc``.
+
+    ``embed_fn()`` produces the embedded token block (B, k, d) — passed
+    as a closure so the fully-cached branch never runs the embed matmul.
+    ``eps`` is the per-slot (B,) inf-norm snap budget; ``eps <= 0``
+    selects the exact regime for that slot.
+
+    Returns ``(logits, received, new_bc, macs)`` — ``received`` is the
+    raw (pre-mask) saliency matching ``_encoder``'s contract, ``macs``
+    the per-slot executed-MAC count for the event ledger (§14), zero on
+    fully-cached frames.
+
+    ``act`` is an optional (B,) bool mask of the slots that actually
+    advance this frame (the engine's ``active & fed``): slots outside it
+    are excluded from the whole-batch skip predicate — a held or empty
+    slot (whose cache rows never match its garbage wire bytes) must not
+    force a compute frame on a fleet whose served slots are all cached.
+    Those slots' outputs are garbage either way; the caller freezes them.
+    """
+    from repro.models import vit as vit_mod  # lazy: vit imports this module
+
+    token_valid = cf.valid
+    n_layers = len(params["layers"])
+    # the reuse key: all four components must match bitwise
+    same = (
+        jnp.all(cf.features == bc.feats, axis=-1)
+        & (cf.gain == bc.gain)
+        & (cf.indices == bc.indices)
+        & (cf.valid == bc.tvalid)
+        & bc.valid[..., None]
+    )
+    s0 = ~same
+    # rows entering OR leaving the valid set both change the logits (the
+    # attention mask is part of the computation), so the skip predicate
+    # spans the union of the old and new valid patterns
+    gate = s0 & (token_valid | bc.tvalid)
+    if act is not None:
+        gate = gate & act[..., None]
+    run = jnp.any(gate)
+    # a changed mask re-mixes every layer-0 attention row even when all
+    # currently-valid rows held their values
+    mask_changed = jnp.any(cf.valid != bc.tvalid, axis=-1) | ~bc.valid
+
+    def _cached(_):
+        zero = jnp.zeros(bc.valid.shape, jnp.float32)
+        return bc.logits, bc.received, bc, zero
+
+    def _compute(_):
+        exact = eps <= 0.0
+        x = embed_fn()
+        qv = token_valid.astype(jnp.float32)
+        n_q = jnp.maximum(jnp.sum(qv, axis=-1, keepdims=True), 1.0)
+        received = jnp.zeros(x.shape[:2], jnp.float32)
+        s = s0
+        outs, j_qkv, q_attn = [], [], []
+        for li, lp in enumerate(params["layers"]):
+            any_l = jnp.any(s & token_valid, axis=-1)
+            if li == 0:
+                any_l = any_l | mask_changed
+            # exact slots: one changed key re-mixes every query (§14)
+            q_stale = s | (any_l & exact)[:, None]
+            need = (cfg.saliency_layers == "all") or (li == n_layers - 1)
+            h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+            use_kernel = cfg.delta_kernel and not need and not cfg.qth
+            if use_kernel:
+                from repro.kernels import ops  # lazy: keep the model import-light
+
+                counts = _stale_prefix_counts(q_stale)
+                out = ops.delta_attention(
+                    lp["attn"], h, token_valid, counts, cfg.n_heads)
+                probs = None
+                covered = jnp.arange(h.shape[1])[None, :] < counts[:, None]
+            else:
+                out, probs = vit_mod._encoder_attention(
+                    lp, h, cfg, token_valid, need_probs=need)
+                covered = None
+            x_mid = x + out
+            full = x_mid + apply_mlp(
+                lp["mlp"], rms_norm(x_mid, lp["norm2"], cfg.norm_eps), "gelu")
+            cached = bc.x_out[:, li]
+            delta = jnp.max(jnp.abs(full - cached), axis=-1)
+            # exact: the bitwise q_stale rule; budgeted: snap rows whose
+            # TRUE recomputed output moved by <= eps back to the cache
+            keep = jnp.where(exact[:, None], q_stale, delta > eps[:, None])
+            keep = keep | ~bc.valid[:, None]
+            if covered is not None:
+                # the kernel only recomputed the stale prefix; rows past
+                # it hold garbage and must stay on their cached values
+                keep = keep & covered
+            x = jnp.where(keep[..., None], full, cached)
+            outs.append(x)
+            j_qkv.append(jnp.sum(s & token_valid, axis=-1)
+                         .astype(jnp.float32))
+            q_attn.append(jnp.sum(q_stale & token_valid, axis=-1)
+                          .astype(jnp.float32))
+            if need:
+                per_key = jnp.einsum(
+                    "bhqs,bq->bs", probs.astype(jnp.float32), qv)
+                received = received + per_key / (n_q * probs.shape[1])
+            s = keep
+        xf = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        w = token_valid.astype(xf.dtype)[..., None]
+        pooled = jnp.sum(xf * w, axis=1) / jnp.maximum(jnp.sum(w, axis=1), 1.0)
+        logits = pooled @ params["head"]
+        if cfg.saliency_layers == "all":
+            received = received / n_layers
+        macs = power_mod.backend_frame_macs(
+            cfg.frontend.patch.n_vectors, cfg.d_model, cfg.d_ff,
+            cfg.n_classes,
+            j_embed=jnp.sum(s0 & token_valid, axis=-1).astype(jnp.float32),
+            j_qkv=j_qkv, q_attn=q_attn,
+            n_keys=jnp.sum(token_valid, axis=-1).astype(jnp.float32),
+            computed=1.0,
+        )
+        new_bc = BackendCache(
+            feats=cf.features, gain=cf.gain, indices=cf.indices,
+            tvalid=cf.valid, x_out=jnp.stack(outs, axis=1),
+            logits=logits, received=received,
+            valid=jnp.ones(bc.valid.shape, bool),
+        )
+        return logits, received, new_bc, macs
+
+    return jax.lax.cond(run, _compute, _cached, None)

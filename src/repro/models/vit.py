@@ -66,6 +66,16 @@ class ViTConfig:
     fused_embed: bool = False  # frontend megakernel: project + ADC + embed
                                # in one kernel, codes never leave VMEM (§11);
                                # requires quant_embed and an analog frontend
+    saliency_layers: str = "all"  # which layers' attention feeds saccade
+                                  # saliency: "all" (mean, the original
+                                  # contract) or "last" — serving layers
+                                  # before the last then skip materializing
+                                  # the (B, H, q, s) probs tensor entirely
+    delta_kernel: bool = False    # delta-gated backend only (§14): score
+                                  # stale query prefixes with the ragged
+                                  # Pallas kernel on layers whose probs are
+                                  # not needed (pairs with
+                                  # saliency_layers="last"; qth excluded)
     norm_eps: float = 1e-5
 
     def backbone_cfg(self) -> ModelConfig:
@@ -100,16 +110,22 @@ def init_vit(key, cfg: ViTConfig) -> dict:
 
 
 def _encoder_attention(
-    lp: dict, h: jnp.ndarray, cfg: ViTConfig, token_valid: jnp.ndarray
-) -> tuple[jnp.ndarray, jnp.ndarray]:
+    lp: dict, h: jnp.ndarray, cfg: ViTConfig, token_valid: jnp.ndarray,
+    need_probs: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray | None]:
     """Bidirectional self-attention over the patch tokens (dense grid or
     compact active set — the sequence axis is whatever it is handed).
 
     The token sequence is short (P <= a few hundred, k a quarter of that),
     so scores are materialized explicitly; that also yields the attention
     probabilities the saccade loop feeds back as next-frame saliency.
+    ``need_probs=False`` (a serving layer whose probs nobody reads)
+    returns None in their place so XLA is free to fuse the whole
+    softmax→mix chain instead of materializing the (B, H, q, s) tensor
+    as a live output — the attention OUTPUT is bitwise identical either
+    way (the arithmetic is unchanged; only the extra result is dropped).
 
-    Returns (attn output (B, S, d), probs (B, H, S, S)).
+    Returns (attn output (B, S, d), probs (B, H, S, S) or None).
     """
     dh = cfg.d_model // cfg.n_heads
     q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"]) + lp["attn"]["bq"]
@@ -123,34 +139,48 @@ def _encoder_attention(
         scores = jnp.where(token_valid[:, None, None, :], scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1)
     o = jnp.einsum("bhqs,bshk->bqhk", probs.astype(v.dtype), v)
-    return jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"]), probs
+    out = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+    return out, (probs if need_probs else None)
 
 
 def _encoder(
     params: dict, x: jnp.ndarray, cfg: ViTConfig, token_valid: jnp.ndarray
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Transformer trunk + masked mean pool. Returns (logits, received):
-    ``received`` (B, S) is the mean attention mass each token collected
-    across layers/heads/queries — the backend's saliency estimate."""
+    ``received`` (B, S) is the attention mass each token collected across
+    heads/queries — mean over all layers (``cfg.saliency_layers="all"``,
+    the original contract) or the last layer alone (``"last"``: earlier
+    layers skip the probs materialization entirely; logits are bitwise
+    unchanged, only the saliency estimate differs)."""
+    if cfg.saliency_layers not in ("all", "last"):
+        raise ValueError(
+            f"saliency_layers must be 'all' or 'last', "
+            f"got {cfg.saliency_layers!r}")
+    n_layers = len(params["layers"])
     received = jnp.zeros(x.shape[:2], jnp.float32)
     qv = token_valid.astype(jnp.float32)
     n_q = jnp.maximum(jnp.sum(qv, axis=-1, keepdims=True), 1.0)
-    for lp in params["layers"]:
+    for li, lp in enumerate(params["layers"]):
+        need = (cfg.saliency_layers == "all") or (li == n_layers - 1)
         h = rms_norm(x, lp["norm1"], cfg.norm_eps)
-        out, probs = _encoder_attention(lp, h, cfg, token_valid)
+        out, probs = _encoder_attention(lp, h, cfg, token_valid,
+                                        need_probs=need)
         x = x + out
         h = rms_norm(x, lp["norm2"], cfg.norm_eps)
         x = x + apply_mlp(lp["mlp"], h, "gelu")
-        # attention received per key token, averaged over heads and the
-        # valid queries (invalid query rows emit garbage probabilities)
-        per_key = jnp.einsum("bhqs,bq->bs", probs.astype(jnp.float32), qv)
-        received = received + per_key / (n_q * probs.shape[1])
+        if need:
+            # attention received per key token, averaged over heads and
+            # the valid queries (invalid query rows emit garbage probs)
+            per_key = jnp.einsum("bhqs,bq->bs", probs.astype(jnp.float32), qv)
+            received = received + per_key / (n_q * probs.shape[1])
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     # masked mean pool over the ACTIVE (ADC-converted) patches only
     w = token_valid.astype(x.dtype)[..., None]
     pooled = jnp.sum(x * w, axis=1) / jnp.maximum(jnp.sum(w, axis=1), 1.0)
     logits = pooled @ params["head"]
-    return logits, received / len(params["layers"])
+    if cfg.saliency_layers == "all":
+        received = received / n_layers
+    return logits, received
 
 
 def vit_forward(params: dict, rgb: jnp.ndarray, cfg: ViTConfig,
@@ -321,6 +351,9 @@ def vit_forward_compact(
     k_cap: jnp.ndarray | None = None,
     stale_cap: jnp.ndarray | None = None,
     sign_mode: jnp.ndarray | None = None,
+    backend_cache=None,
+    backend_eps: jnp.ndarray | None = None,
+    backend_act: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, dict]:
     """Compact path: frontend projects only the k selected patches, the
     backend attends over exactly those k tokens (index-looked-up positional
@@ -373,12 +406,38 @@ def vit_forward_compact(
       FeatureCache to thread into the next frame) and ``n_stale`` (B,)
       — how many of the k patches were actually recomputed.
 
+    ``backend_cache`` (a :class:`repro.models.backend_delta.BackendCache`)
+    enables the delta-gated incremental BACKEND (DESIGN.md §14): tokens
+    whose served wire row is bitwise unchanged reuse their cached
+    per-layer activations, a frame with no changed valid row serves the
+    cached logits/saliency outright, and ``backend_eps`` ((B,) float,
+    default exact) budgets deeper-layer reuse — ``eps <= 0`` reproduces
+    the dense backend bitwise; ``eps > 0`` snaps sub-eps drift back to
+    the cache. The executed backend MACs land on
+    ``aux["events"].backend_macs`` and the refreshed cache on
+    ``aux["backend_cache"]``. ``backend_act`` ((B,) bool) optionally
+    restricts the whole-batch skip predicate to the slots that actually
+    advance this frame (the engine's ``active & fed``) — a held or
+    empty slot must not force a compute frame on an otherwise fully
+    cached fleet.
+
     With ``cfg.fused_embed`` (requires ``quant_embed`` + analog frontend,
     code wire, no cache/project_fn) the whole frontend-to-embed seam runs
     as ONE Pallas megakernel with ragged per-slot k (DESIGN.md §11) —
     same logits, bitwise, for the same selection.
     """
+    if backend_cache is None and (backend_eps is not None
+                                  or backend_act is not None):
+        raise ValueError(
+            "backend_eps/backend_act configure the delta-gated backend "
+            "(DESIGN.md §14) and need a BackendCache to gate against — "
+            "pass backend_cache, or drop them for the dense encoder")
     if cfg.fused_embed:
+        if backend_cache is not None:
+            raise ValueError(
+                "fused_embed does not thread the backend cache (the "
+                "embed seam lives in-kernel, DESIGN.md §11); use "
+                "fused_embed=False for the delta-gated backend")
         if sign_mode is not None:
             raise ValueError(
                 "fused_embed consumes codes in-kernel (DESIGN.md §11); "
@@ -418,22 +477,59 @@ def vit_forward_compact(
             sign_comparisons=jnp.where(
                 sign_mode, ev.adc_conversions, ev.sign_comparisons),
         ))
-    # index-based positional embeddings: pos[idx], not pos broadcast over P
-    x = _embed_tokens(params, cf, cfg) + params["pos"][cf.indices]
-    logits, received = _encoder(params, x, cfg, cf.valid)
+    new_bcache = None
+    backend_macs = None
+    if backend_cache is not None:
+        from repro.models import backend_delta  # lazy: it imports us back
+
+        if backend_cache.feats.dtype != cf.features.dtype:
+            raise ValueError(
+                f"backend cache dtype {backend_cache.feats.dtype} does "
+                f"not match wire payload {cf.features.dtype}; build it "
+                f"with init_backend_cache(..., dtype=<wire dtype>)")
+        if backend_cache.feats.shape[-2:] != cf.features.shape[-2:]:
+            raise ValueError(
+                f"backend cache rows {backend_cache.feats.shape[-2:]} do "
+                f"not match the served wire {cf.features.shape[-2:]}")
+        eps = (jnp.zeros(cf.valid.shape[0], jnp.float32)
+               if backend_eps is None
+               else jnp.broadcast_to(
+                   jnp.asarray(backend_eps, jnp.float32),
+                   (cf.valid.shape[0],)))
+
+        def embed_fn(cf=cf):
+            # index-based positional embeddings: pos[idx], not pos over P
+            return _embed_tokens(params, cf, cfg) + params["pos"][cf.indices]
+
+        logits, received, new_bcache, backend_macs = \
+            backend_delta.delta_forward(params, cfg, cf, embed_fn,
+                                        backend_cache, eps,
+                                        act=backend_act)
+    else:
+        # index-based positional embeddings: pos[idx], not pos over P
+        x = _embed_tokens(params, cf, cfg) + params["pos"][cf.indices]
+        logits, received = _encoder(params, x, cfg, cf.valid)
 
     received = jnp.where(cf.valid, received, 0.0)
     b = jnp.arange(received.shape[0])[:, None]
     saliency = jnp.zeros(
         (received.shape[0], cfg.frontend.n_patches), jnp.float32
     ).at[b, cf.indices].max(received)
+    events = cf.events
+    if backend_macs is not None:
+        # the ledger prices the delta accelerator's EXECUTED MACs (§14);
+        # the dense path deliberately ledgers none — its closed form is
+        # dense_backend_macs, the governor's feed-forward estimate
+        events = events._replace(backend_macs=backend_macs)
     aux = {
         "indices": cf.indices, "valid": cf.valid,
-        "saliency": saliency, "energy": cf.energy, "events": cf.events,
+        "saliency": saliency, "energy": cf.energy, "events": events,
     }
     if new_cache is not None:
         aux["cache"] = new_cache
         aux["n_stale"] = new_cache.n_stale
+    if new_bcache is not None:
+        aux["backend_cache"] = new_bcache
     return logits, aux
 
 

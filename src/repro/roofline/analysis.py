@@ -219,6 +219,94 @@ def megakernel_cost(
     }
 
 
+def delta_attention_cost(
+    j: int,
+    k: int,
+    d_model: int,
+    n_heads: int,
+    block_q: int = 8,
+    lane: int = 128,
+) -> dict:
+    """Analytic (flops, bytes) model of the ragged stale-Q attention
+    kernel (DESIGN.md §14) for ONE (slot, layer): ``j`` stale query rows
+    against ``k`` cached keys.
+
+    Mirrors :func:`megakernel_cost`'s reasoning: ``pl.when`` + clamped
+    index_maps mean only ``ceil(j/block_q)`` query banks compute and
+    stream, each paying the FULL key/value block (attention is all-to-
+    all on the key side — that is the kernel's irreducible term), so
+    cost scales with the stale prefix, not with k². Head dim is
+    lane-padded exactly as the kernel pads it. ``time_s`` is the
+    roofline bound (max of compute/memory), the quantity
+    :func:`repro.kernels.vit_delta_attention.pick_block_q` minimizes.
+    """
+    dh = max(d_model // n_heads, 1)
+    dh_p = -(-dh // lane) * lane
+    k_pad = -(-k // block_q) * block_q
+    active = -(-max(min(j, k), 0) // block_q)
+    total = -(-k // block_q)
+
+    # per active bank, per head: scores (bq x k_pad x dh_p) + mix back
+    flops = active * n_heads * 2.0 * (2.0 * block_q * k_pad * dh_p)
+    bytes_ = active * n_heads * block_q * dh_p * 4.0          # Q banks
+    bytes_ += (n_heads * 2.0 * k_pad * dh_p * 4.0             # K + V
+               * (1.0 if active > 0 else 0.0))
+    bytes_ += k_pad * 4.0 * (1.0 if active > 0 else 0.0)      # key mask
+    bytes_ += total * n_heads * block_q * dh_p * 4.0          # output banks
+    t = RooflineTerms(flops, bytes_, 0.0)
+    return {
+        "flops": flops,
+        "bytes": bytes_,
+        "coll_bytes": 0.0,
+        "time_s": t.t_bound,
+        "detail": {"active_banks": active, "total_banks": total,
+                   "bottleneck": t.bottleneck},
+    }
+
+
+def delta_backend_cost(
+    j_embed: float,
+    j_qkv,
+    q_attn,
+    k: int,
+    m: int,
+    d_model: int,
+    n_heads: int,
+    d_ff: int,
+    n_classes: int,
+    block_q: int = 8,
+) -> dict:
+    """Analytic per-frame cost of the whole delta-gated backend
+    (DESIGN.md §14): embed + per-layer QKV/attention/MLP + head, at the
+    stale populations the gate actually touched (``j_qkv``/``q_attn``
+    are per-layer sequences — the same populations
+    :func:`repro.core.power.backend_frame_macs` prices in MACs; this
+    model adds the roofline bytes so block shapes and speedup claims
+    derive from one place). FLOPs = 2·MACs on the row terms; attention
+    terms defer to :func:`delta_attention_cost` per layer.
+    """
+    d = d_model
+    flops = 2.0 * j_embed * m * d + 2.0 * float(n_classes * d)
+    bytes_ = j_embed * (m * 1.0 + d * 4.0) + m * d * 1.0
+    detail = {"layers": []}
+    for j_l, q_l in zip(j_qkv, q_attn):
+        attn = delta_attention_cost(
+            int(q_l), k, d_model, n_heads, block_q=block_q)
+        lf = 2.0 * (j_l * 3.0 * d * d + q_l * (d * d + 2.0 * d * d_ff))
+        lb = (j_l + q_l) * d * 4.0 * 2.0 + (3.0 * d * d + 2.0 * d * d_ff) * 4.0
+        flops += lf + attn["flops"]
+        bytes_ += lb + attn["bytes"]
+        detail["layers"].append({"row_flops": lf, "attn": attn["detail"]})
+    t = RooflineTerms(flops, bytes_, 0.0)
+    return {
+        "flops": flops,
+        "bytes": bytes_,
+        "coll_bytes": 0.0,
+        "time_s": t.t_bound,
+        "detail": detail,
+    }
+
+
 def model_flops(n_active_params: int, tokens: int, is_train: bool) -> float:
     """MODEL_FLOPS = 6·N·D (train: fwd+bwd) or 2·N·D (inference fwd)."""
     return (6.0 if is_train else 2.0) * n_active_params * tokens

@@ -96,8 +96,9 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.power import EnergyMeter, EventCounts
+from repro.core.power import EnergyMeter, EventCounts, dense_backend_macs
 from repro.core.temporal import FeatureCache, init_feature_cache
+from repro.models import backend_delta as bdel
 from repro.serve import governor as gov_mod
 from repro.serve.serve_step import saccade_scores
 
@@ -124,6 +125,12 @@ class StreamState(NamedTuple):
     time with the engine's :class:`EnergyMeter`, so recalibrating
     constants never touches device state. ``controls`` is the per-slot
     governor state (None unless the engine is governed).
+
+    ``bcache`` is None unless the engine runs with ``backend_delta=True``
+    (DESIGN.md §14): each slot's incremental-backend reuse state — the
+    served wire rows it last computed on plus per-layer block outputs and
+    cached logits/saliency — slot-major, wiped on admit, frozen on holds,
+    exactly the ``cache`` playbook.
     """
 
     indices: jnp.ndarray    # (S, k) int32 — next frame's patch selection
@@ -134,6 +141,7 @@ class StreamState(NamedTuple):
     events_last: EventCounts = EventCounts()    # (S,) leaves — last frame
     events_mean: EventCounts = EventCounts()    # (S,) leaves — mean/frame
     controls: gov_mod.GovernorControls | None = None  # governed mode only
+    bcache: "bdel.BackendCache | None" = None  # backend-delta mode only (§14)
 
 
 def _zero_events(capacity: int) -> EventCounts:
@@ -142,7 +150,8 @@ def _zero_events(capacity: int) -> EventCounts:
 
 
 def init_stream_state(
-    cfg, capacity: int, temporal: bool = False, governed: bool = False
+    cfg, capacity: int, temporal: bool = False, governed: bool = False,
+    backend: bool = False,
 ) -> StreamState:
     """All slots free; indices are a placeholder (age 0 bootstraps in-step)."""
     k = cfg.frontend.n_active
@@ -157,6 +166,11 @@ def init_stream_state(
         events_last=_zero_events(capacity),
         events_mean=_zero_events(capacity),
         controls=gov_mod.init_controls(capacity, j_max) if governed else None,
+        # dtype from the ADC code wire — the same payload the FeatureCache
+        # holds, so the two caches cannot disagree (§14)
+        bcache=(bdel.init_backend_cache(
+            cfg, k, batch_shape=(capacity,),
+            dtype=cfg.frontend.adc.code_dtype) if backend else None),
     )
 
 
@@ -174,7 +188,7 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
                      project_fn=None, temporal: bool = False,
                      governor: "gov_mod.GovernorSpec | None" = None,
                      meter: EnergyMeter = EnergyMeter(),
-                     frame_hz: float = 30.0):
+                     frame_hz: float = 30.0, backend: bool = False):
     """Batched slot step:
     (params, frames (S,H,W,3), fed (S,) bool, state) -> (logits, state).
 
@@ -199,6 +213,16 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
     per-slot control knobs in ``state.controls`` are applied to this
     frame's gate (``stale_cap`` / ``k_cap`` — data, not shapes) and
     updated from this frame's measured events for the next.
+
+    With ``backend=True`` the per-slot :class:`BackendCache` is threaded
+    through ``state.bcache`` (DESIGN.md §14): tokens whose served wire
+    row is bitwise unchanged reuse their cached backend work, and a
+    frame whose whole selection held serves the cached logits/saliency
+    outright with zero backend MACs. A governed engine feeds
+    ``state.controls.eps`` in as the per-slot snap budget (the
+    ``backend_eps`` knob of stage 3c) and hands the governor the dense
+    backend's feed-forward mW estimate so the system floor accounts for
+    the compute it can shed.
     """
     from repro.core import frontend as fe
     from repro.core import saliency as sal
@@ -208,8 +232,21 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
     k = fcfg.n_active
     j_max = fcfg.temporal.budget(k)
     n_pixels = float(fcfg.image_h * fcfg.image_w)
+    backend_mw = 0.0
+    if backend:
+        # the governor's plant model for the backend: what a DENSE
+        # backend frame costs at this frame rate — the delta path can
+        # only spend less (measured events report what it actually did)
+        backend_mw = (dense_backend_macs(
+            k, cfg.n_layers, fcfg.patch.n_vectors, cfg.d_model,
+            cfg.d_ff, cfg.n_classes)
+            * meter.k.e_backend_mac_j * frame_hz * 1e3)
 
     def step(params, frames, fed, state: StreamState):
+        # a slot advances only when it is occupied AND fed this tick —
+        # un-fed slots are a data-only hold (DESIGN.md §12): every row
+        # below passes through unchanged, exactly like an inactive slot
+        act = state.active & fed
         # optics/mosaic/CDS once; forwarded to the compact forward below
         patches, weights = fe.sensor_patches(params["ip2"], frames, fcfg)
         boot = sal.topk_patch_indices(sal.patch_energy(patches), k)
@@ -221,6 +258,15 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
             cache = state.cache._replace(
                 valid=state.cache.valid & ~fresh[:, None]
             )
+        bcache = eps = None
+        if backend:
+            # belt to the admit wipe, like the temporal cache above: a
+            # fresh slot must never reuse its predecessor's activations
+            bcache = state.bcache._replace(
+                valid=state.bcache.valid & ~fresh
+            )
+            if governor is not None:
+                eps = state.controls.eps
         k_cap = stale_cap = sign_mode = None
         if governor is not None:
             k_cap = gov_mod.tier_k_eff(governor, state.controls.tier, k)
@@ -235,7 +281,8 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
             params, frames, cfg, indices=indices,
             project_fn=project_fn, precomputed=(patches, weights),
             cache=cache, k_cap=k_cap, stale_cap=stale_cap,
-            sign_mode=sign_mode,
+            sign_mode=sign_mode, backend_cache=bcache, backend_eps=eps,
+            backend_act=act if backend else None,
         )
         scores = saccade_scores(aux, explore)
         ema = jnp.where(
@@ -244,10 +291,6 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
         )
         next_idx = sal.topk_patch_indices(ema, k)
 
-        # a slot advances only when it is occupied AND fed this tick —
-        # un-fed slots are a data-only hold (DESIGN.md §12): every row
-        # below passes through unchanged, exactly like an inactive slot
-        act = state.active & fed
         # energy meters: only served slots spend events (held streams
         # accrue zero — they converted nothing this tick). The cumulative
         # meter is a RUNNING MEAN (Welford step over the frames served
@@ -270,7 +313,7 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
                               for e in aux["events"])),
                 act, meter, frame_hz,
                 n_pixels, fcfg.patch.pixels_per_patch, fcfg.patch.n_vectors,
-                j_max, k,
+                j_max, k, backend_mw=backend_mw,
             )
         new_state = StreamState(
             indices=jnp.where(act[:, None], next_idx, state.indices),
@@ -282,6 +325,8 @@ def make_engine_step(cfg, explore: float = 0.1, ema_decay: float = 0.0,
             events_last=ev_last,
             events_mean=ev_mean,
             controls=controls,
+            bcache=(_freeze_rows(act, aux["backend_cache"], state.bcache)
+                    if backend else None),
         )
         logits = jnp.where(act[:, None], logits, 0.0)
         return logits, new_state
@@ -321,6 +366,12 @@ def _make_churn(k: int, j_max: int, governed: bool):
                 valid=cache.valid & ~hit[:, None],
                 n_stale=jnp.where(hit, 0, cache.n_stale),
             )
+        bcache = state.bcache
+        if bcache is not None:
+            # same contract as the feature-cache wipe: dtype-preserving
+            # broadcast zeroing, so a recycled slot can never serve its
+            # previous occupant's activations (§14)
+            bcache = bdel.wipe_rows(bcache, hit)
         wiped = EventCounts(*(jnp.where(hit, 0.0, e)
                               for e in state.events_last))
         wiped_mean = EventCounts(*(jnp.where(hit, 0.0, e)
@@ -340,6 +391,7 @@ def _make_churn(k: int, j_max: int, governed: bool):
             events_last=wiped,
             events_mean=wiped_mean,
             controls=controls,
+            bcache=bcache,
         )
 
     return churn
@@ -392,6 +444,15 @@ class SaccadeEngine:
         recompute cap is a knob of the temporal gate). Budget shares are
         priority-weighted over admitted streams (``admit(priority=...)``)
         and reallocated on every admit/evict (data-only row writes).
+      backend_delta: thread a per-slot incremental-backend cache
+        (:class:`repro.models.backend_delta.BackendCache`, DESIGN.md
+        §14) through the step — tokens whose served wire row is bitwise
+        unchanged reuse their cached backend work; a fully-held frame
+        serves the cached logits with zero backend MACs. Pairs naturally
+        with ``temporal=True`` (held charge is what holds the wire rows
+        still) but is independent of it. A governed engine additionally
+        drives the per-slot snap budget ``eps`` from the power loop when
+        ``governor.backend_eps > 0`` (which *requires* this flag).
     """
 
     def __init__(self, cfg, params, capacity: int = 8, *, mesh=None,
@@ -400,7 +461,8 @@ class SaccadeEngine:
                  temporal: bool = False,
                  meter: EnergyMeter = EnergyMeter(),
                  frame_hz: float = 30.0,
-                 governor: "gov_mod.GovernorSpec | None" = None):
+                 governor: "gov_mod.GovernorSpec | None" = None,
+                 backend_delta: bool = False):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if governor is not None and not temporal:
@@ -409,11 +471,19 @@ class SaccadeEngine:
                 "governs the temporal gate's per-frame allocation "
                 "(DESIGN.md §10)"
             )
+        if (governor is not None and governor.backend_eps > 0.0
+                and not backend_delta):
+            raise ValueError(
+                "governor.backend_eps budgets the delta-gated backend "
+                "(DESIGN.md §14); build the engine with "
+                "backend_delta=True or drop backend_eps"
+            )
         self.cfg = cfg
         self.params = params
         self.capacity = capacity
         self.mesh = mesh
         self.temporal = temporal
+        self.backend = backend_delta
         self.meter = meter
         self.frame_hz = frame_hz
         self.governor = governor
@@ -437,7 +507,7 @@ class SaccadeEngine:
         fn = make_engine_step(cfg, explore=explore, ema_decay=ema_decay,
                               project_fn=project_fn, temporal=temporal,
                               governor=governor, meter=meter,
-                              frame_hz=frame_hz)
+                              frame_hz=frame_hz, backend=backend_delta)
 
         self._slot_spec = P()
         if mesh is not None:
@@ -470,7 +540,8 @@ class SaccadeEngine:
             donate_argnums=(0,))
 
         state = init_stream_state(cfg, capacity, temporal=temporal,
-                                  governed=governor is not None)
+                                  governed=governor is not None,
+                                  backend=backend_delta)
         if mesh is not None and self._slot_spec != P():
             sh = NamedSharding(mesh, self._slot_spec)
             state = jax.tree.map(lambda x: jax.device_put(x, sh), state)
@@ -718,6 +789,29 @@ class SaccadeEngine:
         tier = int(self.state.controls.tier[self.slot_of(stream_id)])
         return bool(self.governor.sign_tier
                     and tier >= len(self.governor.k_tiers))
+
+    def backend_eps(self, stream_id: Hashable) -> float:
+        """The governor's current backend snap budget for this stream
+        (0.0 = exact reuse; DESIGN.md §14; governed backend-delta
+        engines only)."""
+        if self.governor is None:
+            raise RuntimeError("engine was built without a governor")
+        if not self.backend:
+            raise RuntimeError("engine was built without backend_delta=True")
+        return float(self.state.controls.eps[self.slot_of(stream_id)])
+
+    def backend_cached(self, stream_id: Hashable) -> bool:
+        """True when this stream's last served frame was answered entirely
+        from its :class:`BackendCache` — zero backend MACs executed
+        (DESIGN.md §14; backend-delta engines only)."""
+        if not self.backend:
+            raise RuntimeError("engine was built without backend_delta=True")
+        slot = self.slot_of(stream_id)
+        st = self.state
+        if int(st.frame_age[slot]) == 0:
+            raise RuntimeError(
+                f"stream {stream_id!r} has not served a frame yet")
+        return float(st.events_last.backend_macs[slot]) == 0.0
 
     def gaze(self, stream_id: Hashable) -> np.ndarray:
         """The (k,) patch indices this stream will ADC-convert next frame.

@@ -97,6 +97,15 @@ class GovernorSpec:
       per-slot tier index selects it, shapes never change, and the
       engine applies the sign degradation to the already-converted code
       wire (`adc.sign_code_points`) — zero recompiles.
+    backend_eps: the delta-gated backend's engaged epsilon (DESIGN.md
+      §14) — one more per-slot DATA knob, on the SYSTEM power loop
+      rather than the frontend one: when a slot's budget cannot cover
+      the dense backend on top of the finest frontend floor, its
+      ``controls.eps`` engages to this value so held tokens stop
+      re-propagating sub-eps drift (droop, flicker) through the encoder;
+      it recovers to 0.0 (the exact, bitwise regime) with the stricter
+      ``(1 - deadband)`` margin. 0.0 disables the knob. Requires a
+      backend-delta engine (the knob gates against its BackendCache).
     """
 
     budget_mw: float
@@ -106,10 +115,15 @@ class GovernorSpec:
     k_tiers: tuple[float, ...] = (1.0, 0.75, 0.5, 0.25)
     refresh_horizon: int = 8
     sign_tier: bool = False
+    backend_eps: float = 0.0
 
     def __post_init__(self):
         if self.budget_mw <= 0:
             raise ValueError(f"budget_mw must be > 0, got {self.budget_mw}")
+        if self.backend_eps < 0:
+            raise ValueError(
+                f"backend_eps must be >= 0 (0 disables the backend knob), "
+                f"got {self.backend_eps}")
         if self.floor < 1:
             raise ValueError(f"floor must be >= 1, got {self.floor}")
         if self.k_tiers[0] != 1.0:
@@ -133,15 +147,19 @@ class GovernorControls(NamedTuple):
     j_cap: jnp.ndarray      # (S,) int32 — recompute slots allowed per frame
     tier: jnp.ndarray       # (S,) int32 — index into GovernorSpec.k_tiers
     budget_mw: jnp.ndarray  # (S,) float32 — host-allocated budget share
+    eps: jnp.ndarray        # (S,) float32 — backend delta-gate epsilon
+                            # (0.0 = exact regime, DESIGN.md §14)
 
 
 def init_controls(capacity: int, j_max: int) -> GovernorControls:
-    """Fresh slots start ungoverned (cap = j_max, tier 0) and unbudgeted;
-    the host writes budget shares on admit (:func:`allocate_budgets`)."""
+    """Fresh slots start ungoverned (cap = j_max, tier 0, exact backend)
+    and unbudgeted; the host writes budget shares on admit
+    (:func:`allocate_budgets`)."""
     return GovernorControls(
         j_cap=jnp.full((capacity,), j_max, jnp.int32),
         tier=jnp.zeros((capacity,), jnp.int32),
         budget_mw=jnp.zeros((capacity,), jnp.float32),
+        eps=jnp.zeros((capacity,), jnp.float32),
     )
 
 
@@ -153,6 +171,7 @@ def reset_rows(controls: GovernorControls, hit: jnp.ndarray,
         j_cap=jnp.where(hit, j_max, controls.j_cap),
         tier=jnp.where(hit, 0, controls.tier),
         budget_mw=jnp.where(hit, 0.0, controls.budget_mw),
+        eps=jnp.where(hit, 0.0, controls.eps),
     )
 
 
@@ -208,12 +227,18 @@ def control_update(
     n_vectors: int,
     j_max: int,
     k: int,
+    backend_mw: float = 0.0,
 ) -> GovernorControls:
     """One governor tick — pure, per-slot, jit-inside-the-engine-step.
 
     ``events_last`` are THIS frame's executed events (inactive slots
     zeroed); the new controls apply from the NEXT frame (one frame of
     control latency, like any sampled controller).
+
+    ``backend_mw`` is the DENSE backend's per-slot power estimate
+    (``dense_backend_macs`` priced by the meter — the feedforward plant
+    model for the §14 epsilon knob); 0.0 when the engine serves the
+    dense backend (no BackendCache to gate against).
     """
     slot_mw = 1e3 * meter.slot_recompute_power_w(
         pixels_per_patch, n_vectors, frame_hz
@@ -278,11 +303,28 @@ def control_update(
         jnp.where(t_up < t_cur, t_cur - 1, t_cur),                # recover
     )
 
+    # 3c. backend epsilon (DESIGN.md §14): the knob on the SYSTEM power
+    # loop. The budget must fund the frontend's floor PLUS the dense
+    # backend; when it cannot, the slot's delta gate engages
+    # spec.backend_eps so held tokens stop re-propagating sub-eps drift,
+    # and it recovers to the exact regime (eps 0) only with the stricter
+    # (1 - deadband) margin — the sign-tier hysteresis shape.
+    eps_new = controls.eps
+    if spec.backend_eps > 0.0:
+        floor_sys = fixed + spec.floor * slot_mw + backend_mw
+        want_eps = budget < floor_sys
+        recover_eps = budget * (1.0 - spec.deadband) >= floor_sys
+        eps_new = jnp.where(
+            want_eps, jnp.float32(spec.backend_eps),
+            jnp.where(recover_eps, 0.0, controls.eps),
+        )
+
     frozen = ~active
     return GovernorControls(
         j_cap=jnp.where(frozen, controls.j_cap, j_new),
         tier=jnp.where(frozen, controls.tier, t_new),
         budget_mw=budget,
+        eps=jnp.where(frozen, controls.eps, eps_new),
     )
 
 

@@ -89,7 +89,7 @@ def saccade_scores(aux: dict, explore: float) -> jnp.ndarray:
 
 
 def make_saccade_step(cfg, explore: float = 0.1, project_fn=None,
-                      temporal: bool = False):
+                      temporal: bool = False, backend: bool = False):
     """Closed-loop serving step on the compact path end to end.
 
     Frame t: the frontend gathers and projects ONLY the k patches the
@@ -121,30 +121,59 @@ def make_saccade_step(cfg, explore: float = 0.1, project_fn=None,
     :func:`make_bootstrap_indices`. With ``temporal=True`` the signature
     is step(params, rgb, indices, cache) -> (logits, next_indices, aux,
     cache); seed the cache with
-    :func:`repro.core.temporal.init_feature_cache`. For many concurrent
-    streams use :class:`repro.serve.engine.SaccadeEngine`, which batches
-    this exact step over fixed slots with per-stream state.
+    :func:`repro.core.temporal.init_feature_cache`.
+
+    ``backend=True`` additionally threads a
+    :class:`repro.models.backend_delta.BackendCache` (DESIGN.md §14): the
+    step takes it as its last positional state arg plus an optional
+    ``eps`` keyword ((B,) float, default exact) and returns it refreshed
+    as its last result — tokens whose served wire row is bitwise
+    unchanged reuse their cached backend work; seed with
+    :func:`repro.models.backend_delta.init_backend_cache`. For many
+    concurrent streams use :class:`repro.serve.engine.SaccadeEngine`,
+    which batches this exact step over fixed slots with per-stream state.
     """
     from repro.core import saliency as sal
     from repro.models.vit import vit_forward_compact
 
     fcfg = cfg.frontend
 
+    def _finish(logits, aux):
+        scores = saccade_scores(aux, explore)
+        next_indices = sal.topk_patch_indices(scores, fcfg.n_active)
+        return logits, next_indices, aux
+
     def step(params, rgb, indices):
         logits, aux = vit_forward_compact(
             params, rgb, cfg, indices=indices, project_fn=project_fn
         )
-        scores = saccade_scores(aux, explore)
-        next_indices = sal.topk_patch_indices(scores, fcfg.n_active)
-        return logits, next_indices, aux
+        return _finish(logits, aux)
 
     def step_temporal(params, rgb, indices, cache):
         logits, aux = vit_forward_compact(
             params, rgb, cfg, indices=indices, project_fn=project_fn,
             cache=cache,
         )
-        scores = saccade_scores(aux, explore)
-        next_indices = sal.topk_patch_indices(scores, fcfg.n_active)
+        logits, next_indices, aux = _finish(logits, aux)
         return logits, next_indices, aux, aux.pop("cache")
 
+    def step_backend(params, rgb, indices, bcache, eps=None):
+        logits, aux = vit_forward_compact(
+            params, rgb, cfg, indices=indices, project_fn=project_fn,
+            backend_cache=bcache, backend_eps=eps,
+        )
+        logits, next_indices, aux = _finish(logits, aux)
+        return logits, next_indices, aux, aux.pop("backend_cache")
+
+    def step_temporal_backend(params, rgb, indices, cache, bcache, eps=None):
+        logits, aux = vit_forward_compact(
+            params, rgb, cfg, indices=indices, project_fn=project_fn,
+            cache=cache, backend_cache=bcache, backend_eps=eps,
+        )
+        logits, next_indices, aux = _finish(logits, aux)
+        return (logits, next_indices, aux, aux.pop("cache"),
+                aux.pop("backend_cache"))
+
+    if backend:
+        return step_temporal_backend if temporal else step_backend
     return step_temporal if temporal else step

@@ -102,7 +102,7 @@ class TestMeterEqualsClosedForm:
         assert set(rep.components) == {
             "adc", "weight_dac", "cap_charging", "pwm_comparators",
             "opamps", "cds_sampling", "pixel_dump",
-            "sign_comparators", "weight_reprogram",
+            "sign_comparators", "weight_reprogram", "backend",
         }
         assert rep.total_w == sum(rep.components.values())
         assert rep.share()["adc"] == rep.components["adc"] / rep.total_w

@@ -1,0 +1,186 @@
+"""Fig. 4 QTH power-of-2 attention (core/qth_attention.py): grid
+membership, renormalization, the min_exp threshold, STE gradients, and
+the wired-in backend path (ViTConfig.qth)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.frontend import FrontendConfig
+from repro.core.projection import PatchSpec
+from repro.core.qth_attention import (
+    QTHSpec, pow2_quantize, qth_attention, qth_attention_weights,
+)
+from repro.models.vit import ViTConfig, init_vit, vit_forward, vit_forward_compact
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _scores(shape=(2, 3, 5, 5), seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+class TestPow2Grid:
+    def test_quantized_weights_live_on_the_pow2_grid(self):
+        """Every nonzero coefficient must be exactly 2^e for an integer e
+        in [min_exp, 0] — the binary-weighted cap bank has no other
+        ratios to offer."""
+        spec = QTHSpec(min_exp=-8, renormalize=False)
+        w = qth_attention_weights(_scores(), spec)
+        vals = np.asarray(w).ravel()
+        grid = {0.0} | {2.0 ** e for e in range(spec.min_exp, 1)}
+        assert set(np.unique(vals)) <= grid, sorted(set(np.unique(vals)) - grid)
+
+    def test_pow2_quantize_rounds_to_nearest_exponent(self):
+        spec = QTHSpec(min_exp=-8, renormalize=False)
+        # 0.3 -> 2^round(log2 0.3) = 2^-2; 0.6 -> 2^-1; 0.9 -> 2^0
+        p = jnp.asarray([0.3, 0.6, 0.9])
+        np.testing.assert_allclose(np.asarray(pow2_quantize(p, spec)),
+                                   [0.25, 0.5, 1.0])
+
+    def test_quantize_never_exceeds_one(self):
+        spec = QTHSpec(min_exp=-4)
+        p = jnp.linspace(0.0, 1.0, 101)
+        assert float(jnp.max(pow2_quantize(p, spec))) <= 1.0
+
+    @pytest.mark.parametrize("min_exp", [-2, -4, -6, -10])
+    def test_min_exp_threshold_drops_small_coefficients(self, min_exp):
+        """Sweep the QTH underflow threshold: probabilities below
+        2^min_exp must quantize to EXACTLY zero (the thresholder simply
+        never fires), and coarser thresholds drop more mass."""
+        spec = QTHSpec(min_exp=min_exp, renormalize=False)
+        p = jax.nn.softmax(_scores(), axis=-1)
+        q = np.asarray(pow2_quantize(p, spec))
+        pn = np.asarray(p)
+        assert (q[pn < 2.0 ** min_exp] == 0.0).all()
+        assert (q[pn >= 2.0 ** min_exp] > 0.0).all()
+
+    def test_coarser_threshold_is_sparser(self):
+        p = jax.nn.softmax(_scores(shape=(4, 2, 16, 16)), axis=-1)
+        nnz = [
+            int(jnp.sum(pow2_quantize(
+                p, QTHSpec(min_exp=e, renormalize=False)) > 0))
+            for e in (-10, -6, -3, -1)
+        ]
+        assert nnz == sorted(nnz, reverse=True)
+        assert nnz[-1] < nnz[0]
+
+
+class TestRenormalize:
+    def test_renormalized_rows_sum_to_one(self):
+        w = qth_attention_weights(_scores(), QTHSpec(renormalize=True))
+        np.testing.assert_allclose(np.asarray(jnp.sum(w, -1)), 1.0,
+                                   atol=1e-6)
+
+    def test_unrenormalized_rows_keep_raw_pow2_mass(self):
+        """renormalize=False serves the raw cap-ratio shares: row mass is
+        within the quantizer's worst-case bound of 1 (each coefficient
+        moves by at most a factor of sqrt(2)), never exactly renormed."""
+        spec = QTHSpec(renormalize=False)
+        w = qth_attention_weights(_scores(), spec)
+        sums = np.asarray(jnp.sum(w, -1))
+        assert (sums <= np.sqrt(2.0) + 1e-6).all()
+        assert (sums >= 1.0 / np.sqrt(2.0) - 1e-6).all()
+        assert not np.allclose(sums, 1.0)        # quantization is visible
+
+    def test_renormalize_on_off_share_support(self):
+        """The two modes must agree on WHICH keys get charge — renorm
+        only rescales rows, it never revives a thresholded coefficient."""
+        s = _scores()
+        on = qth_attention_weights(s, QTHSpec(renormalize=True))
+        off = qth_attention_weights(s, QTHSpec(renormalize=False))
+        np.testing.assert_array_equal(np.asarray(on > 0),
+                                      np.asarray(off > 0))
+
+    def test_key_valid_masks_coefficients_to_exact_zero(self):
+        s = _scores(shape=(2, 2, 4, 6))
+        valid = jnp.asarray([[True] * 4 + [False] * 2,
+                             [True] * 6])
+        # key_valid shares scores' leading dims: (B, k) needs an explicit
+        # head axis, same as the wired path (vit.py passes
+        # ``token_valid[:, None]``)
+        w = qth_attention_weights(s, QTHSpec(), key_valid=valid[:, None])
+        assert float(jnp.max(jnp.abs(w[0, :, :, 4:]))) == 0.0
+        np.testing.assert_allclose(np.asarray(jnp.sum(w, -1)), 1.0,
+                                   atol=1e-6)
+
+
+class TestGradients:
+    def test_ste_gradients_are_finite_and_nonzero(self):
+        """The STE must pass softmax gradients through the quantizer —
+        a hard pow2 round has zero gradient almost everywhere and would
+        freeze co-design training."""
+        def loss(s):
+            w = qth_attention_weights(s, QTHSpec(ste=True))
+            return jnp.sum(w ** 2)
+
+        g = jax.grad(loss)(_scores())
+        assert bool(jnp.all(jnp.isfinite(g)))
+        assert float(jnp.max(jnp.abs(g))) > 0.0
+
+    def test_qth_attention_grads_flow_to_values(self):
+        rng = np.random.default_rng(1)
+        q, k, v = (jnp.asarray(rng.normal(size=(2, 5, 8)).astype(np.float32))
+                   for _ in range(3))
+
+        def loss(v):
+            return jnp.sum(qth_attention(q, k, v) ** 2)
+
+        g = jax.grad(loss)(v)
+        assert bool(jnp.all(jnp.isfinite(g)))
+        assert float(jnp.max(jnp.abs(g))) > 0.0
+
+
+class TestWiredBackend:
+    """cfg.qth=True routes every encoder layer's probabilities through
+    the QTH quantizer — dense and compact paths both."""
+
+    def _cfg(self, **kw):
+        fcfg = FrontendConfig(
+            image_h=64, image_w=64,
+            patch=PatchSpec(patch_h=16, patch_w=16, n_vectors=32),
+            active_fraction=0.25,
+        )
+        base = dict(frontend=fcfg, n_layers=1, d_model=32, n_heads=2,
+                    d_ff=64)
+        base.update(kw)
+        return ViTConfig(**base)
+
+    def test_qth_changes_compact_logits_but_stays_close(self):
+        cfg = self._cfg()
+        qcfg = dataclasses.replace(cfg, qth=True)
+        params = init_vit(KEY, cfg)
+        rng = np.random.default_rng(0)
+        rgb = jnp.asarray(rng.uniform(size=(2, 64, 64, 3)).astype(np.float32))
+        l0, _ = vit_forward_compact(params, rgb, cfg)
+        l1, aux = vit_forward_compact(params, rgb, qcfg)
+        assert not np.array_equal(np.asarray(l0), np.asarray(l1))
+        # pow-2 rounding moves each coefficient < sqrt(2)x: logits stay
+        # in the same regime (sanity that qth is a quantizer, not noise)
+        assert float(jnp.max(jnp.abs(l0 - l1))) < 1.0
+        # saliency is still a valid distribution over observed patches
+        assert bool(jnp.all(aux["saliency"] >= 0.0))
+
+    def test_qth_dense_and_compact_agree_on_full_cover(self):
+        """active_fraction=1 compact vs dense forward under qth: same
+        tokens, same quantizer — logits must agree to float tolerance
+        (same discipline as the non-qth full-cover equivalence)."""
+        fcfg = FrontendConfig(
+            image_h=32, image_w=32,
+            patch=PatchSpec(patch_h=16, patch_w=16, n_vectors=32),
+            active_fraction=1.0,
+        )
+        cfg = ViTConfig(frontend=fcfg, n_layers=1, d_model=32, n_heads=2,
+                        d_ff=64, qth=True)
+        params = init_vit(KEY, cfg)
+        rng = np.random.default_rng(2)
+        rgb = jnp.asarray(rng.uniform(size=(2, 32, 32, 3)).astype(np.float32))
+        ld = vit_forward(params, rgb, cfg)
+        lc, _ = vit_forward_compact(params, rgb, cfg)
+        np.testing.assert_allclose(np.asarray(ld), np.asarray(lc),
+                                   atol=1e-5)

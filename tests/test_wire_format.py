@@ -395,3 +395,87 @@ class TestSignWireDtype:
         with pytest.raises(ValueError, match="does not match wire"):
             apply_frontend(params, rgb, fcfg, mode="compact", wire="float",
                            cache=init_feature_cache(fcfg, (2,), dtype=bool))
+
+
+class TestBackendCacheDiscipline:
+    """DESIGN.md §14: the BackendCache's reuse KEY rides the same wire
+    format as the FeatureCache (int8 codes — the key is a bitwise
+    comparison against served codes, so a float copy would both 4x the
+    footprint and break exactness), while the activation payload
+    ``x_out`` is deliberately float32 (it caches encoder outputs, not
+    wire bytes). Every mutation — engine step, admit row-wipe, hold
+    freeze — must preserve both dtypes, and the whole cache must stay a
+    slot-major pytree (static shapes, shard/donate with the slot axis)."""
+
+    def _beng(self, capacity=2):
+        fcfg = _fcfg(temporal=TemporalSpec(delta_threshold=1e-5))
+        cfg = _vcfg(fcfg)
+        params = init_vit(KEY, cfg)
+        eng = SaccadeEngine(cfg, params, capacity=capacity, temporal=True,
+                            backend_delta=True)
+        return cfg, eng
+
+    def _assert_backend_cache(self, bc, cfg):
+        want = jnp.dtype(cfg.frontend.adc.code_dtype)
+        assert bc.feats.dtype == want, (
+            f"backend reuse key left the wire: {bc.feats.dtype}")
+        assert bc.x_out.dtype == jnp.float32
+        assert bc.gain.dtype == jnp.float32
+        assert bc.indices.dtype == jnp.int32
+        assert bc.tvalid.dtype == jnp.bool_
+        assert bc.valid.dtype == jnp.bool_
+
+    def test_backend_cache_payload_stays_codes_under_churn(self):
+        cfg, eng = self._beng()
+        frame = SceneStream(image=64).batch(0, 1)[0][0]
+        capacity = eng.capacity
+        self._assert_backend_cache(eng.state.bcache, cfg)
+        eng.admit("a")
+        eng.step({"a": frame})
+        self._assert_backend_cache(eng.state.bcache, cfg)
+        eng.evict("a")
+        eng.admit("b")              # recycled slot: full row wipe
+        st = eng.state
+        self._assert_backend_cache(st.bcache, cfg)
+        assert not bool(st.bcache.valid[eng.slot_of("b")])
+        eng.step({"b": frame})
+        self._assert_backend_cache(eng.state.bcache, cfg)
+        # slot-major discipline: every leaf keeps the static (S, ...) shape
+        for leaf in jax.tree_util.tree_leaves(eng.state.bcache):
+            assert leaf.shape[0] == capacity
+
+    def test_backend_cache_wire_mismatch_raises_both_ways(self):
+        from repro.models.backend_delta import init_backend_cache
+
+        fcfg = _fcfg()
+        cfg = _vcfg(fcfg)
+        params = init_vit(KEY, cfg)
+        rgb = jax.random.uniform(KEY, (1, 64, 64, 3))
+        f32_bc = init_backend_cache(cfg, fcfg.n_active, (1,),
+                                    dtype=jnp.float32)
+        with pytest.raises(ValueError, match="does not match wire"):
+            vit_forward_compact(params, rgb, cfg, backend_cache=f32_bc)
+        code_bc = init_backend_cache(cfg, fcfg.n_active, (1,),
+                                     dtype=fcfg.adc.code_dtype)
+        with pytest.raises(ValueError, match="does not match wire"):
+            vit_forward_compact(params, rgb, cfg, wire="float",
+                                backend_cache=code_bc)
+
+    def test_backend_cache_float_wire_pairs_with_float_key(self):
+        """The float STE wire is a legal backend-delta pairing — the key
+        comparison is still bitwise, just over f32 payloads."""
+        from repro.models.backend_delta import init_backend_cache
+
+        fcfg = _fcfg()
+        cfg = _vcfg(fcfg)
+        params = init_vit(KEY, cfg)
+        rgb = jax.random.uniform(KEY, (1, 64, 64, 3))
+        bc = init_backend_cache(cfg, fcfg.n_active, (1,), dtype=jnp.float32)
+        logits, aux = vit_forward_compact(params, rgb, cfg, wire="float",
+                                          backend_cache=bc)
+        assert aux["backend_cache"].feats.dtype == jnp.float32
+        logits2, aux2 = vit_forward_compact(
+            params, rgb, cfg, wire="float",
+            backend_cache=aux["backend_cache"])
+        np.testing.assert_array_equal(np.asarray(logits),
+                                      np.asarray(logits2))
