@@ -13,9 +13,14 @@ Methodology notes, mirrored by ``check_fleet_accounting.py``:
 
 * Latency samples are per-tick wall times of ``fleet.step`` (a stream's
   serve latency — its frame is done when the tick's logits land on the
-  host); the warm-up/compile ticks are excluded. The raw samples ship in
-  the artifact row so the smoke guard re-derives p50/p99 instead of
-  trusting the stored percentiles.
+  host); the warm-up/compile ticks are excluded. Every tick is metered
+  through the ASYNC path (DESIGN.md §15) and split into the
+  non-blocking dispatch (staging + upload + launch across all fed
+  hosts) and the blocking fetch (device compute + D2H), stored as
+  separate per-sample fields whose sum IS the total serve sample. The
+  raw samples ship in the artifact row so the smoke guard re-derives
+  p50/p99 for all three series instead of trusting the stored
+  percentiles.
 * Fleet mW is priced from the per-slot MEAN event meters summed over the
   served streams; pricing is linear in the event counts, so the guard
   re-prices the stored summed counts with a fresh ``EnergyMeter`` and
@@ -128,7 +133,8 @@ _FLEET_CODE = """
     assert fleet.queued == 0 and fleet.free_slots == 0
     peak = len(fleet.stream_ids)
 
-    samples_ms, served, fed_hist = [], 0, []
+    samples_ms, dispatch_ms, fetch_ms = [], [], []
+    served, fed_hist = 0, []
     t_wall0 = time.perf_counter()
     for t in range(TICKS):
         # lambda-churn: Poisson leaves then the same number of joins, so
@@ -148,14 +154,24 @@ _FLEET_CODE = """
                   for sid in list(period_of)
                   if sid in fleet._host_of
                   and t %% period_of[sid] == phase_of[sid]}
+        # async split (DESIGN.md 15): meter the non-blocking dispatch
+        # (staging + upload + launch, all hosts in flight) separately
+        # from the blocking fetch (device compute + D2H). Total serve
+        # latency is their sum by construction.
         t0 = time.perf_counter()
-        out = fleet.step(frames)
+        handle = fleet.step(frames, block=False)
+        t1 = time.perf_counter()
+        out = handle.result()
         for v in out.values():
             np.asarray(v)                    # frames done when on host
-        dt = time.perf_counter() - t0
+        t2 = time.perf_counter()
+        d_ms = (t1 - t0) * 1e3
+        f_ms = (t2 - t1) * 1e3
         # queued joins admitted by this step serve from the NEXT tick;
         # count only what this tick actually served
-        samples_ms.append(dt * 1e3)
+        dispatch_ms.append(d_ms)
+        fetch_ms.append(f_ms)
+        samples_ms.append(d_ms + f_ms)
         served += len(out)
         fed_hist.append(len(out))
         peak = max(peak, len(fleet.stream_ids))
@@ -177,6 +193,8 @@ _FLEET_CODE = """
     print(json.dumps({
         "n_dev": len(jax.devices()),
         "samples_ms": samples_ms,
+        "dispatch_ms": dispatch_ms,
+        "fetch_ms": fetch_ms,
         "served_frames": served,
         "wall_s": t_wall,
         "peak_streams": peak,
@@ -220,6 +238,8 @@ def sustained_load(n_devices: int = N_DEVICES) -> list[dict]:
     samples = np.asarray(r["samples_ms"])
     p50 = float(np.percentile(samples, 50))
     p99 = float(np.percentile(samples, 99))
+    disp = np.asarray(r["dispatch_ms"])
+    fetch = np.asarray(r["fetch_ms"])
     streams_per_s = r["served_frames"] / r["wall_s"]
 
     # hard contracts (data properties, never relaxed): one compile per
@@ -236,7 +256,13 @@ def sustained_load(n_devices: int = N_DEVICES) -> list[dict]:
         "ticks": TICKS, "lam": LAMBDA, "periods": list(PERIODS),
         "frame_hz": FRAME_HZ,
         "latency_ms_samples": r["samples_ms"],
+        "dispatch_ms_samples": r["dispatch_ms"],
+        "fetch_ms_samples": r["fetch_ms"],
         "p50_ms": p50, "p99_ms": p99,
+        "dispatch_p50_ms": float(np.percentile(disp, 50)),
+        "dispatch_p99_ms": float(np.percentile(disp, 99)),
+        "fetch_p50_ms": float(np.percentile(fetch, 50)),
+        "fetch_p99_ms": float(np.percentile(fetch, 99)),
         "served_frames": r["served_frames"], "wall_s": r["wall_s"],
         "streams_per_s": streams_per_s,
         "peak_streams": r["peak_streams"],
@@ -256,7 +282,10 @@ def sustained_load(n_devices: int = N_DEVICES) -> list[dict]:
             f"lam={LAMBDA:g} churn x{r['churn_ops']} ops -> "
             f"{sum(r['flushes'])} flushes, mixed rates "
             f"{'/'.join(str(p) for p in PERIODS)}; p50 {p50:.2f}ms "
-            f"p99 {p99:.2f}ms, {streams_per_s:.0f} streams/s, "
+            f"p99 {p99:.2f}ms (dispatch p50 "
+            f"{float(np.percentile(disp, 50)):.2f}ms / fetch p50 "
+            f"{float(np.percentile(fetch, 50)):.2f}ms), "
+            f"{streams_per_s:.0f} streams/s, "
             f"{r['fleet_mw_mean']:.3f} mW fleet, "
             f"traces {r['n_traces']}"
         ),

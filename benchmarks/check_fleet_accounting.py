@@ -12,9 +12,11 @@ Three layers of defence:
    into the artifact. The acceptance shape is pinned: peak streams >= 64
    over >= 2 hosts, >= 2 distinct frame periods, one compile per engine,
    and admit/evict churn coalesced into fewer flushes than churn ops.
-2. Claims: the stored p50/p99 reproduce from the stored samples, the
-   stored streams/s reproduces from served_frames / wall_s, and the
-   sample count matches the tick count.
+2. Claims: the stored p50/p99 reproduce from the stored samples — for
+   the total serve latency AND the async dispatch/fetch split series
+   (DESIGN.md §15), whose per-tick sum must equal the total serve
+   sample exactly — the stored streams/s reproduces from
+   served_frames / wall_s, and the sample counts match the tick count.
 3. Live re-derivation: the stored summed mean event counts are re-priced
    here with a fresh :class:`EnergyMeter` — pricing is linear in the
    counts, so the re-priced total must land on the stored fleet mW. The
@@ -52,7 +54,12 @@ def main(path: str = "BENCH_throughput.json") -> None:
     for key in ("latency_ms_samples", "p50_ms", "p99_ms", "served_frames",
                 "wall_s", "streams_per_s", "peak_streams", "churn_ops",
                 "flushes", "n_traces", "fleet_mw_mean", "events_mean_sum",
-                "ticks", "periods", "frame_hz", "n_hosts"):
+                "ticks", "periods", "frame_hz", "n_hosts",
+                # async split (DESIGN.md §15): raw dispatch/fetch samples
+                # plus their stored percentiles
+                "dispatch_ms_samples", "fetch_ms_samples",
+                "dispatch_p50_ms", "dispatch_p99_ms",
+                "fetch_p50_ms", "fetch_p99_ms"):
         assert key in rec, f"{name}: fleet record missing {key!r}"
     assert rec["peak_streams"] >= 64, (
         f"sustained load peaked at {rec['peak_streams']} streams < 64")
@@ -73,6 +80,23 @@ def main(path: str = "BENCH_throughput.json") -> None:
         have = float(np.percentile(samples, q))
         assert abs(have - rec[key]) < 1e-9 * max(1.0, have), (
             f"stored {key} {rec[key]} != samples percentile {have}")
+    # async split: each series' stored percentiles reproduce from ITS
+    # raw samples, and dispatch + fetch sums to the total serve sample
+    # tick by tick (the bench computes the total as the sum, so the
+    # identity is exact)
+    disp = np.asarray(rec["dispatch_ms_samples"], dtype=np.float64)
+    fetch = np.asarray(rec["fetch_ms_samples"], dtype=np.float64)
+    assert disp.size == fetch.size == samples.size, (
+        f"sample series disagree: {disp.size}/{fetch.size}/{samples.size}")
+    np.testing.assert_allclose(
+        disp + fetch, samples, rtol=0, atol=1e-9,
+        err_msg="dispatch + fetch samples do not sum to the serve samples")
+    for series, prefix in ((disp, "dispatch"), (fetch, "fetch")):
+        for q in (50, 99):
+            key = f"{prefix}_p{q}_ms"
+            have = float(np.percentile(series, q))
+            assert abs(have - rec[key]) < 1e-9 * max(1.0, have), (
+                f"stored {key} {rec[key]} != samples percentile {have}")
     sps = rec["served_frames"] / rec["wall_s"]
     assert abs(sps - rec["streams_per_s"]) < 1e-9 * max(1.0, sps), (
         f"stored streams/s {rec['streams_per_s']} != "

@@ -1,0 +1,185 @@
+"""Bench-smoke guard: the BENCH_throughput.json rollout row must be a
+real dispatch-overhead measurement (DESIGN.md §15) — mirroring the §12
+fleet guard (check_fleet_accounting.py).
+
+Three layers of defence:
+
+1. Schema: the rollout row carries a ``rollout`` record with ``source ==
+   "perf_counter"``, raw per-repeat samples (looped baseline, rollout
+   dispatch, rollout fetch) for EVERY sweep point, the trace ledger (one
+   engine trace + one rollout trace per distinct T) and the in-bench
+   bitwise-parity verdict — no hand-typed speedups can sneak into the
+   artifact.
+2. Claims: every stored per-tick median (loop / rollout / dispatch /
+   fetch) and every stored speedup reproduce from the raw samples, and
+   the acceptance floor (rollout ≥ 2× the looped step per tick at T=16)
+   holds unless the artifact says the bench ran relaxed.
+3. Live re-derivation: a fresh engine pair re-checks the BITWISE-parity
+   claim here (rollout vs sequential steps, logits + full carried
+   state), and a short live timing re-checks that a rollout actually
+   beats the looped step on this machine (soft, ``IP2_BENCH_RELAX``
+   relaxes the live timing only — parity is never relaxed).
+
+Run after ``benchmarks/run.py`` (needs src and the repo root on the
+path): ``PYTHONPATH=src:. python benchmarks/check_rollout_accounting.py``.
+"""
+
+import json
+import os
+import sys
+
+ROLLOUT_SOURCE = "perf_counter"
+
+
+def _relaxed() -> bool:
+    return bool(os.environ.get("IP2_BENCH_RELAX"))
+
+
+def check_artifact(path: str) -> dict:
+    import numpy as np
+
+    with open(path) as f:
+        results = json.load(f)
+    rr = next(v for k, v in results.items() if k.startswith("rollout"))
+    rows = {r["name"]: r for r in rr if "name" in r}
+    name = next(n for n in rows if n.startswith("rollout_dispatch_"))
+    rec = rows[name].get("rollout")
+
+    # --- layer 1: schema ---------------------------------------------------
+    assert isinstance(rec, dict), f"{name}: no rollout record"
+    assert rec.get("source") == ROLLOUT_SOURCE, (
+        f"{name}: not a measured row (source={rec.get('source')!r})")
+    for key in ("capacity", "t_sweep", "repeats", "per_t", "n_traces",
+                "n_rollout_traces", "parity_bitwise", "parity_T",
+                "speedup_t", "speedup_floor", "relaxed"):
+        assert key in rec, f"{name}: rollout record missing {key!r}"
+    assert rec["n_traces"] == 1, (
+        f"engine retraced during the sweep: n_traces={rec['n_traces']}")
+    assert rec["n_rollout_traces"] == len(rec["t_sweep"]), (
+        f"one rollout trace per distinct T: expected {len(rec['t_sweep'])}, "
+        f"got {rec['n_rollout_traces']}")
+    assert rec["parity_bitwise"] is True, (
+        "the bench's in-run parity check failed — the stored speedups "
+        "compare two DIFFERENT computations")
+
+    # --- layer 2: claims ---------------------------------------------------
+    for T in rec["t_sweep"]:
+        p = rec["per_t"][str(T)]
+        for key in ("loop_ms_samples", "dispatch_ms_samples",
+                    "fetch_ms_samples"):
+            assert len(p[key]) == rec["repeats"], (
+                f"T={T}: {len(p[key])} {key} for {rec['repeats']} repeats")
+        loop = np.asarray(p["loop_ms_samples"], np.float64)
+        disp = np.asarray(p["dispatch_ms_samples"], np.float64)
+        fetch = np.asarray(p["fetch_ms_samples"], np.float64)
+        derived = {
+            "loop_tick_ms": float(np.median(loop)) / T,
+            "rollout_tick_ms": float(np.median(disp + fetch)) / T,
+            "dispatch_tick_ms": float(np.median(disp)) / T,
+            "fetch_tick_ms": float(np.median(fetch)) / T,
+        }
+        derived["speedup"] = (
+            derived["loop_tick_ms"] / derived["rollout_tick_ms"])
+        for key, want in derived.items():
+            assert abs(p[key] - want) < 1e-9 * max(1.0, want), (
+                f"T={T}: stored {key} {p[key]} != re-derived {want}")
+    floor_speedup = rec["per_t"][str(rec["speedup_t"])]["speedup"]
+    if not rec["relaxed"]:
+        assert floor_speedup >= rec["speedup_floor"], (
+            f"artifact claims an unrelaxed run but speedup at "
+            f"T={rec['speedup_t']} is {floor_speedup:.2f}x < "
+            f"{rec['speedup_floor']:g}x")
+    return {"name": name, "rec": rec, "floor_speedup": floor_speedup}
+
+
+def check_live() -> tuple[bool, float]:
+    """Re-derive the two claims live on a small operating point: bitwise
+    parity (hard) and rollout-beats-loop (soft under IP2_BENCH_RELAX)."""
+    import time
+
+    import numpy as np
+    import jax
+
+    from repro.core.frontend import FrontendConfig
+    from repro.core.projection import PatchSpec
+    from repro.core.temporal import TemporalSpec
+    from repro.data.pipeline import SceneStream
+    from repro.models.vit import ViTConfig, init_vit
+    from repro.serve.engine import SaccadeEngine
+    from repro.serve.governor import GovernorSpec
+
+    fcfg = FrontendConfig(
+        image_h=32, image_w=32, aa_cutoff=None,
+        patch=PatchSpec(patch_h=8, patch_w=8, n_vectors=16),
+        active_fraction=0.25,
+        temporal=TemporalSpec(delta_threshold=1e-4))
+    cfg = ViTConfig(frontend=fcfg, n_layers=1, d_model=32, n_heads=2,
+                    d_ff=64)
+    params = init_vit(jax.random.PRNGKey(0), cfg)
+    pool = np.asarray(SceneStream(image=32).batch(0, 32)[0])
+    cap, T = 8, 8
+
+    def build():
+        eng = SaccadeEngine(cfg, params, capacity=cap, temporal=True,
+                            governor=GovernorSpec(budget_mw=50.0))
+        for i in range(cap):
+            eng.admit(f"s{i}")
+        return eng
+
+    def frames_at(t):
+        return {f"s{i}": pool[(i + t) % len(pool)] for i in range(cap)}
+
+    # live bitwise parity: rollout vs T sequential steps, logits + state
+    e_seq, e_roll = build(), build()
+    sched = [frames_at(t) for t in range(T)]
+    seq = [e_seq.step(fr) for fr in sched]
+    roll = e_roll.step_rollout(sched)
+    for t in range(T):
+        assert set(seq[t]) == set(roll[t])
+        for sid in seq[t]:
+            assert np.array_equal(seq[t][sid], roll[t][sid]), (
+                f"LIVE parity failed: tick {t} stream {sid} logits differ "
+                f"between rollout and sequential steps")
+    for i, (a, b) in enumerate(zip(jax.tree.leaves(e_seq.state),
+                                   jax.tree.leaves(e_roll.state))):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (
+            f"LIVE parity failed: state leaf {i} differs")
+
+    # live timing: one warm engine, rollout vs loop at T ticks
+    eng = build()
+    for t in range(2):
+        eng.step(frames_at(t))
+    eng.step_rollout(sched)                       # compile the T trace
+    best_loop, best_roll = float("inf"), float("inf")
+    for rep in range(3):
+        t0 = time.perf_counter()
+        for fr in sched:
+            eng.step(fr)
+        best_loop = min(best_loop, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        eng.step_rollout(sched)
+        best_roll = min(best_roll, time.perf_counter() - t0)
+    live_speedup = best_loop / best_roll
+    if not _relaxed():
+        assert live_speedup > 1.0, (
+            f"LIVE timing: rollout ({best_roll * 1e3:.2f} ms) did not beat "
+            f"the looped step ({best_loop * 1e3:.2f} ms) at T={T} "
+            f"(set IP2_BENCH_RELAX=1 on noisy runners)")
+    return True, live_speedup
+
+
+def main(path: str = "BENCH_throughput.json") -> None:
+    art = check_artifact(path)
+    rec = art["rec"]
+    _, live_speedup = check_live()
+    print(f"rollout accounting OK: {art['name']} — per-tick medians and "
+          f"speedups reproduce from {rec['repeats']} raw samples over "
+          f"T={rec['t_sweep']}, stored speedup at T={rec['speedup_t']} "
+          f"{art['floor_speedup']:.2f}x"
+          f"{' (relaxed)' if rec['relaxed'] else ''}, traces "
+          f"1+{rec['n_rollout_traces']}; LIVE parity bitwise, live "
+          f"rollout speedup {live_speedup:.2f}x")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

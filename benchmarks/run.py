@@ -22,7 +22,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_fleet, bench_kernels, bench_leakage, bench_power,
-        bench_roofline, bench_throughput,
+        bench_roofline, bench_rollout, bench_throughput,
     )
 
     modules = [
@@ -32,6 +32,7 @@ def main() -> None:
         ("kernels", bench_kernels),
         ("roofline(§11)", bench_roofline),
         ("fleet(§12)", bench_fleet),
+        ("rollout(§15)", bench_rollout),
     ]
     from benchmarks import bench_accuracy
 

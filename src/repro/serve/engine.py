@@ -28,18 +28,32 @@ jitted step:
   identical to a full-cover step (per-slot independence; asserted in
   tests/test_serve_engine.py).
 
-* **Double-buffered ingest + coalesced churn** (DESIGN.md §12). Frame
-  upload stages into one of two REUSED host buffers (alternating per
-  step) instead of a fresh ``np.zeros((capacity, H, W, 3))`` per call:
-  frame t+1's row-gather overwrites the buffer frame t-1 was uploaded
-  from, never the one frame t's still-running step may be reading —
-  allocation-free steady state with the gather overlapping the previous
-  step's device work. Admit/evict churn is continuously batched the
-  same way: ``admit``/``evict`` only record host-side bookkeeping, and
-  all pending row-writes (admit resets, evict flag-clears, governor
-  budget re-splits) coalesce into ONE jitted flush right before the
-  next step (or any state read) — k admits between two frames cost one
-  device dispatch, not k.
+* **Fed-rows-only scatter ingest + coalesced churn** (DESIGN.md §12,
+  §15). Frames live in a PERSISTENT device-resident ``(S, H, W, 3)``
+  buffer: each tick uploads only the F fed rows (staged compactly on
+  the host, one H2D copy of F·H·W·3 floats) and scatters them into the
+  donated buffer with a tiny jitted ``at[slots].set`` — there is no
+  full-capacity ``jnp.asarray(buf)`` per tick, so ingest bytes scale
+  with the fed fraction exactly like every other per-tick cost.
+  Un-fed rows keep the bytes of the last tick that fed them; their
+  slots hold, so the stale payload never reaches state or logits.
+  Admit/evict churn is continuously batched the same way:
+  ``admit``/``evict`` only record host-side bookkeeping, and all
+  pending row-writes (admit resets, evict flag-clears, governor budget
+  re-splits) coalesce into ONE jitted flush right before the next step
+  (or any state read) — k admits between two frames cost one device
+  dispatch, not k.
+
+* **Device-resident rollouts + async dispatch** (DESIGN.md §15).
+  ``step_rollout(frames_by_tick)`` serves T ticks in ONE dispatch: a
+  ``lax.scan`` (``serve_step.make_rollout``) carries the full
+  :class:`StreamState` on device — indices, EMA, caches, meters,
+  governor controls — with per-tick fed masks and frame payloads as
+  scanned inputs, bitwise identical to T sequential ``step()`` calls in
+  every engine mode. ``step(..., block=False)`` is the single-tick
+  async path: it returns a :class:`StepHandle` over the device-resident
+  logits, fetched lazily, so a caller (the fleet layer) can dispatch
+  many engines before blocking on any.
 
 * **Per-stream gaze state.** :class:`StreamState` carries each slot's
   current patch indices, an attention-score EMA (temporal smoothing of
@@ -100,7 +114,64 @@ from repro.core.power import EnergyMeter, EventCounts, dense_backend_macs
 from repro.core.temporal import FeatureCache, init_feature_cache
 from repro.models import backend_delta as bdel
 from repro.serve import governor as gov_mod
-from repro.serve.serve_step import saccade_scores
+from repro.serve.serve_step import make_rollout, saccade_scores
+
+
+class StepHandle:
+    """Non-blocking single-tick result (DESIGN.md §15).
+
+    Holds the DEVICE-resident ``(S, n_classes)`` logits of one engine
+    step plus the sid→slot map of the fed streams; :meth:`result`
+    fetches them to the host (one blocking transfer) and caches the
+    dict, so the fetch happens at most once and only when the caller
+    actually wants the numbers. The handle stays valid across later
+    engine calls — step outputs are fresh buffers, never donated — but
+    holding many unfetched handles pins their logits in device memory;
+    fetch (or drop) them within a tick or two.
+    """
+
+    __slots__ = ("_logits", "_slots", "_out")
+
+    def __init__(self, logits, slots: dict):
+        self._logits = logits
+        self._slots = slots
+        self._out = None
+
+    def result(self) -> dict[Hashable, np.ndarray]:
+        """Block until the logits are on the host; stream id -> (n_classes,)
+        logits for exactly the fed streams. Idempotent."""
+        if self._out is None:
+            arr = None if self._logits is None else np.asarray(self._logits)
+            self._out = {sid: arr[s] for sid, s in self._slots.items()}
+            self._logits = None          # drop the device reference
+        return self._out
+
+
+class RolloutHandle:
+    """Non-blocking rollout result: device-resident ``(T, S, n_classes)``
+    logits plus the per-tick sid→slot maps; :meth:`result` fetches the
+    whole rollout in ONE transfer and caches the per-tick dicts. Same
+    lifetime contract as :class:`StepHandle`."""
+
+    __slots__ = ("_logits", "_slot_maps", "_out")
+
+    def __init__(self, logits, slot_maps: list):
+        self._logits = logits
+        self._slot_maps = slot_maps
+        self._out = None
+
+    def result(self) -> list[dict[Hashable, np.ndarray]]:
+        """Block until the rollout's logits are on the host; one dict per
+        tick (stream id -> (n_classes,) logits for that tick's fed
+        streams). Idempotent."""
+        if self._out is None:
+            arr = None if self._logits is None else np.asarray(self._logits)
+            self._out = [
+                {sid: arr[t, s] for sid, s in m.items()}
+                for t, m in enumerate(self._slot_maps)
+            ]
+            self._logits = None
+        return self._out
 
 
 class StreamState(NamedTuple):
@@ -489,20 +560,33 @@ class SaccadeEngine:
         self.governor = governor
         self._priority: dict[Hashable, float] = {}
         self._slots: list[Hashable | None] = [None] * capacity
+        # cached sid -> slot map: the hot per-tick lookup (the list scan
+        # in slot_of cost O(S) per fed stream per tick); maintained by
+        # admit/evict, asserted == the slot list in tests
+        self._slot_index: dict[Hashable, int] = {}
         self._n_traces = 0
+        self._n_rollout_traces = 0
         # continuous batching of churn (DESIGN.md §12): slot -> "admit" |
         # "evict", last-op-wins; flushed in ONE jitted call before the
         # next step or state read
         self._pending: dict[int, str] = {}
         self._budgets_dirty = False
         self._budget_mw = None if governor is None else governor.budget_mw
-        # double-buffered host->device ingest: two reused staging buffers,
-        # alternated per step — frame t+1's row-gather writes the buffer
-        # frame t's in-flight step is NOT reading (DESIGN.md §12)
-        self._ingest = np.zeros(
-            (2, capacity, cfg.frontend.image_h, cfg.frontend.image_w, 3),
+        # fed-rows-only ingest (DESIGN.md §15): compact host staging for
+        # the F fed rows (+ their slot ids) and the preallocated fed
+        # mask, reused every tick — steady-state serving stages no fresh
+        # host allocations
+        self._stage = np.zeros(
+            (capacity, cfg.frontend.image_h, cfg.frontend.image_w, 3),
             np.float32)
-        self._ingest_i = 0
+        self._stage_slots = np.zeros((capacity,), np.int32)
+        self._fed = np.zeros((capacity,), bool)
+        # rollout staging, cached per distinct T (matching the one-trace-
+        # per-T compile contract). Un-fed rows keep stale bytes from the
+        # previous rollout of the same T — safe for the same reason the
+        # per-tick path's persistent device buffer is: the scanned fed
+        # mask gates every un-fed row out of the computation
+        self._roll_stage: dict[int, tuple[np.ndarray, np.ndarray]] = {}
 
         fn = make_engine_step(cfg, explore=explore, ema_decay=ema_decay,
                               project_fn=project_fn, temporal=temporal,
@@ -532,20 +616,43 @@ class SaccadeEngine:
             self._n_traces += 1
             return fn(params, frames, fed, state)
 
+        rollout = make_rollout(fn)
+
+        def counted_rollout(params, frames_seq, fed_seq, state):
+            # one trace PER DISTINCT T (the scan length is static);
+            # reused Ts hit the jit cache — asserted in tests
+            self._n_rollout_traces += 1
+            return rollout(params, frames_seq, fed_seq, state)
+
         k = cfg.frontend.n_active
         self._step_fn = jax.jit(counted, donate_argnums=(3,))
+        self._rollout_fn = jax.jit(counted_rollout, donate_argnums=(3,))
         self._churn_fn = jax.jit(
             _make_churn(k, cfg.frontend.temporal.budget(k),
                         governed=governor is not None),
             donate_argnums=(0,))
 
+        def scatter(buf, rows, slots):
+            # fed-rows-only ingest (DESIGN.md §15): (F, H, W, 3) staged
+            # rows land in the donated persistent device frame buffer
+            return buf.at[slots].set(rows)
+
+        self._scatter_fn = jax.jit(scatter, donate_argnums=(0,))
+
         state = init_stream_state(cfg, capacity, temporal=temporal,
                                   governed=governor is not None,
                                   backend=backend_delta)
+        # the persistent device frame buffer the scatter writes into and
+        # the step reads from; sharded/placed like the slot-major state
+        frames_dev = jnp.zeros(
+            (capacity, cfg.frontend.image_h, cfg.frontend.image_w, 3),
+            jnp.float32)
         if mesh is not None and self._slot_spec != P():
             sh = NamedSharding(mesh, self._slot_spec)
             state = jax.tree.map(lambda x: jax.device_put(x, sh), state)
+            frames_dev = jax.device_put(frames_dev, sh)
         self._state = state
+        self._frames_dev = frames_dev
 
     # ---- host-side slot bookkeeping ------------------------------------
     @property
@@ -560,6 +667,13 @@ class SaccadeEngine:
         return self._n_traces
 
     @property
+    def n_rollout_traces(self) -> int:
+        """Compilations of the rollout program — one per DISTINCT rollout
+        length T ever dispatched (T is static per compile; reused Ts hit
+        the jit cache)."""
+        return self._n_rollout_traces
+
+    @property
     def stream_ids(self) -> list[Hashable]:
         return [s for s in self._slots if s is not None]
 
@@ -569,8 +683,8 @@ class SaccadeEngine:
 
     def slot_of(self, stream_id: Hashable) -> int:
         try:
-            return self._slots.index(stream_id)
-        except ValueError:
+            return self._slot_index[stream_id]
+        except KeyError:
             raise KeyError(f"stream {stream_id!r} not admitted") from None
 
     def admit(self, stream_id: Hashable, priority: float = 1.0) -> int:
@@ -590,6 +704,7 @@ class SaccadeEngine:
                 f"engine at capacity ({self.capacity}); evict a stream first"
             ) from None
         self._slots[slot] = stream_id
+        self._slot_index[stream_id] = slot
         self._priority[stream_id] = float(priority)
         self._pending[slot] = "admit"
         self._budgets_dirty = True
@@ -598,6 +713,7 @@ class SaccadeEngine:
     def evict(self, stream_id: Hashable) -> None:
         slot = self.slot_of(stream_id)
         self._slots[slot] = None
+        del self._slot_index[stream_id]
         self._priority.pop(stream_id, None)
         self._pending[slot] = "evict"        # last-op-wins per slot
         self._budgets_dirty = True
@@ -644,7 +760,33 @@ class SaccadeEngine:
         self._budgets_dirty = False
 
     # ---- serving -------------------------------------------------------
-    def step(self, frames: Mapping[Hashable, Any]) -> dict[Hashable, np.ndarray]:
+    def _stage_tick(self, frames: Mapping[Hashable, Any]
+                    ) -> tuple[np.ndarray, dict[Hashable, int]]:
+        """Stage one tick's frames for dispatch: validate ids, record the
+        F fed rows compactly in the reused host staging buffers, and set
+        the preallocated fed mask. Returns (fed mask view, sid->slot)."""
+        fed = self._fed
+        fed[:] = False
+        slots_by_sid: dict[Hashable, int] = {}
+        f = 0
+        for sid, frame in frames.items():
+            try:
+                slot = self._slot_index[sid]
+            except KeyError:
+                unknown = set(frames) - self._slot_index.keys()
+                raise ValueError(
+                    f"frames for streams never admitted: "
+                    f"unknown={sorted(map(str, unknown))}"
+                ) from None
+            self._stage[f] = frame          # f32 copy into the staging row
+            self._stage_slots[f] = slot
+            fed[slot] = True
+            slots_by_sid[sid] = slot
+            f += 1
+        return fed, slots_by_sid
+
+    def step(self, frames: Mapping[Hashable, Any], block: bool = True
+             ) -> "dict[Hashable, np.ndarray] | StepHandle":
         """Serve one frame for any subset of the admitted streams.
 
         ``frames`` maps stream id -> (H, W, 3) RGB frame. Admitted
@@ -652,32 +794,92 @@ class SaccadeEngine:
         serving, DESIGN.md §12): their per-stream clocks, gaze state,
         temporal cache, and meters do not advance, and the fed streams
         are served bitwise as if every stream had been fed. Unknown
-        stream ids raise. Returns stream id -> (n_classes,) logits for
-        exactly the fed streams.
+        stream ids raise.
+
+        Ingest uploads ONLY the fed rows (DESIGN.md §15): the F staged
+        rows are one compact H2D copy scattered into the persistent
+        donated device frame buffer — never a full-capacity upload.
+
+        With ``block=True`` (default) returns stream id -> (n_classes,)
+        logits for exactly the fed streams. With ``block=False`` the
+        call returns as soon as the step is DISPATCHED: you get a
+        :class:`StepHandle` over the device-resident logits and fetch
+        them later via ``handle.result()`` — the async path that lets
+        the fleet layer overlap many engines' device work (DESIGN.md
+        §15). For T known ticks, prefer :meth:`step_rollout` — one
+        dispatch instead of T.
         """
-        unknown = set(frames) - set(self.stream_ids)
-        if unknown:
-            raise ValueError(
-                f"frames for streams never admitted: "
-                f"unknown={sorted(map(str, unknown))}"
-            )
         if not frames:
-            return {}                    # nothing fed: all slots hold
+            # nothing fed: all slots hold, no device dispatch
+            return {} if block else StepHandle(None, {})
+        fed, slots_by_sid = self._stage_tick(frames)
         self._flush_churn()
-        # double-buffered ingest: gather rows into the buffer the previous
-        # step is NOT reading; un-fed rows keep stale bytes (their slots
-        # are held — the payload never reaches state or logits)
-        buf = self._ingest[self._ingest_i]
-        self._ingest_i ^= 1
-        fed = np.zeros((self.capacity,), bool)
-        for sid, frame in frames.items():
-            slot = self.slot_of(sid)
-            buf[slot] = np.asarray(frame, np.float32)
-            fed[slot] = True
+        f = len(slots_by_sid)
+        self._frames_dev = self._scatter_fn(
+            self._frames_dev, jnp.asarray(self._stage[:f]),
+            jnp.asarray(self._stage_slots[:f]))
         logits, self._state = self._step_fn(
-            self.params, jnp.asarray(buf), jnp.asarray(fed), self._state)
-        logits = np.asarray(logits)
-        return {sid: logits[self.slot_of(sid)] for sid in frames}
+            self.params, self._frames_dev, jnp.asarray(fed), self._state)
+        handle = StepHandle(logits, slots_by_sid)
+        return handle.result() if block else handle
+
+    def step_rollout(self, frames_by_tick, block: bool = True
+                     ) -> "list[dict[Hashable, np.ndarray]] | RolloutHandle":
+        """Serve T ticks in ONE device dispatch (DESIGN.md §15).
+
+        ``frames_by_tick`` is a sequence of T per-tick frame dicts, each
+        exactly what :meth:`step` takes (any subset of the admitted
+        streams; an empty dict is a legal all-hold tick). The whole
+        closed saccade loop — selection, temporal gate, backend,
+        governor control law, meters — runs device-resident under a
+        ``lax.scan`` over the T ticks: logits and the final
+        :class:`StreamState` are BITWISE identical to T sequential
+        ``step()`` calls (tests/test_rollout.py), but the per-tick host
+        round-trip (python staging, upload, dispatch, fetch) is paid
+        once per rollout instead of once per tick.
+
+        The stream cohort is fixed for the rollout: churn (admit/evict,
+        budget re-splits) happens at rollout BOUNDARIES — pending churn
+        flushes before dispatch, new ops apply to the next call. The
+        governor's control law still runs per tick, in-scan. T is
+        static per compile: each distinct T traces once
+        (``n_rollout_traces``), reused Ts hit the jit cache.
+
+        With ``block=True`` returns a list of T dicts (stream id ->
+        logits for that tick's fed streams); ``block=False`` returns a
+        :class:`RolloutHandle` fetching all T ticks in one transfer.
+        """
+        ticks = list(frames_by_tick)
+        t_len = len(ticks)
+        if t_len == 0:
+            return [] if block else RolloutHandle(None, [])
+        slot_maps: list[dict[Hashable, int]] = []
+        for t, fr in enumerate(ticks):
+            unknown = set(fr) - self._slot_index.keys()
+            if unknown:
+                raise ValueError(
+                    f"tick {t}: frames for streams never admitted: "
+                    f"unknown={sorted(map(str, unknown))}"
+                )
+            slot_maps.append({sid: self._slot_index[sid] for sid in fr})
+        self._flush_churn()
+        try:
+            frames_seq, fed_seq = self._roll_stage[t_len]
+        except KeyError:
+            frames_seq = np.zeros((t_len,) + self._stage.shape, np.float32)
+            fed_seq = np.zeros((t_len, self.capacity), bool)
+            self._roll_stage[t_len] = (frames_seq, fed_seq)
+        fed_seq[:] = False
+        for t, fr in enumerate(ticks):
+            for sid, frame in fr.items():
+                slot = slot_maps[t][sid]
+                frames_seq[t, slot] = frame
+                fed_seq[t, slot] = True
+        logits_seq, self._state = self._rollout_fn(
+            self.params, jnp.asarray(frames_seq), jnp.asarray(fed_seq),
+            self._state)
+        handle = RolloutHandle(logits_seq, slot_maps)
+        return handle.result() if block else handle
 
     def recompute_fraction(self, stream_id: Hashable) -> float:
         """Fraction of this stream's k selected patches that were actually

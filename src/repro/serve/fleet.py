@@ -33,7 +33,12 @@ host-side layer on top:
 * **Async end to end.** ``fleet.step(frames)`` takes any subset of the
   admitted streams (the engines' partial-frame hold semantics, DESIGN.md
   §12), routes each frame to its host, and only dispatches engines that
-  have fed slots this tick — an idle host costs nothing.
+  have fed slots this tick — an idle host costs nothing. Dispatch is
+  NON-BLOCKING per host (DESIGN.md §15): every fed engine is dispatched
+  via ``engine.step(..., block=False)`` BEFORE any result is fetched,
+  so the per-host device work overlaps instead of serializing behind
+  each host's blocking ``np.asarray`` fetch; ``fleet.step(...,
+  block=False)`` exposes the same handle contract to the caller.
 """
 
 from __future__ import annotations
@@ -76,6 +81,38 @@ def make_fleet_meshes(n_hosts: int, axis: str = "data"):
     per = len(devs) // n_hosts
     return [Mesh(np.asarray(devs[h * per:(h + 1) * per]), (axis,))
             for h in range(n_hosts)]
+
+
+class FleetHandle:
+    """Merged non-blocking fleet result (DESIGN.md §15): wraps the fed
+    hosts' :class:`~repro.serve.engine.StepHandle`\\ s (one tick) or
+    :class:`~repro.serve.engine.RolloutHandle`\\ s (a rollout) and
+    merges them at fetch time. ``result()`` blocks host by host — by
+    then every host's work was already dispatched, so the waits
+    overlap. Idempotent, same lifetime contract as the per-engine
+    handles."""
+
+    __slots__ = ("_handles", "_n_ticks", "_out")
+
+    def __init__(self, handles: list, n_ticks: int | None = None):
+        self._handles = handles
+        self._n_ticks = n_ticks          # None: single tick -> one dict
+        self._out = None
+
+    def result(self):
+        if self._out is None:
+            if self._n_ticks is None:
+                out: Any = {}
+                for h in self._handles:
+                    out.update(h.result())
+            else:
+                out = [{} for _ in range(self._n_ticks)]
+                for h in self._handles:
+                    for t, d in enumerate(h.result()):
+                        out[t].update(d)
+            self._out = out
+            self._handles = []
+        return self._out
 
 
 @dataclasses.dataclass
@@ -231,20 +268,51 @@ class SaccadeFleet:
                 eng.set_budget_mw(float(share))
 
     # ---- serving -------------------------------------------------------
-    def step(self, frames: Mapping[Hashable, Any]) -> dict[Hashable, np.ndarray]:
+    def step(self, frames: Mapping[Hashable, Any], block: bool = True
+             ) -> "dict[Hashable, np.ndarray] | FleetHandle":
         """Drain the admit queues, then serve one async tick: route each
         frame to its stream's host engine and step only the engines with
-        fed slots (everyone else's streams hold). Returns stream id ->
-        logits for exactly the fed streams."""
+        fed slots (everyone else's streams hold).
+
+        Dispatch is non-blocking per host (DESIGN.md §15): every fed
+        engine is dispatched before ANY result is fetched, so per-host
+        device work overlaps. With ``block=True`` (default) the merged
+        stream id -> logits dict for exactly the fed streams is
+        returned; ``block=False`` returns a :class:`FleetHandle` whose
+        ``result()`` fetches (and merges) later — the dispatch/fetch
+        split the fleet bench meters separately."""
         self.drain()
         per_host: list[dict] = [{} for _ in range(self.n_hosts)]
         for sid, frame in frames.items():
             per_host[self.host_of(sid)][sid] = frame
-        out: dict[Hashable, np.ndarray] = {}
-        for eng, fh in zip(self.engines, per_host):
-            if fh:
-                out.update(eng.step(fh))
-        return out
+        # dispatch ALL fed hosts first — no fetch until every engine's
+        # step is in flight (the whole point of the async path)
+        handles = [eng.step(fh, block=False)
+                   for eng, fh in zip(self.engines, per_host) if fh]
+        handle = FleetHandle(handles)
+        return handle.result() if block else handle
+
+    def step_rollout(self, frames_by_tick, block: bool = True):
+        """Serve T ticks per host in ONE dispatch per host (DESIGN.md
+        §15): each tick's frames route to their host engines, every fed
+        engine gets the full T-tick schedule as one
+        :meth:`SaccadeEngine.step_rollout` dispatch (un-fed ticks hold
+        in-scan), and — like :meth:`step` — every host is dispatched
+        before any is fetched. Churn drains once, at the rollout
+        boundary. Returns a list of T merged per-tick dicts (or a
+        :class:`FleetHandle` over them with ``block=False``)."""
+        self.drain()
+        ticks = list(frames_by_tick)
+        per_host: list[list[dict]] = [
+            [{} for _ in ticks] for _ in range(self.n_hosts)]
+        for t, fr in enumerate(ticks):
+            for sid, frame in fr.items():
+                per_host[self.host_of(sid)][t][sid] = frame
+        handles = [eng.step_rollout(sched, block=False)
+                   for eng, sched in zip(self.engines, per_host)
+                   if any(sched)]
+        handle = FleetHandle(handles, n_ticks=len(ticks))
+        return handle.result() if block else handle
 
     # ---- metering (DESIGN.md §10) --------------------------------------
     def fleet_power_mw(self, window: str = "last") -> float:

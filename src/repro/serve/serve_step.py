@@ -88,6 +88,57 @@ def saccade_scores(aux: dict, explore: float) -> jnp.ndarray:
     return scores + max(explore, 1e-3) * baseline * energy
 
 
+def make_rollout(step_fn):
+    """Device-resident saccade rollout (DESIGN.md §15): a ``lax.scan``
+    over T engine ticks that never touches the host between frames.
+
+    ``step_fn`` is one batched engine tick — ``(params, frames (S,…),
+    fed (S,), state) -> (logits, state)`` from
+    :func:`repro.serve.engine.make_engine_step` (possibly already
+    shard_map'd over the slot axis; the scan composes either way). The
+    rollout scans it over a leading TIME axis: frame payloads
+    ``frames_seq (T, S, …)`` and per-tick fed masks ``fed_seq (T, S)``
+    are the scanned inputs, the FULL :class:`StreamState` — indices,
+    EMA, frame age, temporal :class:`FeatureCache`, ``bcache``, energy
+    meters, and governor controls — is the carry, and the per-tick
+    logits stack into the (T, S, n_classes) output.
+
+    One dispatch therefore serves T ticks: the per-tick python staging
+    loop, H2D upload, dispatch, and D2H fetch that bound the fleet bench
+    collapse into a single XLA while-loop. Because the scan body IS the
+    engine step (same jaxpr, compiled once as the loop body), a length-T
+    rollout is bitwise identical to T sequential ``step_fn`` calls —
+    logits and every carried state leaf — in every engine mode
+    (asserted across temporal / backend-delta / sign-tier / governed
+    configs in tests/test_rollout.py and re-derived live by
+    benchmarks/check_rollout_accounting.py).
+
+    Governor semantics (DESIGN.md §15): the control law runs IN-SCAN —
+    ``control_update`` is part of ``step_fn``, so per-slot knobs evolve
+    tick-by-tick inside the rollout exactly as they would across T
+    single-tick calls. Host-side budget re-splits (admit/evict churn,
+    ``set_budget_mw``) remain rollout-BOUNDARY events: they ride the
+    coalesced churn flush that precedes every dispatch, which is also
+    the only place churn can happen (admit/evict are host ops — there
+    is no mid-rollout churn by construction).
+
+    Returns ``rollout(params, frames_seq, fed_seq, state) ->
+    (logits_seq, state)``, pure and jit-able; T is static per compile
+    (one trace per distinct T, cached thereafter).
+    """
+
+    def rollout(params, frames_seq, fed_seq, state):
+        def body(carry, xs):
+            frames, fed = xs
+            logits, carry = step_fn(params, frames, fed, carry)
+            return carry, logits
+
+        state, logits_seq = jax.lax.scan(body, state, (frames_seq, fed_seq))
+        return logits_seq, state
+
+    return rollout
+
+
 def make_saccade_step(cfg, explore: float = 0.1, project_fn=None,
                       temporal: bool = False, backend: bool = False):
     """Closed-loop serving step on the compact path end to end.

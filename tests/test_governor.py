@@ -87,7 +87,7 @@ class TestEngineMetering:
         assert set(rep) == {"adc", "weight_dac", "cap_charging",
                             "pwm_comparators", "opamps", "cds_sampling",
                             "pixel_dump", "sign_comparators",
-                            "weight_reprogram"}
+                            "weight_reprogram", "backend"}
         assert all(v >= 0.0 for v in rep.values())
 
     def test_totals_accumulate_and_admit_resets(self):

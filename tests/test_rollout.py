@@ -1,0 +1,391 @@
+"""Device-resident saccade rollouts + async dispatch (DESIGN.md §15).
+
+The tentpole contract this file pins: ``step_rollout(T)`` — one
+``lax.scan`` dispatch over T ticks — is BITWISE identical to T
+sequential ``step()`` calls, logits AND the full carried StreamState
+(indices / EMA / temporal cache / backend cache / meters / governor
+controls), in EVERY engine mode. Plus: one trace per distinct T (reused
+Ts hit the jit cache), the governed slack-budget no-op survives the
+scan, async handles are lazy and idempotent, and a stateful fuzz
+(hypothesis-driven when installed, deterministic battery always) holds
+the parity under random T, churn between rollouts, partial-fed tick
+masks, and frame-rate skew — against both the per-tick ``step()``
+oracle and dedicated per-stream batch-1 loops.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.frontend import FrontendConfig
+from repro.core.projection import PatchSpec
+from repro.core.temporal import TemporalSpec
+from repro.models.vit import ViTConfig, init_vit
+from repro.serve.engine import RolloutHandle, SaccadeEngine, StepHandle
+from repro.serve.fleet import SaccadeFleet
+from repro.serve.governor import GovernorSpec
+from repro.serve.serve_step import make_bootstrap_indices, make_saccade_step
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(temporal=False):
+    kw = dict(temporal=TemporalSpec(delta_threshold=1e-4)) if temporal else {}
+    fcfg = FrontendConfig(
+        image_h=64, image_w=64,
+        patch=PatchSpec(patch_h=16, patch_w=16, n_vectors=32),
+        active_fraction=0.25, **kw,
+    )
+    return ViTConfig(frontend=fcfg, n_layers=1, d_model=32, n_heads=2,
+                     d_ff=64)
+
+
+CFG = _cfg()
+CFG_T = _cfg(temporal=True)
+PARAMS = init_vit(KEY, CFG)
+PARAMS_T = init_vit(KEY, CFG_T)
+# moving-scene frames so the temporal gate / governor actually have work
+FRAMES = np.asarray(
+    jax.random.uniform(jax.random.PRNGKey(1), (16, 64, 64, 3)))
+
+# Engine modes the acceptance pins parity over. The governed budgets are
+# deliberately tight so the in-scan control law MOVES during the rollout
+# (parity would hold for any budget; a slack one wouldn't exercise it).
+MODES = {
+    "plain": (CFG, PARAMS, {}),
+    "temporal": (CFG_T, PARAMS_T, dict(temporal=True)),
+    "backend_delta": (CFG, PARAMS, dict(backend_delta=True)),
+    "temporal_governed": (
+        CFG_T, PARAMS_T,
+        dict(temporal=True, governor=GovernorSpec(budget_mw=0.05))),
+    "sign_tier_governed": (
+        CFG_T, PARAMS_T,
+        dict(temporal=True,
+             governor=GovernorSpec(budget_mw=0.02, sign_tier=True))),
+    "temporal_backend_governed": (
+        CFG_T, PARAMS_T,
+        dict(temporal=True, backend_delta=True,
+             governor=GovernorSpec(budget_mw=0.05, backend_eps=1e-3))),
+}
+
+# a T=5 schedule with partial-fed ticks and frame-rate skew: "a" is fed
+# every tick, "b" every other tick, "c" once, tick 3 feeds nobody
+SCHED = [
+    {"a": FRAMES[0], "b": FRAMES[1]},
+    {"a": FRAMES[2]},
+    {"a": FRAMES[3], "b": FRAMES[4], "c": FRAMES[5]},
+    {},
+    {"a": FRAMES[6], "b": FRAMES[7]},
+]
+
+
+def assert_states_bitwise(a: SaccadeEngine, b: SaccadeEngine, msg=""):
+    la, lb = jax.tree.leaves(a.state), jax.tree.leaves(b.state)
+    assert len(la) == len(lb)
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y),
+            err_msg=f"{msg} state leaf {i} diverged")
+
+
+def assert_rollout_matches_sequential(eng_seq, eng_roll, sched, msg=""):
+    """The core acceptance check: run ``sched`` per-tick on one engine
+    and as ONE rollout on the other; logits per tick and the final
+    state must be bitwise equal."""
+    seq = [eng_seq.step(fr) for fr in sched]
+    roll = eng_roll.step_rollout(sched)
+    assert len(roll) == len(seq)
+    for t, (want, got) in enumerate(zip(seq, roll)):
+        assert set(want) == set(got), f"{msg} tick {t}: fed cover differs"
+        for sid in want:
+            np.testing.assert_array_equal(
+                want[sid], got[sid],
+                err_msg=f"{msg} tick {t} stream {sid}: logits diverged")
+    assert_states_bitwise(eng_seq, eng_roll, msg=msg)
+
+
+class TestBitwiseParity:
+    """step_rollout(T) == T x step(), bitwise, in every engine mode."""
+
+    @pytest.mark.parametrize("mode", sorted(MODES))
+    def test_rollout_matches_sequential(self, mode):
+        cfg, params, kw = MODES[mode]
+        eng_seq = SaccadeEngine(cfg, params, capacity=4, **kw)
+        eng_roll = SaccadeEngine(cfg, params, capacity=4, **kw)
+        for e in (eng_seq, eng_roll):
+            for sid in ("a", "b", "c"):
+                e.admit(sid)
+        assert_rollout_matches_sequential(eng_seq, eng_roll, SCHED, mode)
+        # and AGAIN on warm state — the carry (caches, meters, governor
+        # knobs) round-trips through the scan, not just the first frames
+        sched2 = [{"a": FRAMES[8], "c": FRAMES[9]}, {"b": FRAMES[10]},
+                  {"a": FRAMES[11], "b": FRAMES[12], "c": FRAMES[13]}]
+        assert_rollout_matches_sequential(eng_seq, eng_roll, sched2,
+                                          mode + " (warm)")
+
+    def test_governed_knobs_actually_moved(self):
+        """Guard the guard: the tight-budget configs must drive at least
+        one slot off the no-op tier during the rollout, otherwise the
+        governed parity cases never exercised the in-scan control law."""
+        cfg, params, kw = MODES["sign_tier_governed"]
+        eng = SaccadeEngine(cfg, params, capacity=2, **kw)
+        eng.admit("a")
+        eng.step_rollout([{"a": FRAMES[t]} for t in range(8)])
+        assert eng.k_tier("a") < cfg.frontend.n_active
+
+    def test_slack_budget_rollout_is_bitwise_noop(self):
+        """DESIGN.md §15 acceptance: with a slack budget the GOVERNED
+        rollout is bitwise the UNGOVERNED temporal rollout — the in-scan
+        control law holds every knob at its no-op value, tick after
+        tick, inside the scan exactly as across single steps."""
+        plain = SaccadeEngine(CFG_T, PARAMS_T, capacity=2, temporal=True)
+        gvd = SaccadeEngine(CFG_T, PARAMS_T, capacity=2, temporal=True,
+                            governor=GovernorSpec(budget_mw=100.0))
+        plain.admit("a"); gvd.admit("a")
+        sched = [{"a": FRAMES[0 if t != 3 else 5]} for t in range(6)]
+        out_p = plain.step_rollout(sched)
+        out_g = gvd.step_rollout(sched)
+        for t in range(len(sched)):
+            np.testing.assert_array_equal(out_p[t]["a"], out_g[t]["a"])
+        np.testing.assert_array_equal(
+            np.asarray(plain.state.cache.features),
+            np.asarray(gvd.state.cache.features))
+        np.testing.assert_array_equal(
+            np.asarray(plain.state.indices), np.asarray(gvd.state.indices))
+        k = CFG_T.frontend.n_active
+        assert gvd.recompute_cap("a") == k and gvd.k_tier("a") == k
+
+
+class TestTraceDiscipline:
+    def test_one_trace_per_distinct_T_and_reuse(self):
+        eng = SaccadeEngine(CFG, PARAMS, capacity=2)
+        eng.admit("a")
+        mk = lambda T: [{"a": FRAMES[t % len(FRAMES)]} for t in range(T)]
+        assert eng.n_rollout_traces == 0
+        eng.step_rollout(mk(3))
+        assert eng.n_rollout_traces == 1
+        eng.step_rollout(mk(3))                  # reused T: cache hit
+        assert eng.n_rollout_traces == 1
+        eng.step_rollout(mk(5))                  # new T: one more trace
+        assert eng.n_rollout_traces == 2
+        eng.step_rollout(mk(3)); eng.step_rollout(mk(5))
+        assert eng.n_rollout_traces == 2
+        # churn between rollouts must not retrace either path
+        eng.admit("b"); eng.evict("a")
+        eng.step_rollout([{"b": FRAMES[0]}, {"b": FRAMES[1]}, {}])
+        assert eng.n_rollout_traces == 2
+        # and the single-step path keeps ITS one-compile contract
+        eng.step({"b": FRAMES[2]})
+        eng.step({"b": FRAMES[3]})
+        assert eng.n_traces == 1
+
+
+class TestAsyncHandles:
+    def test_step_handle_is_lazy_and_idempotent(self):
+        eng = SaccadeEngine(CFG, PARAMS, capacity=2)
+        eng.admit("a"); eng.admit("b")
+        h = eng.step({"a": FRAMES[0]}, block=False)
+        assert isinstance(h, StepHandle)
+        out = h.result()
+        assert set(out) == {"a"}                 # fed streams only
+        assert h.result() is out                 # cached, device ref dropped
+        # empty tick: still a handle, empty result
+        h0 = eng.step({}, block=False)
+        assert h0.result() == {}
+
+    def test_rollout_handle_one_fetch_many_ticks(self):
+        eng = SaccadeEngine(CFG, PARAMS, capacity=2)
+        eng.admit("a"); eng.admit("b")
+        h = eng.step_rollout(
+            [{"a": FRAMES[0]}, {}, {"a": FRAMES[1], "b": FRAMES[2]}],
+            block=False)
+        assert isinstance(h, RolloutHandle)
+        out = h.result()
+        assert [set(d) for d in out] == [{"a"}, set(), {"a", "b"}]
+        assert h.result() is out
+        assert eng.step_rollout([]) == []        # zero-length: no dispatch
+
+    def test_dispatch_overlaps_across_engines(self):
+        """The async contract the fleet layer relies on: a second
+        engine's step can be DISPATCHED before the first engine's result
+        is fetched, and both handles then resolve correctly."""
+        e1 = SaccadeEngine(CFG, PARAMS, capacity=1)
+        e2 = SaccadeEngine(CFG, PARAMS, capacity=1)
+        e1.admit("x"); e2.admit("y")
+        h1 = e1.step({"x": FRAMES[0]}, block=False)
+        h2 = e2.step({"y": FRAMES[0]}, block=False)
+        o1, o2 = h1.result(), h2.result()
+        # identical params+frame => identical logits, whichever engine
+        np.testing.assert_array_equal(o1["x"], o2["y"])
+
+    def test_rollout_unknown_stream_raises_with_tick(self):
+        eng = SaccadeEngine(CFG, PARAMS, capacity=1)
+        eng.admit("a")
+        with pytest.raises(ValueError, match="tick 1.*unknown"):
+            eng.step_rollout([{"a": FRAMES[0]}, {"zzz": FRAMES[1]}])
+
+
+class TestFleetRollout:
+    def test_fleet_rollout_matches_fleet_steps(self):
+        f_seq = SaccadeFleet(CFG, PARAMS, n_hosts=2, capacity=2)
+        f_roll = SaccadeFleet(CFG, PARAMS, n_hosts=2, capacity=2)
+        for f in (f_seq, f_roll):
+            for sid in ("a", "b", "c"):
+                f.submit(sid)
+            f.drain()
+        sched = [{"a": FRAMES[0], "c": FRAMES[1]}, {"b": FRAMES[2]},
+                 {"a": FRAMES[3], "b": FRAMES[4], "c": FRAMES[5]}]
+        seq = [f_seq.step(fr) for fr in sched]
+        roll = f_roll.step_rollout(sched)
+        for t in range(len(sched)):
+            assert set(seq[t]) == set(roll[t])
+            for sid in seq[t]:
+                np.testing.assert_array_equal(seq[t][sid], roll[t][sid])
+
+    def test_fleet_async_dispatch_before_fetch(self):
+        """fleet.step must dispatch every fed host before fetching any:
+        instrument the engines' step to record dispatch order vs the
+        handles' fetch order."""
+        fleet = SaccadeFleet(CFG, PARAMS, n_hosts=2, capacity=1)
+        fleet.submit("a"); fleet.submit("b")
+        fleet.drain()
+        events = []
+
+        class TracedHandle:
+            def __init__(self, handle, h):
+                self._handle, self._h = handle, h
+
+            def result(self):
+                events.append(("fetch", self._h))
+                return self._handle.result()
+
+        for h_i, eng in enumerate(fleet.engines):
+            inner = eng.step
+
+            def spy(frames, block=True, _h=h_i, _inner=inner):
+                events.append(("dispatch", _h))
+                assert block is False, "fleet must dispatch non-blocking"
+                return TracedHandle(_inner(frames, block=False), _h)
+
+            eng.step = spy
+        out = fleet.step({"a": FRAMES[0], "b": FRAMES[1]})
+        assert set(out) == {"a", "b"}
+        kinds = [k for k, _ in events]
+        assert kinds == ["dispatch", "dispatch", "fetch", "fetch"]
+        # non-blocking fleet handle: no fetch until result()
+        events.clear()
+        h = fleet.step({"a": FRAMES[2], "b": FRAMES[3]}, block=False)
+        assert [k for k, _ in events] == ["dispatch", "dispatch"]
+        h.result()
+        assert [k for k, _ in events] == ["dispatch", "dispatch",
+                                          "fetch", "fetch"]
+
+
+# ---------------------------------------------------------------------------
+# stateful fuzz: rollouts vs the per-tick oracle under churn + skew
+# ---------------------------------------------------------------------------
+
+def run_rollout_fuzz(seed: int, n_rounds: int = 5, temporal: bool = False):
+    """One fuzz episode: random admit/evict churn BETWEEN rollouts,
+    rollouts of random T with partial-fed tick masks and frame-rate
+    skew. Engine A replays every tick through ``step()`` (the oracle),
+    engine B serves whole rollouts; parity must be bitwise after every
+    round. Fed streams are additionally checked against their own
+    dedicated batch-1 single-stream loop (the dense per-stream oracle
+    from the engine fuzz), and the trace ledger must show exactly one
+    rollout trace per distinct T.
+    """
+    cfg, params = (CFG_T, PARAMS_T) if temporal else (CFG, PARAMS)
+    kw = dict(temporal=True) if temporal else {}
+    capacity = 3
+    eng_o = SaccadeEngine(cfg, params, capacity=capacity, **kw)
+    eng_r = SaccadeEngine(cfg, params, capacity=capacity, **kw)
+    boot = jax.jit(make_bootstrap_indices(cfg))
+    step1 = jax.jit(make_saccade_step(cfg, temporal=temporal))
+
+    rng = np.random.default_rng(7000 + seed)
+    live: list = []
+    refs: dict = {}                      # sid -> [indices, cache, n_fed]
+    next_id = 0
+    ts_seen: set[int] = set()
+
+    for _ in range(n_rounds):
+        # churn at the rollout boundary only (admit/evict are host ops)
+        for _ in range(int(rng.integers(0, 3))):
+            if live and rng.random() < 0.4:
+                sid = live.pop(int(rng.integers(len(live))))
+                eng_o.evict(sid); eng_r.evict(sid)
+                del refs[sid]
+            elif len(live) < capacity:
+                sid = f"s{next_id}"; next_id += 1
+                eng_o.admit(sid); eng_r.admit(sid)
+                live.append(sid)
+                refs[sid] = [None, None, 0]
+        if not live:
+            continue
+        T = int(rng.integers(1, 5))
+        ts_seen.add(T)
+        sched = []
+        for _t in range(T):
+            # frame-rate skew: feed each live stream with p=0.6
+            fed = [sid for sid in live if rng.random() < 0.6]
+            sched.append({
+                sid: FRAMES[(refs[sid][2] + int(sid[1:])) % len(FRAMES)]
+                for sid in fed})
+            for sid in fed:
+                refs[sid][2] += 1
+        seq = [eng_o.step(fr) for fr in sched]
+        roll = eng_r.step_rollout(sched)
+        for t in range(T):
+            assert set(seq[t]) == set(roll[t])
+            for sid in seq[t]:
+                np.testing.assert_array_equal(
+                    seq[t][sid], roll[t][sid],
+                    err_msg=f"seed {seed} tick {t} stream {sid}")
+        assert_states_bitwise(eng_o, eng_r, msg=f"seed {seed}")
+        # per-stream dense oracle: each fed stream tracks its own
+        # batch-1 loop over exactly the frames it saw
+        for t, fr in enumerate(sched):
+            for sid, frame in fr.items():
+                r = jnp.asarray(frame)[None]
+                if refs[sid][0] is None:
+                    refs[sid][0] = boot(params, r)
+                    if temporal:
+                        from repro.core.temporal import init_feature_cache
+                        refs[sid][1] = init_feature_cache(cfg.frontend, (1,))
+                if temporal:
+                    logits, refs[sid][0], _, refs[sid][1] = step1(
+                        params, r, refs[sid][0], refs[sid][1])
+                else:
+                    logits, refs[sid][0], _ = step1(params, r, refs[sid][0])
+                np.testing.assert_allclose(
+                    roll[t][sid], np.asarray(logits[0]), atol=1e-5,
+                    err_msg=f"seed {seed}: {sid} diverged from its "
+                            f"dedicated loop at tick {t}")
+    assert eng_r.n_rollout_traces == len(ts_seen)
+    assert eng_o.n_traces <= 1 and eng_r.n_traces == 0
+
+
+class TestStatefulFuzzRollout:
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_deterministic_battery(self, seed):
+        run_rollout_fuzz(seed)
+
+    def test_deterministic_battery_temporal(self):
+        run_rollout_fuzz(2, n_rounds=4, temporal=True)
+
+    if HAVE_HYPOTHESIS:
+
+        @settings(max_examples=5, deadline=None)
+        @given(seed=st.integers(min_value=10, max_value=10_000))
+        def test_hypothesis_random_episodes(self, seed):
+            run_rollout_fuzz(seed, n_rounds=3)

@@ -314,24 +314,42 @@ class TestPartialFrames:
 
 
 class TestIngestChurnCoalescing:
-    """Tentpole (DESIGN.md §12): double-buffered ingest reuses exactly two
-    staging buffers, and admit/evict churn coalesces into one flush."""
+    """Tentpole (DESIGN.md §12/§15): ingest uploads ONLY the fed rows,
+    scattered into one persistent device frame buffer through reused
+    host staging, and admit/evict churn coalesces into one flush."""
 
-    def test_ingest_buffers_are_reused_and_alternate(self, served):
+    def test_ingest_scatters_only_fed_rows(self, served):
+        """The per-tick H2D transfer is the F fed rows — never a
+        full-capacity upload — scattered into the persistent donated
+        device frame buffer; un-fed rows keep the bytes of the last
+        tick that fed them, and the host staging is never reallocated."""
         cfg, params = served
-        eng = SaccadeEngine(cfg, params, capacity=2)
-        eng.admit("a")
+        eng = SaccadeEngine(cfg, params, capacity=4)
+        for sid in ("a", "b", "c"):
+            eng.admit(sid)
         stream = SceneStream(image=64)
-        rgb, _ = stream.batch(0, 1)
-        assert eng._ingest.shape[0] == 2
-        buf = eng._ingest
+        rgb, _ = stream.batch(0, 3)
+        stage = eng._stage
         seen = []
-        for t in range(4):
-            i = eng._ingest_i
-            eng.step({"a": rgb[0]})
-            seen.append(i)
-        assert seen == [0, 1, 0, 1]              # strict alternation
-        assert eng._ingest is buf                # reused, never reallocated
+        inner = eng._scatter_fn
+        def spy(buf, rows, slots):
+            seen.append((tuple(rows.shape), np.asarray(slots).tolist()))
+            return inner(buf, rows, slots)
+        eng._scatter_fn = spy
+        eng.step({"a": rgb[0], "b": rgb[1], "c": rgb[2]})
+        eng.step({"b": rgb[0]})                       # only b fed: 1 row
+        (shape3, slots3), (shape1, slots1) = seen
+        assert shape3[0] == 3 and shape1[0] == 1
+        assert set(slots3) == {eng.slot_of(s) for s in ("a", "b", "c")}
+        assert slots1 == [eng.slot_of("b")]
+        assert eng._stage is stage                    # reused, no realloc
+        buf = np.asarray(eng._frames_dev)
+        np.testing.assert_array_equal(                # un-fed row persists
+            buf[eng.slot_of("a")], np.asarray(rgb[0], np.float32))
+        np.testing.assert_array_equal(                # fed row refreshed
+            buf[eng.slot_of("b")], np.asarray(rgb[0], np.float32))
+        np.testing.assert_array_equal(
+            buf[eng.slot_of("c")], np.asarray(rgb[2], np.float32))
 
     def test_churn_coalesces_to_one_flush(self, served):
         """k admits/evicts between two frames must cost ONE jitted churn
@@ -443,6 +461,10 @@ class TestStatefulFuzz:
             # bookkeeping invariants after every op
             assert eng.free_slots == slots.count(None)
             assert eng.stream_ids == [s for s in slots if s is not None]
+            # satellite: the cached sid->slot map can never drift from
+            # the slot list it replaced (zero behavior change)
+            assert eng._slot_index == {
+                sid: i for i, sid in enumerate(slots) if sid is not None}
             for s_i, sid in enumerate(slots):
                 if sid is not None:
                     assert eng.slot_of(sid) == s_i
